@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle vs numpy.
+
+On this CPU container interpret-mode timing only proves correctness-path
+cost; the derived column reports achieved GB/s for the oracle (the XLA-
+compiled path) which is the deployable CPU number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_segment_sum():
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    for E, R in [(1 << 16, 4096), (1 << 20, 32768)]:
+        c = jnp.asarray(rng.normal(size=E).astype(np.float32))
+        d = jnp.asarray(np.sort(rng.integers(0, R, E)).astype(np.int32))
+        t_ref = _time(lambda a, b: ref.segment_sum(a, b, R), c, d)
+        gbps = E * 8 / t_ref / 1e9
+        emit(f"kern.segsum.ref.E{E}", t_ref * 1e6, f"GBps={gbps:.2f}")
+        if E <= 1 << 16:   # interpret mode is slow; validate small only
+            t_pal = _time(lambda a, b: ops.segment_sum(a, b, R), c, d)
+            emit(f"kern.segsum.pallas_interp.E{E}", t_pal * 1e6,
+                 "interpret=True (correctness path)")
+
+
+def bench_compact():
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    n = 1 << 18
+    mask = jnp.asarray(rng.random(n) < 0.2)
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    K = int(0.4 * n)
+    t_ref = _time(lambda m, v: ref.compact(m, v, K), mask, vals)
+    emit(f"kern.compact.ref.n{n}", t_ref * 1e6,
+         f"GBps={n*5/t_ref/1e9:.2f}")
+
+
+def bench_gab_superstep():
+    """Engine-level throughput: edges/s for one PageRank superstep."""
+    from benchmarks.common import make_store
+    from repro.core.apps import PageRank
+    from repro.core.engine import EngineConfig, OutOfCoreEngine
+
+    nv, ne = 100_000, 1_000_000
+    store = make_store(nv, ne, 65536)
+    eng = OutOfCoreEngine(store, EngineConfig(num_servers=1,
+                                              max_supersteps=5))
+    res = eng.run(PageRank())
+    sec = res.mean_superstep_seconds()
+    emit("kern.gab.superstep.1M_edges", sec * 1e6,
+         f"Medges_per_s={ne/sec/1e6:.1f}")
+
+
+ALL = [bench_segment_sum, bench_compact, bench_gab_superstep]

@@ -1,0 +1,81 @@
+"""LM substrate throughput on CPU (reduced configs) — tokens/s for the
+train step and the serve engine, plus checkpoint save/restore latency."""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def bench_train_step():
+    from repro.configs import registry
+    from repro.configs.base import RunConfig
+    from repro.train import data as datalib
+    from repro.train import train_step as ts
+    from repro.train.optimizer import OptConfig
+
+    run = RunConfig(remat="none", q_chunk=32, kv_chunk=32, loss_chunk=32,
+                    compute_dtype="float32")
+    for arch in ("qwen3-1.7b", "granite-moe-1b-a400m", "rwkv6-1.6b"):
+        cfg = registry.get_config(arch, reduced=True)
+        step, init, _ = ts.build_train_step(cfg, run, OptConfig())
+        state = init(jax.random.key(0))
+        src = datalib.SyntheticLM(cfg, 8, 64)
+        b = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
+        state, _ = step(state, b)                      # compile
+        t0 = time.perf_counter()
+        for i in range(1, 6):
+            b = {k: jnp.asarray(v) for k, v in src.batch_at(i).items()}
+            state, stats = step(state, b)
+        jax.block_until_ready(stats["loss"])
+        dt = (time.perf_counter() - t0) / 5
+        emit(f"train.step.{arch}", dt * 1e6,
+             f"tok_per_s={8*64/dt:,.0f}")
+
+
+def bench_serve_engine():
+    from repro.configs import registry
+    from repro.configs.base import RunConfig
+    from repro.models.model_zoo import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    run = RunConfig(remat="none", q_chunk=32, kv_chunk=32,
+                    compute_dtype="float32")
+    cfg = registry.get_config("qwen3-1.7b", reduced=True)
+    params = build_model(cfg, run).init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    for slots in (1, 4):
+        eng = ServeEngine(cfg, run, params, slots=slots, max_len=128)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8)
+                        .astype(np.int32), max_new_tokens=16)
+                for i in range(8)]
+        t0 = time.perf_counter()
+        outs = eng.run_requests(reqs)
+        dt = time.perf_counter() - t0
+        tok = sum(len(o.tokens) for o in outs)
+        emit(f"serve.engine.slots{slots}", dt / max(tok, 1) * 1e6,
+             f"tok_per_s={tok/dt:.1f} decode_steps={eng.stats['decode_steps']}")
+
+
+def bench_checkpoint():
+    from repro.train.checkpoint import CheckpointManager
+
+    state = {"params": {f"w{i}": jnp.zeros((256, 256)) for i in range(8)}}
+    mgr = CheckpointManager(tempfile.mkdtemp())
+    t0 = time.perf_counter()
+    mgr.save(1, state)
+    ts_ = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    mgr.restore(1)
+    tr = time.perf_counter() - t0
+    mb = 8 * 256 * 256 * 4 / 1e6
+    emit("ckpt.save", ts_ * 1e6, f"MBps={mb/ts_:.0f}")
+    emit("ckpt.restore", tr * 1e6, f"MBps={mb/tr:.0f}")
+
+
+ALL = [bench_train_step, bench_serve_engine, bench_checkpoint]

@@ -1,0 +1,56 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timer():
+    return time.perf_counter()
+
+
+_STORE_CACHE = {}
+
+
+def make_store(nv: int, ne: int, tile_size: int, weighted=False, seed=0,
+               disk_mode=1):
+    """Build (and memoize) an RMAT tile store."""
+    from repro.graphio import spe, synth
+    from repro.graphio.formats import TileStore
+
+    key = (nv, ne, tile_size, weighted, seed, disk_mode)
+    if key in _STORE_CACHE:
+        return _STORE_CACHE[key]
+    root = tempfile.mkdtemp(prefix="bench_store_")
+    store = TileStore(root, disk_mode=disk_mode)
+    spe.preprocess(
+        lambda: synth.rmat_edges(nv, ne, seed=seed, weighted=weighted),
+        nv, store, tile_size=tile_size, weighted=weighted)
+    _STORE_CACHE[key] = store
+    return store
+
+
+def rmat_arrays(nv, ne, seed=0, weighted=False):
+    from repro.graphio import synth
+
+    srcs, dsts, vals = [], [], []
+    for s, d, v in synth.rmat_edges(nv, ne, seed=seed, weighted=weighted):
+        srcs.append(s)
+        dsts.append(d)
+        if v is not None:
+            vals.append(v)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    val = np.concatenate(vals) if vals else None
+    return src, dst, val

@@ -1,0 +1,78 @@
+"""Out-of-core graph analytics under memory pressure — the paper's core
+scenario: edges >> cache, compressed edge cache, bloom-filter tile
+skipping, and a comparison against the four baseline engine mechanisms.
+
+    PYTHONPATH=src python examples/graph_analytics.py
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.apps import SSSP, WCC
+from repro.core.baselines import ENGINES
+from repro.core.engine import EngineConfig, OutOfCoreEngine
+from repro.graphio import spe, synth
+from repro.graphio.formats import TileStore
+
+
+def main():
+    nv, ne = 80_000, 800_000
+    print(f"R-MAT |V|={nv:,} |E|={ne:,} (weighted)")
+    store = TileStore(tempfile.mkdtemp(prefix="analytics_"))
+    spe.preprocess(lambda: synth.rmat_edges(nv, ne, seed=2, weighted=True),
+                   nv, store, tile_size=32768, weighted=True)
+    plan = store.load_plan()
+    tile_bytes = sum(store.tile_disk_bytes(t) for t in range(plan.num_tiles))
+    print(f"{plan.num_tiles} tiles, {tile_bytes/1e6:.0f} MB on disk")
+
+    # constrained cache: only ~30% of tiles fit raw -> auto mode compresses
+    cap = int(tile_bytes * 0.3)
+    print(f"\n--- SSSP with {cap/1e6:.0f} MB cache/server "
+          f"(auto-selected compression mode) ---")
+    eng = OutOfCoreEngine(store, EngineConfig(
+        num_servers=2, cache_capacity_bytes=cap // 2, cache_mode="auto",
+        comm_mode="hybrid", tile_skipping=True, max_supersteps=100))
+    print(f"cache mode selected: {eng.cache_mode} "
+          f"(1=raw 2=zstd-1 3=zstd-3 4=zstd-9)")
+    t0 = time.time()
+    res = eng.run(SSSP(source=0))
+    reached = int(np.isfinite(res.values).sum())
+    skipped = sum(h.tiles_skipped for h in res.history)
+    print(f"SSSP: {res.supersteps} supersteps {time.time()-t0:.1f}s, "
+          f"{reached:,} reachable, {skipped} tile loads skipped, "
+          f"hit ratio {res.history[-1].cache_hit_ratio:.2f}")
+
+    print("\n--- WCC on the symmetrized graph ---")
+    store2 = TileStore(tempfile.mkdtemp(prefix="analytics_sym_"))
+    spe.preprocess(
+        lambda: synth.symmetrized(synth.rmat_edges(nv, ne, seed=2)),
+        nv, store2, tile_size=65536)
+    eng2 = OutOfCoreEngine(store2, EngineConfig(num_servers=2,
+                                                max_supersteps=100))
+    res2 = eng2.run(WCC())
+    n_comp = len(np.unique(res2.values))
+    print(f"WCC: {res2.supersteps} supersteps, {n_comp:,} components")
+
+    print("\n--- baseline engine comparison (SSSP, same graph) ---")
+    srcs, dsts, vals = [], [], []
+    for s, d, v in synth.rmat_edges(nv, ne, seed=2, weighted=True):
+        srcs.append(s), dsts.append(d), vals.append(v)
+    src, dst, val = (np.concatenate(x) for x in (srcs, dsts, vals))
+    rows = [("graphh", res.mean_superstep_seconds(),
+             sum(h.network_bytes for h in res.history),
+             sum(h.disk_bytes_read for h in res.history))]
+    for name, cls in ENGINES.items():
+        e = cls(src, dst, val, nv, num_servers=2)
+        r = e.run(SSSP(source=0), max_supersteps=40)
+        rows.append((name, r.mean_superstep_seconds(),
+                     sum(h.network_bytes for h in r.history),
+                     sum(h.disk_read_bytes + h.disk_write_bytes
+                         for h in r.history)))
+    print(f"{'engine':12s} {'ms/superstep':>14s} {'net MB':>8s} {'disk MB':>8s}")
+    for name, sec, net, disk in rows:
+        print(f"{name:12s} {sec*1000:14.1f} {net/1e6:8.1f} {disk/1e6:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

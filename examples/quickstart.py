@@ -1,0 +1,51 @@
+"""Quickstart: GraphH PageRank on a synthetic power-law graph, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Pipeline: R-MAT generator -> SPE two-stage partitioning -> tile store
+("DFS") -> out-of-core GAB engine with edge cache + hybrid communication.
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.apps import PageRank
+from repro.core.engine import EngineConfig, OutOfCoreEngine
+from repro.graphio import spe, synth
+from repro.graphio.formats import TileStore
+
+
+def main():
+    nv, ne = 50_000, 500_000
+    print(f"1. generating R-MAT graph: |V|={nv:,} |E|={ne:,}")
+    store = TileStore(tempfile.mkdtemp(prefix="quickstart_"))
+
+    print("2. SPE two-stage partitioning (degree pass -> splitter -> CSR tiles)")
+    t0 = time.time()
+    plan = spe.preprocess(lambda: synth.rmat_edges(nv, ne, seed=1),
+                          nv, store, tile_size=32768)
+    print(f"   {plan.num_tiles} tiles of <= {plan.edge_cap} edges "
+          f"in {time.time()-t0:.1f}s")
+
+    print("3. GAB supersteps on 4 emulated servers (AA replication, "
+          "edge cache, hybrid broadcast)")
+    eng = OutOfCoreEngine(store, EngineConfig(
+        num_servers=4, cache_capacity_bytes=1 << 28, cache_mode="auto",
+        comm_mode="hybrid", max_supersteps=100))
+    t0 = time.time()
+    res = eng.run(PageRank(update_tol=1e-9))
+    print(f"   converged={res.converged} in {res.supersteps} supersteps, "
+          f"{time.time()-t0:.1f}s "
+          f"({res.mean_superstep_seconds()*1000:.0f} ms/superstep)")
+
+    top = np.argsort(-res.values)[:5]
+    print("4. top-5 vertices by rank:", [(int(v), round(float(res.values[v]), 2))
+                                         for v in top])
+    h = res.history[2]
+    print(f"   cache hit ratio {h.cache_hit_ratio:.2f} | broadcast mode "
+          f"density {h.density:.2f} | wire {h.wire_bytes/1e6:.2f} MB/superstep")
+
+
+if __name__ == "__main__":
+    main()

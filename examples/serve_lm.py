@@ -1,0 +1,34 @@
+"""Batched serving example: continuous batching over 24 requests with
+4 cache slots, loading weights from examples/train_lm.py when present.
+
+    PYTHONPATH=src python examples/serve_lm.py [--ckpt-dir /tmp/train_lm_100m]
+"""
+import argparse
+import os
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_100m")
+    args = ap.parse_args()
+
+    argv = [
+        "--arch", "qwen3-1.7b", "--reduced",
+        # same shape overrides as examples/train_lm.py (the ~100M model)
+        "--d-model", "512", "--layers", "12", "--vocab", "32768",
+        "--requests", "24", "--slots", "4",
+        "--max-new", "24", "--max-len", "256", "--prompt-len", "16",
+        "--temperature", "0.8",
+    ]
+    if os.path.isdir(args.ckpt_dir) and os.listdir(args.ckpt_dir):
+        argv += ["--ckpt-dir", args.ckpt_dir]
+    else:
+        print("(no checkpoint found — serving randomly initialized weights; "
+              "run examples/train_lm.py first)")
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

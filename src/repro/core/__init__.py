@@ -1,0 +1,11 @@
+# GraphH core: the paper's primary contribution in JAX.
+# - tiles/partition: two-stage graph partitioning (paper §III-B)
+# - gab/apps:        GAB computation model + vertex programs (§III-C)
+# - cache:           edge cache with compression modes (§III-D-2)
+# - comm:            hybrid dense/sparse broadcast (§III-D-3)
+# - bloom:           tile-skipping filters (§III-C-4)
+# - engine:          out-of-core MPE (measurable CPU path)
+# - distributed:     shard_map multi-device path (cluster/dry-run path)
+# - baselines:       Pregel/GAS/GraphD/Chaos-style comparison engines
+# Submodules are imported explicitly by users (no eager imports here to
+# keep `import repro.core` cheap and cycle-free).

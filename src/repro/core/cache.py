@@ -1,0 +1,128 @@
+"""Edge cache (paper §III-D-2).
+
+An LRU cache over serialized tiles sitting in "idle" host memory.  Four
+modes trade decompression CPU for capacity, exactly as the paper's
+snappy/zlib ladder (we use zstd levels, see formats.MODE_CODECS):
+
+  mode 1: raw blobs         (gamma_1 = 1)
+  mode 2: zstd-1            (gamma_2 ~ 2,  snappy analogue)
+  mode 3: zstd-3            (gamma_3 ~ 4,  zlib-1 analogue)
+  mode 4: zstd-9            (gamma_4 ~ 5,  zlib-3 analogue)
+
+Auto-selection follows the paper: pick the *smallest* i such that
+P_resident_bytes / gamma_i <= capacity; if none fits, use mode 3.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Optional
+
+from repro.core.tiles import Tile
+from repro.graphio import formats
+from repro.graphio.formats import TileStore
+
+# Paper §III-D-2: gamma_0..3 = 1, 2, 4, 5 (we index modes from 1).
+DEFAULT_GAMMAS = {1: 1.0, 2: 2.0, 3: 4.0, 4: 5.0}
+
+
+def auto_select_mode(
+    working_set_bytes: int,
+    capacity_bytes: int,
+    gammas: dict[int, float] = DEFAULT_GAMMAS,
+) -> int:
+    """min i s.t. working_set / gamma_i <= capacity, else mode 3."""
+    for mode in sorted(gammas):
+        if working_set_bytes / gammas[mode] <= capacity_bytes:
+            return mode
+    return 3
+
+
+class CacheStats:
+    def __init__(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.disk_bytes_read = 0
+        self.decompress_seconds = 0.0
+        self.disk_seconds = 0.0
+
+    @property
+    def hit_ratio(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(
+            hits=self.hits, misses=self.misses, evictions=self.evictions,
+            hit_ratio=self.hit_ratio, disk_bytes_read=self.disk_bytes_read,
+            decompress_seconds=self.decompress_seconds,
+            disk_seconds=self.disk_seconds,
+        )
+
+
+class EdgeCache:
+    """LRU tile cache.  ``get`` returns a deserialized Tile; blobs are held
+    compressed at ``mode``.  A miss reads from the TileStore (disk tier)."""
+
+    def __init__(self, store: TileStore, capacity_bytes: int, mode: int = 1):
+        self.store = store
+        self.capacity_bytes = int(capacity_bytes)
+        self.mode = mode
+        self._lru: OrderedDict[int, bytes] = OrderedDict()
+        self._bytes = 0
+        self.stats = CacheStats()
+
+    # -- public -------------------------------------------------------------
+    def get(self, tile_id: int) -> Tile:
+        blob = self._lru.get(tile_id)
+        if blob is not None:
+            self._lru.move_to_end(tile_id)
+            self.stats.hits += 1
+            return self._decode(blob)
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        disk_blob = self.store.read_tile_blob(tile_id)
+        self.stats.disk_seconds += time.perf_counter() - t0
+        self.stats.disk_bytes_read += len(disk_blob)
+        raw = formats.decompress_blob(disk_blob, self.store.disk_mode)
+        cache_blob = formats.compress_blob(raw, self.mode)
+        self._insert(tile_id, cache_blob)
+        return formats.deserialize_tile(raw)
+
+    def resident_bytes(self) -> int:
+        return self._bytes
+
+    def contains(self, tile_id: int) -> bool:
+        return tile_id in self._lru
+
+    def clear(self) -> None:
+        self._lru.clear()
+        self._bytes = 0
+
+    def warm(self, tile_ids) -> None:
+        for t in tile_ids:
+            self.get(t)
+
+    @staticmethod
+    def auto(store: TileStore, capacity_bytes: int, working_set_bytes: int,
+             gammas: dict[int, float] = DEFAULT_GAMMAS) -> "EdgeCache":
+        mode = auto_select_mode(working_set_bytes, capacity_bytes, gammas)
+        return EdgeCache(store, capacity_bytes, mode)
+
+    # -- internals ----------------------------------------------------------
+    def _decode(self, blob: bytes) -> Tile:
+        t0 = time.perf_counter()
+        raw = formats.decompress_blob(blob, self.mode)
+        self.stats.decompress_seconds += time.perf_counter() - t0
+        return formats.deserialize_tile(raw)
+
+    def _insert(self, tile_id: int, blob: bytes) -> None:
+        if len(blob) > self.capacity_bytes:
+            return  # single tile larger than the whole cache: don't thrash
+        while self._bytes + len(blob) > self.capacity_bytes and self._lru:
+            _, old = self._lru.popitem(last=False)
+            self._bytes -= len(old)
+            self.stats.evictions += 1
+        self._lru[tile_id] = blob
+        self._bytes += len(blob)

@@ -1,0 +1,166 @@
+"""Distributed GAB on a device mesh via shard_map.
+
+Mapping of the paper's cluster onto a TPU mesh (DESIGN.md §3):
+
+  servers (MPI ranks)   -> mesh axes, e.g. ("pod", "data")
+  workers (OpenMP)      -> "model" axis (more tile shards per server)
+  AA vertex replication -> vertex values replicated across the whole mesh
+  tile assignment       -> stacked tile arrays sharded on the leading axis
+  Broadcast             -> psum of update-masked values (dense) or fixed-
+                           capacity all_gather of (idx, val) pairs (sparse),
+                           chosen by measured update density (hybrid, lax.cond)
+
+The same superstep function serves (a) real execution on however many local
+devices exist and (b) the production-mesh dry-run via .lower()/.compile().
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import comm
+from repro.core.gab import VertexProgram, stacked_tiles_step
+from repro.core.tiles import Tile, stack_tiles
+
+
+@dataclasses.dataclass
+class DistConfig:
+    comm_mode: str = "hybrid"       # dense | sparse | hybrid
+    threshold: float = comm.DENSITY_THRESHOLD
+    seg_impl: str = "jnp"
+    wire_dtype: Optional[str] = None   # e.g. "bfloat16" for compressed wire
+    max_supersteps: int = 200
+
+
+def pad_tile_count(num_tiles: int, num_shards: int) -> int:
+    return ((num_tiles + num_shards - 1) // num_shards) * num_shards
+
+
+def make_empty_tile_arrays(stk: dict) -> dict:
+    """An inert tile: every edge points at the global sink row, zero rows."""
+    ecap, rcap = stk["edge_cap"], stk["row_cap"]
+    return dict(
+        src=np.zeros((1, ecap), np.int32),
+        dst_local=np.full((1, ecap), rcap, np.int32),
+        val=np.zeros((1, ecap), np.float32),
+        row_start=np.zeros((1,), np.int32),
+        num_rows=np.zeros((1,), np.int32),
+        num_edges=np.zeros((1,), np.int32),
+    )
+
+
+def stack_and_pad(tiles: list[Tile], row_cap: int, num_shards: int) -> dict:
+    """Stack tiles and pad the tile axis to a multiple of num_shards."""
+    stk = stack_tiles(tiles, row_cap)
+    total = pad_tile_count(len(tiles), num_shards)
+    pad = total - len(tiles)
+    if pad:
+        empty = make_empty_tile_arrays(stk)
+        for k in ("src", "dst_local", "val", "row_start", "num_rows", "num_edges"):
+            stk[k] = np.concatenate([stk[k]] + [empty[k]] * pad, axis=0)
+    return stk
+
+
+def build_superstep(
+    prog: VertexProgram,
+    mesh: Mesh,
+    tile_axes: tuple[str, ...],
+    row_cap: int,
+    num_vertices: int,
+    cfg: DistConfig = DistConfig(),
+):
+    """Returns a jit-able superstep: (values, aux, stk) -> (values', density).
+
+    values/aux are replicated; stk arrays are sharded along ``tile_axes``.
+    """
+    capacity = comm.sparse_capacity(num_vertices, cfg.threshold)
+    axis = tile_axes if len(tile_axes) > 1 else tile_axes[0]
+
+    def local_step(values, aux, src, dst_local, val, row_start, num_rows):
+        stk = dict(src=src, dst_local=dst_local, val=val,
+                   row_start=row_start, num_rows=num_rows)
+        new_masked, upd = stacked_tiles_step(
+            prog, values, aux, stk, row_cap, cfg.seg_impl
+        )
+        new_values, density = comm.hybrid_broadcast(
+            values, new_masked, upd, axis,
+            capacity=capacity, threshold=cfg.threshold,
+            mode=cfg.comm_mode,
+            value_dtype=None if cfg.wire_dtype is None else jnp.dtype(cfg.wire_dtype),
+        )
+        return new_values, density
+
+    tile_spec = P(axis)
+    rep = P()
+    fn = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(rep, rep, tile_spec, tile_spec, tile_spec, tile_spec, tile_spec),
+        out_specs=(rep, rep),
+        check_vma=False,
+    )
+
+    def superstep(values, aux, stk):
+        return fn(values, aux, stk["src"], stk["dst_local"], stk["val"],
+                  stk["row_start"], stk["num_rows"])
+
+    return superstep
+
+
+class DistributedGABEngine:
+    """In-memory distributed GAB over the local device set (the multi-device
+    execution path; the out-of-core disk tier is engine.py's job)."""
+
+    def __init__(self, mesh: Mesh, tile_axes: tuple[str, ...],
+                 cfg: DistConfig = DistConfig()):
+        self.mesh = mesh
+        self.tile_axes = tile_axes
+        self.cfg = cfg
+        self.num_shards = int(np.prod([mesh.shape[a] for a in tile_axes]))
+
+    def shard_tiles(self, tiles: list[Tile], row_cap: int) -> dict:
+        stk = stack_and_pad(tiles, row_cap, self.num_shards)
+        sharding = NamedSharding(
+            self.mesh,
+            P(self.tile_axes if len(self.tile_axes) > 1 else self.tile_axes[0]),
+        )
+        out = {}
+        for k in ("src", "dst_local", "val", "row_start", "num_rows"):
+            out[k] = jax.device_put(stk[k], sharding)
+        out["row_cap"] = stk["row_cap"]
+        out["edge_cap"] = stk["edge_cap"]
+        return out
+
+    def run(self, prog: VertexProgram, tiles: list[Tile], num_vertices: int,
+            out_degree: np.ndarray, in_degree: np.ndarray,
+            row_cap: int, max_supersteps: Optional[int] = None):
+        state = prog.init(num_vertices, out_degree.astype(np.float64),
+                          in_degree.astype(np.float64))
+        rep = NamedSharding(self.mesh, P())
+        values = jax.device_put(jnp.asarray(state.pop("value")), rep)
+        aux = {k: jax.device_put(jnp.asarray(v), rep) for k, v in state.items()}
+        stk = self.shard_tiles(tiles, row_cap)
+
+        step = jax.jit(build_superstep(
+            prog, self.mesh, self.tile_axes, row_cap, num_vertices, self.cfg
+        ))
+        history = []
+        max_ss = max_supersteps or self.cfg.max_supersteps
+        for ss in range(max_ss):
+            values, density = step(values, aux, stk)
+            d = float(density)
+            history.append(dict(superstep=ss, density=d))
+            if d == 0.0:
+                break
+        return np.asarray(values), history

@@ -1,0 +1,383 @@
+"""Out-of-core GAB engine — the paper's MPE (§III-C, Algorithm 5).
+
+Emulates N servers x T workers in one process with *real* out-of-core
+behaviour: tiles live in the TileStore (disk tier), each server owns a
+round-robin tile subset and an EdgeCache over "idle" memory, vertex state
+is fully replicated (All-in-All), and the per-superstep Broadcast payloads
+are measured (and actually compressed) through core.comm.
+
+This is the measurable CPU reference implementation; distributed.py maps
+the identical superstep onto a device mesh with shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm
+from repro.core.bloom import SourceBlockBitmap, BloomFilter
+from repro.core.cache import EdgeCache, auto_select_mode, DEFAULT_GAMMAS
+from repro.core.gab import VertexProgram, run_tile
+from repro.core.partition import assign_tiles, assign_tiles_balanced
+from repro.core.tiles import tile_edge_values
+from repro.graphio.formats import TileStore
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_servers: int = 1
+    num_workers: int = 1                    # paper's T (accounting only here)
+    cache_capacity_bytes: int = 1 << 30     # per server
+    cache_mode: int | str = "auto"          # 1..4 or "auto"
+    comm_mode: str = "hybrid"               # dense | sparse | hybrid
+    comm_compressor: str = "zstd-1"         # paper default: snappy
+    comm_threshold: float = comm.DENSITY_THRESHOLD
+    tile_skipping: bool = True
+    skip_filter: str = "bitmap"             # "bitmap" (exact) | "bloom" (paper)
+    skip_density_threshold: float = 0.05    # paper: only when few updates
+    seg_impl: str = "jnp"
+    max_supersteps: int = 200
+    balanced_assignment: bool = False       # beyond-paper LPT stage-2
+    bloom_bits: int = 1 << 16
+    block_shift: int = 8
+    # --- beyond-paper performance features (EXPERIMENTS.md §Perf) ---
+    # "tiled": paper-faithful one-tile-at-a-time processing
+    # "stacked": device-resident stacked tiles, one scan per server (the
+    #            HBM tier of the cache hierarchy; falls back to tiled for
+    #            tiles beyond device_budget_bytes or when skipping is on)
+    engine_mode: str = "tiled"
+    device_budget_bytes: int = 1 << 30      # per server, for "stacked"
+    # wire accounting: "full" compresses every payload (measured bytes);
+    # "sampled" compresses every 4th superstep and reuses the last ratio
+    comm_accounting: str = "full"
+
+
+@dataclasses.dataclass
+class SuperstepStats:
+    superstep: int
+    seconds: float
+    load_seconds: float
+    compute_seconds: float
+    updated_vertices: int
+    density: float
+    tiles_processed: int
+    tiles_skipped: int
+    raw_bytes: int            # sum over servers of broadcast payload
+    wire_bytes: int           # after compression
+    network_bytes: int        # wire * (N-1): each server ships to N-1 peers
+    cache_hit_ratio: float
+    disk_bytes_read: int
+
+
+@dataclasses.dataclass
+class RunResult:
+    values: np.ndarray
+    aux: dict
+    history: list[SuperstepStats]
+    supersteps: int
+    converged: bool
+
+    def total_seconds(self) -> float:
+        return sum(h.seconds for h in self.history)
+
+    def mean_superstep_seconds(self, skip_first: bool = True) -> float:
+        hs = self.history[1:] if skip_first and len(self.history) > 1 else self.history
+        return float(np.mean([h.seconds for h in hs])) if hs else 0.0
+
+
+class OutOfCoreEngine:
+    def __init__(self, store: TileStore, config: EngineConfig = EngineConfig()):
+        self.store = store
+        self.cfg = config
+        self.plan = store.load_plan()
+        self.in_degree, self.out_degree = store.load_degrees()
+        P, N = self.plan.num_tiles, config.num_servers
+        if config.balanced_assignment:
+            self.assignment = assign_tiles_balanced(self.plan.edges_per_tile, N)
+        else:
+            self.assignment = assign_tiles(P, N)
+
+        # Per-server edge caches (paper: idle memory on each server).
+        if config.cache_mode == "auto":
+            # Working set per server ~ share of total on-disk tile bytes.
+            total = sum(store.tile_disk_bytes(t) for t in range(P))
+            mode = auto_select_mode(total // max(N, 1), config.cache_capacity_bytes)
+        else:
+            mode = int(config.cache_mode)
+        self.cache_mode = mode
+        self.caches = [
+            EdgeCache(store, config.cache_capacity_bytes, mode) for _ in range(N)
+        ]
+        self._filters: Optional[list] = None  # built during first superstep
+        self._stacks: Optional[list] = None   # per-server device-resident tiles
+        self._stack_fn = None
+        self._streamed: list[list[int]] = [[] for _ in range(N)]
+        self._wire_ratio: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def run(self, prog: VertexProgram,
+            max_supersteps: Optional[int] = None) -> RunResult:
+        cfg = self.cfg
+        nv = self.plan.num_vertices
+        state = prog.init(nv, self.out_degree.astype(np.float64),
+                          self.in_degree.astype(np.float64))
+        values = np.asarray(state.pop("value"))
+        aux_dev = {k: jnp.asarray(v) for k, v in state.items()}
+        row_cap = self.plan.row_cap
+
+        max_ss = max_supersteps or cfg.max_supersteps
+        history: list[SuperstepStats] = []
+        updated_ids = np.arange(nv)   # everything "updated" before step 0
+        building_filters = cfg.tile_skipping
+        filters: list = [None] * self.plan.num_tiles if building_filters else []
+
+        converged = False
+        for ss in range(max_ss):
+            t_start = time.perf_counter()
+            values_dev = jnp.asarray(values)
+            load_s = 0.0
+            comp_s = 0.0
+            tiles_done = 0
+            tiles_skipped = 0
+            upd_idx_parts: list[np.ndarray] = []
+            upd_val_parts: list[np.ndarray] = []
+            per_server_updates: list[tuple[np.ndarray, np.ndarray]] = []
+
+            skip_on = (
+                cfg.tile_skipping
+                and ss > 0
+                and len(updated_ids) < cfg.skip_density_threshold * nv
+                and self._filters is not None
+            )
+            active_words = None
+            if skip_on and cfg.skip_filter == "bitmap":
+                active_words = SourceBlockBitmap.active_words_from_ids(
+                    updated_ids, nv, cfg.block_shift
+                )
+
+            for s in range(cfg.num_servers):
+                s_idx: list[np.ndarray] = []
+                s_val: list[np.ndarray] = []
+                server_tiles = self.assignment[s]
+                if cfg.engine_mode in ("stacked", "merged") and not skip_on:
+                    if self._stacks is None:
+                        t0 = time.perf_counter()
+                        if cfg.engine_mode == "merged":
+                            self._build_merged(nv)
+                        else:
+                            self._build_stacks(nv)
+                        if building_filters:
+                            for st in range(cfg.num_servers):
+                                n_res = len(self.assignment[st]) - len(self._streamed[st])
+                                for tid in self.assignment[st][:n_res]:
+                                    if filters[tid] is None:
+                                        filters[tid] = self._make_filter(
+                                            self.caches[st].get(tid), nv)
+                        load_s += time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    step_fn = (self._merged_step if cfg.engine_mode == "merged"
+                               else self._stack_step)
+                    new_masked, upd = step_fn(prog, values_dev, aux_dev,
+                                              self._stacks[s])
+                    si = np.nonzero(np.asarray(upd))[0]
+                    sv = np.asarray(new_masked)[si]
+                    comp_s += time.perf_counter() - t0
+                    s_idx.append(si)
+                    s_val.append(sv.astype(values.dtype))
+                    tiles_done += len(self.assignment[s]) - len(self._streamed[s])
+                    server_tiles = self._streamed[s]
+                for tid in server_tiles:
+                    if skip_on:
+                        f = self._filters[tid]
+                        hit = (
+                            f.intersects(active_words)
+                            if cfg.skip_filter == "bitmap"
+                            else f.might_contain_any(updated_ids)
+                        )
+                        if not hit:
+                            tiles_skipped += 1
+                            continue
+                    t0 = time.perf_counter()
+                    tile = self.caches[s].get(tid)
+                    load_s += time.perf_counter() - t0
+
+                    if building_filters and filters[tid] is None:
+                        filters[tid] = self._make_filter(tile, nv)
+
+                    t0 = time.perf_counter()
+                    rows, new, upd = run_tile(
+                        prog, values_dev, aux_dev,
+                        (tile.src, tile.dst_local, tile_edge_values(tile)),
+                        tile.meta.row_start, tile.meta.num_rows,
+                        row_cap, cfg.seg_impl,
+                    )
+                    rows = np.asarray(rows)
+                    new = np.asarray(new)
+                    upd = np.asarray(upd)
+                    comp_s += time.perf_counter() - t0
+                    s_idx.append(rows[upd])
+                    s_val.append(new[upd])
+                    tiles_done += 1
+                si = np.concatenate(s_idx) if s_idx else np.zeros(0, np.int64)
+                sv = np.concatenate(s_val) if s_val else np.zeros(0, values.dtype)
+                per_server_updates.append((si, sv))
+                upd_idx_parts.append(si)
+                upd_val_parts.append(sv)
+
+            if building_filters and all(f is not None for f in filters):
+                self._filters = filters
+                building_filters = False
+
+            # --- Broadcast (BSP barrier): measure payloads, apply updates ---
+            raw_b = wire_b = 0
+            sample = not (cfg.comm_accounting == "sampled" and ss % 4 != 0
+                          and self._wire_ratio is not None)
+            for s in range(cfg.num_servers):
+                si, sv = per_server_updates[s]
+                if sample:
+                    upd_mask = np.zeros(nv, dtype=bool)
+                    upd_mask[si] = True
+                    rec = comm.plan_broadcast(
+                        _densify(sv, si, nv, values.dtype),
+                        upd_mask,
+                        threshold=cfg.comm_threshold,
+                        compressor=cfg.comm_compressor,
+                        mode=cfg.comm_mode,
+                    )
+                    raw_b += rec.raw_bytes
+                    wire_b += rec.wire_bytes
+                else:
+                    est = comm.wire_bytes_estimate(nv, len(si) / max(nv, 1))
+                    raw_b += est
+                    wire_b += int(est * self._wire_ratio)
+            if sample and raw_b:
+                self._wire_ratio = wire_b / raw_b
+
+            all_idx = np.concatenate(upd_idx_parts) if upd_idx_parts else np.zeros(0, np.int64)
+            all_val = np.concatenate(upd_val_parts) if upd_val_parts else np.zeros(0, values.dtype)
+            values[all_idx] = all_val
+            updated_ids = all_idx
+
+            cache_stats = self._agg_cache_stats()
+            history.append(SuperstepStats(
+                superstep=ss,
+                seconds=time.perf_counter() - t_start,
+                load_seconds=load_s,
+                compute_seconds=comp_s,
+                updated_vertices=int(len(all_idx)),
+                density=float(len(all_idx)) / max(nv, 1),
+                tiles_processed=tiles_done,
+                tiles_skipped=tiles_skipped,
+                raw_bytes=raw_b,
+                wire_bytes=wire_b,
+                network_bytes=wire_b * max(cfg.num_servers - 1, 0),
+                cache_hit_ratio=cache_stats["hit_ratio"],
+                disk_bytes_read=cache_stats["disk_bytes_read"],
+            ))
+            if len(all_idx) == 0:
+                converged = True
+                break
+
+        return RunResult(values=values, aux=state, history=history,
+                         supersteps=len(history), converged=converged)
+
+    # ------------------------------------------------------------------
+    # stacked fast path (engine_mode="stacked"): device-resident tiles
+    # ------------------------------------------------------------------
+    def _build_stacks(self, nv: int) -> None:
+        from repro.core.tiles import stack_tiles
+
+        budget = self.cfg.device_budget_bytes
+        per_tile = self.plan.edge_cap * 12  # src+dst+val
+        self._stacks = []
+        for s in range(self.cfg.num_servers):
+            fit = max(1, budget // per_tile)
+            resident = self.assignment[s][:fit]
+            self._streamed[s] = self.assignment[s][fit:]
+            tiles = [self.caches[s].get(t) for t in resident]
+            stk = stack_tiles(tiles, self.plan.row_cap)
+            self._stacks.append({
+                k: jnp.asarray(stk[k])
+                for k in ("src", "dst_local", "val", "row_start", "num_rows")
+            })
+
+    def _build_merged(self, nv: int) -> None:
+        """engine_mode="merged" (§Perf It5): per-server fused edge lists."""
+        self._stacks = []
+        for s in range(self.cfg.num_servers):
+            self._streamed[s] = []
+            srcs, dsts, vals = [], [], []
+            owned = np.zeros(nv + 1, dtype=bool)
+            for tid in self.assignment[s]:
+                t = self.caches[s].get(tid)
+                n = t.meta.num_edges
+                srcs.append(t.src[:n])
+                dsts.append(t.dst_local[:n].astype(np.int64) + t.meta.row_start)
+                from repro.core.tiles import tile_edge_values
+                vals.append(tile_edge_values(t)[:n])
+                owned[t.meta.row_start: t.meta.row_end] = True
+            self._stacks.append(dict(
+                src=jnp.asarray(np.concatenate(srcs).astype(np.int32)),
+                dst=jnp.asarray(np.concatenate(dsts).astype(np.int32)),
+                val=jnp.asarray(np.concatenate(vals)),
+                owned=jnp.asarray(owned[:nv]),
+            ))
+
+    def _merged_step(self, prog, values_dev, aux_dev, m):
+        from repro.core.gab import merged_server_step
+
+        if self._stack_fn is None:
+            from functools import partial
+
+            @partial(jax.jit, static_argnums=(0, 1))
+            def fn(p, seg_impl, values, aux, src, dst, val, owned):
+                return merged_server_step(p, values, aux, src, dst, val,
+                                          owned, seg_impl)
+
+            self._stack_fn = fn
+        return self._stack_fn(prog, self.cfg.seg_impl, values_dev, aux_dev,
+                              m["src"], m["dst"], m["val"], m["owned"])
+
+    def _stack_step(self, prog, values_dev, aux_dev, stack):
+        from repro.core.gab import stacked_tiles_step
+
+        if self._stack_fn is None:
+            from functools import partial
+
+            row_cap = self.plan.row_cap
+
+            @partial(jax.jit, static_argnums=(0, 3))
+            def fn(p, values, aux, seg_impl, stk):
+                return stacked_tiles_step(p, values, aux, stk, row_cap, seg_impl)
+
+            self._stack_fn = fn
+        return self._stack_fn(prog, values_dev, aux_dev, self.cfg.seg_impl, stack)
+
+    # ------------------------------------------------------------------
+    def _make_filter(self, tile, nv):
+        srcs = tile.source_ids()
+        if self.cfg.skip_filter == "bitmap":
+            f = SourceBlockBitmap(nv, self.cfg.block_shift)
+        else:
+            f = BloomFilter(num_bits=self.cfg.bloom_bits)
+        f.add(srcs)
+        return f
+
+    def _agg_cache_stats(self) -> dict:
+        hits = sum(c.stats.hits for c in self.caches)
+        misses = sum(c.stats.misses for c in self.caches)
+        return dict(
+            hit_ratio=hits / max(hits + misses, 1),
+            disk_bytes_read=sum(c.stats.disk_bytes_read for c in self.caches),
+        )
+
+
+def _densify(vals: np.ndarray, idx: np.ndarray, nv: int, dtype) -> np.ndarray:
+    out = np.zeros(nv, dtype=dtype)
+    out[idx] = vals
+    return out

@@ -1,0 +1,1 @@
+# SPE-equivalent preprocessing + tile storage ("DFS") + synthetic graphs.

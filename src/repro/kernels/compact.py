@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: stream compaction for the sparse broadcast payload
+(paper §III-D-3 — "convert a dense array into a list of indices and values").
+
+Produces the first-K (index, value) pairs where ``mask`` is set, in
+ascending index order — the wire format of GraphH's sparse communication
+mode.
+
+TPU adaptation: compaction is a scatter, which Mosaic dislikes; we reuse
+the one-hot MXU trick from gab_gather.  Within each block of B elements:
+
+  pos[e]   = exclusive prefix count of mask     (VPU cumsum)
+  buf[p]   = Σ_e x[e] * mask[e] * (pos[e] == p) (MXU matmul — exact select,
+                                                 positions are unique)
+
+and the block's compacted buffer is stored at the running global offset
+(dynamic-start, static-size store).  Grid steps execute sequentially on
+TPU, so later blocks harmlessly overwrite the padding of earlier ones.
+
+Exactness bound: indices are routed through f32 lanes, so this kernel
+requires num_elements < 2^24; ops.py falls back to the jnp oracle above
+that (checked at trace time).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+
+
+def _kernel(offs_ref, mask_ref, val_ref, idx_out_ref, val_out_ref,
+            *, block: int, fill: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        idx_out_ref[...] = jnp.full_like(idx_out_ref, fill)
+        val_out_ref[...] = jnp.zeros_like(val_out_ref)
+
+    m = mask_ref[0, :].astype(jnp.float32)          # [B] 0/1
+    v = val_ref[0, :]                               # [B]
+    csum = jnp.cumsum(m)
+    pos = (csum - m).astype(jnp.int32)              # exclusive prefix
+    count = csum[-1].astype(jnp.int32)
+
+    gid = b * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)[0]
+    # one-hot select matrix H[e, p] = mask[e] & (pos[e] == p)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    h = ((pos[:, None] == lanes) & (m[:, None] > 0)).astype(jnp.float32)
+
+    def select(x):
+        return jax.lax.dot_general(
+            x.astype(jnp.float32)[None, :], h,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[0]                                        # [B]
+
+    buf_val = select(v)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)[0]
+    buf_idx = jnp.where(slot < count,
+                        select(gid).astype(jnp.int32),
+                        jnp.int32(fill))
+
+    off = offs_ref[0, b]
+    pl.store(idx_out_ref, (0, pl.dslice(off, block)), buf_idx)
+    pl.store(val_out_ref, (0, pl.dslice(off, block)),
+             buf_val.astype(val_out_ref.dtype))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "block", "interpret", "fill_index")
+)
+def compact_pallas(
+    mask: jax.Array,
+    values: jax.Array,
+    capacity: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+    fill_index: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """First-`capacity` set indices of ``mask`` (ascending) + their values.
+
+    Caller guarantees popcount(mask) <= capacity (comm.sparse_capacity does).
+    """
+    n = mask.shape[0]
+    fill = n if fill_index is None else fill_index
+    n_pad = max(((n + block - 1) // block) * block, block)
+    pad = n_pad - n
+    mask_p = jnp.concatenate(
+        [mask.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)])[None, :]
+    val_p = jnp.concatenate(
+        [values.astype(jnp.float32), jnp.zeros((pad,), jnp.float32)])[None, :]
+
+    nblocks = n_pad // block
+    counts = jnp.sum(mask_p.reshape(nblocks, block), axis=1)
+    offs = (jnp.cumsum(counts) - counts).astype(jnp.int32)
+    out_len = ((capacity + block - 1) // block) * block + block
+    offs = jnp.minimum(offs, out_len - block)[None, :]   # clamp: no overflow
+
+    idx, val = pl.pallas_call(
+        functools.partial(_kernel, block=block, fill=fill),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, nblocks), lambda b: (0, 0)),   # offsets (resident)
+            pl.BlockSpec((1, block), lambda b: (0, b)),     # mask
+            pl.BlockSpec((1, block), lambda b: (0, b)),     # values
+        ],
+        out_specs=[
+            pl.BlockSpec((1, out_len), lambda b: (0, 0)),   # full, revisited
+            pl.BlockSpec((1, out_len), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, out_len), jnp.int32),
+            jax.ShapeDtypeStruct((1, out_len), jnp.float32),
+        ],
+        interpret=interpret,
+    )(offs, mask_p, val_p)
+    return idx[0, :capacity], val[0, :capacity].astype(values.dtype)

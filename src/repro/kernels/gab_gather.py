@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the GAB gather hot loop (paper §III-C).
+
+The per-tile segment reduction ``out[r] = ⊕_{e: dst[e]=r} contrib[e]`` is
+the SpMV-shaped inner loop of every GraphH superstep.  A CPU/GPU CSR walk
+(pointer chasing) has no good TPU analogue, so we *re-shape the irregular
+reduction into dense systolic work* (DESIGN.md §3/§4):
+
+  sum monoid:  per (row-block j, edge-block i) grid step, build the one-hot
+               matrix ``H[e, r] = (dst[e] == j*BR + r)`` in VMEM and
+               accumulate ``contrib[None, :] @ H`` on the MXU — each edge
+               block costs BE x BR MACs, turning gather-scatter into matmul.
+  min/max:     same tiling, but a masked VPU reduction over the edge axis
+               (select + min), since min-plus has no MXU form.
+
+Block sizes default to (BE, BR) = (512, 256): H is 512x256 f32 = 512 KB of
+VMEM, contrib block 2 KB, out block 1 KB — comfortably inside the ~16 MB
+v5e VMEM budget with double buffering.  All dims are multiples of 128 for
+MXU/lane alignment.  The edge-block axis is the innermost grid dimension so
+the output row block stays resident across the whole contraction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_E = 512
+DEFAULT_BLOCK_R = 256
+
+_IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _kernel(dst_ref, contrib_ref, out_ref, *, block_r: int, combine: str):
+    """Grid = (num_row_blocks, num_edge_blocks); edge axis innermost."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _IDENTITY[combine])
+
+    dst = dst_ref[0, :]                    # [BE] int32 (global row ids)
+    c = contrib_ref[0, :]                  # [BE]
+    j = pl.program_id(0)
+    be = dst.shape[0]
+    # rows covered by this output block: j*BR + [0, BR)
+    rows = j * block_r + jax.lax.broadcasted_iota(jnp.int32, (be, block_r), 1)
+    hit = dst[:, None] == rows             # [BE, BR] one-hot (padding misses all)
+
+    if combine == "sum":
+        h = hit.astype(c.dtype)
+        acc = jax.lax.dot_general(
+            c[None, :], h,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                   # [1, BR] on the MXU
+        out_ref[...] += acc.astype(out_ref.dtype)
+    else:
+        ident = jnp.asarray(_IDENTITY[combine], dtype=c.dtype)
+        sel = jnp.where(hit, c[:, None], ident)   # [BE, BR]
+        red = jnp.min(sel, axis=0) if combine == "min" else jnp.max(sel, axis=0)
+        cur = out_ref[0, :]
+        out_ref[0, :] = jnp.minimum(cur, red) if combine == "min" else jnp.maximum(cur, red)
+
+
+def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
+    pad = size - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "combine", "block_e", "block_r", "interpret"),
+)
+def segment_reduce_pallas(
+    contrib: jax.Array,
+    dst: jax.Array,
+    num_segments: int,
+    combine: str = "sum",
+    block_e: int = DEFAULT_BLOCK_E,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = True,
+) -> jax.Array:
+    """Segment-reduce ``contrib`` by ``dst`` into ``num_segments`` buckets.
+
+    Shapes are padded to block multiples; padded edges use an out-of-range
+    dst so they never hit a one-hot lane.  dtype follows ``contrib``.
+    """
+    assert contrib.ndim == 1 and dst.ndim == 1 and contrib.shape == dst.shape
+    e = contrib.shape[0]
+    e_pad = max(((e + block_e - 1) // block_e) * block_e, block_e)
+    r_pad = max(((num_segments + block_r - 1) // block_r) * block_r, block_r)
+
+    contrib_p = _pad_to(contrib.astype(jnp.float32), e_pad, 0.0)[None, :]
+    dst_p = _pad_to(dst.astype(jnp.int32), e_pad, jnp.int32(r_pad))[None, :]
+
+    grid = (r_pad // block_r, e_pad // block_e)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_r=block_r, combine=combine),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_e), lambda j, i: (0, i)),   # dst
+            pl.BlockSpec((1, block_e), lambda j, i: (0, i)),   # contrib
+        ],
+        out_specs=pl.BlockSpec((1, block_r), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, r_pad), jnp.float32),
+        interpret=interpret,
+    )(dst_p, contrib_p)
+    return out[0, :num_segments].astype(contrib.dtype)

@@ -1,0 +1,63 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (Pallas executes
+the kernel body with the XLA CPU backend); on a real TPU set
+REPRO_PALLAS_INTERPRET=0 (or rely on the backend auto-detect) to compile
+with Mosaic.  The one-hot compaction path needs indices < 2^24 (f32 lane
+exactness) and falls back to the jnp oracle beyond that.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import compact as _compact
+from repro.kernels import gab_gather as _gg
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def segment_sum(contrib: jax.Array, dst: jax.Array, num_segments: int,
+                block_e: int = _gg.DEFAULT_BLOCK_E,
+                block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    return _gg.segment_reduce_pallas(
+        contrib, dst, num_segments, combine="sum",
+        block_e=block_e, block_r=block_r, interpret=_interpret(),
+    )
+
+
+def segment_min(contrib: jax.Array, dst: jax.Array, num_segments: int,
+                block_e: int = _gg.DEFAULT_BLOCK_E,
+                block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    return _gg.segment_reduce_pallas(
+        contrib, dst, num_segments, combine="min",
+        block_e=block_e, block_r=block_r, interpret=_interpret(),
+    )
+
+
+def segment_max(contrib: jax.Array, dst: jax.Array, num_segments: int,
+                block_e: int = _gg.DEFAULT_BLOCK_E,
+                block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    return _gg.segment_reduce_pallas(
+        contrib, dst, num_segments, combine="max",
+        block_e=block_e, block_r=block_r, interpret=_interpret(),
+    )
+
+
+def compact(mask: jax.Array, values: jax.Array, capacity: int,
+            block: int = _compact.DEFAULT_BLOCK,
+            fill_index: int | None = None) -> tuple[jax.Array, jax.Array]:
+    if mask.shape[0] >= (1 << 24):
+        return _ref.compact(mask, values, capacity, fill_index)
+    return _compact.compact_pallas(
+        mask, values, capacity, block=block,
+        interpret=_interpret(), fill_index=fill_index,
+    )

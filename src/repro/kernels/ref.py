@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(contrib: jax.Array, dst: jax.Array, num_segments: int) -> jax.Array:
+    """out[r] = sum of contrib[e] where dst[e] == r."""
+    return jax.ops.segment_sum(contrib, dst, num_segments=num_segments)
+
+
+def segment_min(contrib: jax.Array, dst: jax.Array, num_segments: int) -> jax.Array:
+    """out[r] = min of contrib[e] where dst[e] == r (+inf when empty)."""
+    return jax.ops.segment_min(contrib, dst, num_segments=num_segments)
+
+
+def segment_max(contrib: jax.Array, dst: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_max(contrib, dst, num_segments=num_segments)
+
+
+def compact(mask: jax.Array, values: jax.Array, capacity: int,
+            fill_index: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """First-`capacity` indices where mask is set (ascending) + their values.
+
+    Unused slots hold (fill_index, 0).  fill_index defaults to len(mask).
+    """
+    n = mask.shape[0]
+    fill = n if fill_index is None else fill_index
+    (idx,) = jnp.nonzero(mask, size=capacity, fill_value=fill)
+    vals = jnp.where(idx < n, values[jnp.minimum(idx, n - 1)], 0)
+    return idx.astype(jnp.int32), vals

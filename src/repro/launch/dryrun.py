@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# The two lines above MUST stay first: jax locks the device count at first
+# init, and only this entry point may see 512 placeholder devices.
+#
+# Per cell this produces:
+#   * compiled.memory_analysis()  — bytes/device (proves it fits)
+#   * compiled.cost_analysis()    — per-device FLOPs / bytes for Roofline
+#   * collective bytes parsed from the optimized HLO
+#   * the three roofline terms + bottleneck + MFU bound
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen3-14b --cell train_4k --mesh single
+#   python -m repro.launch.dryrun --all            # orchestrate subprocesses
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import SHAPE_CELLS
+from repro.launch import mesh as meshlib
+from repro.roofline import analysis as ra
+
+RESULTS_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "results", "dryrun"))
+
+
+def _mesh(kind: str):
+    return meshlib.make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+            "peak_bytes_estimate": int(
+                getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                + getattr(ma, "temp_size_in_bytes", 0)),
+        }
+    except Exception as e:  # backend without memory_analysis
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str,
+             collect_hlo: bool = True) -> dict:
+    from repro.models.model_zoo import build_model, param_count, active_param_count
+    from repro.serve import serve_step
+    from repro.train import train_step as ts
+
+    cell = SHAPE_CELLS[cell_name]
+    ok, reason = registry.cell_runnable(arch, cell_name)
+    if not ok:
+        return {"arch": arch, "cell": cell_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    cfg = registry.get_config(arch)
+    mesh = _mesh(mesh_kind)
+    n_chips = mesh.devices.size
+    run = registry.default_run_config(arch, cell, n_chips)
+    t0 = time.time()
+
+    # active/total param counts from shapes only (no allocation)
+    model = build_model(cfg, run)
+    pshapes = jax.eval_shape(model.init, jax.random.key(0))
+    n_params = param_count(pshapes)
+    n_active = active_param_count(cfg, pshapes)
+    embed_p = cfg.vocab_size * cfg.d_model
+
+    if cell.kind == "train":
+        step, init_state, sh = ts.build_train_step(cfg, run, mesh=mesh)
+        state_shapes = jax.eval_shape(init_state, jax.random.key(0))
+        batch_shapes = registry.input_specs(cfg, cell)
+        lowered = step.lower(state_shapes, batch_shapes)
+        tokens = cell.global_batch * cell.seq_len
+        mflops = ra.model_flops("train", n_active, tokens, embed_p)
+    else:
+        fns = serve_step.build_serve_fns(
+            cfg, run, mesh=mesh, max_len=cell.seq_len,
+            batch=cell.global_batch)
+        cshapes = jax.eval_shape(fns["init_cache"])
+        if cell.kind == "prefill":
+            batch_shapes = registry.input_specs(cfg, cell)
+            lowered = fns["prefill"].lower(pshapes, cshapes, batch_shapes)
+            tokens = cell.global_batch * cell.seq_len
+            mflops = ra.model_flops("prefill", n_active, tokens, embed_p)
+        else:  # decode: one new token against a seq_len cache
+            if cfg.encoder_layers > 0:
+                enc_len = cell.seq_len // 2
+                bshapes = {
+                    "tokens": jax.ShapeDtypeStruct(
+                        (cell.global_batch, cell.seq_len - 1), jnp.int32),
+                    "enc_frames": jax.ShapeDtypeStruct(
+                        (cell.global_batch, enc_len, cfg.d_model), jnp.bfloat16),
+                }
+                cshapes = jax.eval_shape(
+                    lambda p, c, b: fns["prefill"](p, c, b)[0],
+                    pshapes, cshapes, bshapes)
+            tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+            clen = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = fns["decode"].lower(pshapes, cshapes, tok, clen)
+            mflops = ra.model_flops("decode", n_active, cell.global_batch,
+                                    embed_p)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # raw XLA numbers (loop bodies counted once — kept for reference)
+    xla_flops, xla_bytes = ra.cost_analysis_terms(compiled)
+    hlo = compiled.as_text()
+    _save_hlo(arch, cell_name, mesh_kind, hlo)
+    naive_coll = ra.collective_bytes(hlo)
+    # trip-count-aware re-analysis (the numbers the roofline uses)
+    from repro.roofline import hlo_cost
+    cost = hlo_cost.analyze(hlo)
+    terms = ra.roofline(cost.flops, cost.bytes, cost.coll_bytes,
+                        n_chips, mflops,
+                        hbm_bytes_fused=cost.bytes_fused)
+    mem = _mem_analysis_dict(compiled)
+
+    return {
+        "arch": arch, "cell": cell_name, "mesh": mesh_kind,
+        "status": "ok",
+        "n_chips": n_chips,
+        "params": n_params, "active_params": n_active,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "collectives": {k: int(v) for k, v in cost.coll_by_kind.items()},
+        "collective_ops": naive_coll.get("op_counts", {}),
+        "unknown_trip_loops": cost.unknown_trip_loops,
+        "xla_cost": {"flops_per_dev_loopbody_once": xla_flops,
+                     "bytes_per_dev_loopbody_once": xla_bytes},
+        "roofline": terms.as_dict(),
+        "run_config": {"sharding_mode": run.sharding_mode,
+                       "microbatch": run.microbatch, "remat": run.remat},
+    }
+
+
+def _result_path(arch, cell, mesh_kind):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{cell}__{mesh_kind}.json")
+
+
+def _hlo_path(arch, cell, mesh_kind):
+    d = os.path.join(RESULTS_DIR, "hlo")
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{cell}__{mesh_kind}.hlo.zst")
+
+
+def _save_hlo(arch, cell, mesh_kind, text: str) -> None:
+    import zstandard
+
+    with open(_hlo_path(arch, cell, mesh_kind), "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(text.encode()))
+
+
+def load_hlo(arch, cell, mesh_kind) -> str:
+    import zstandard
+
+    with open(_hlo_path(arch, cell, mesh_kind), "rb") as f:
+        return zstandard.ZstdDecompressor().decompress(f.read()).decode()
+
+
+def reanalyze(arch, cell, mesh_kind) -> dict:
+    """Recompute the roofline terms from saved HLO (no recompilation) —
+    used when the cost model improves."""
+    from repro.roofline import hlo_cost
+
+    path = _result_path(arch, cell, mesh_kind)
+    res = json.load(open(path))
+    if res.get("status") != "ok":
+        return res
+    hlo = load_hlo(arch, cell, mesh_kind)
+    cost = hlo_cost.analyze(hlo)
+    terms = ra.roofline(cost.flops, cost.bytes, cost.coll_bytes,
+                        res["n_chips"], res["roofline"]["model_flops_total"],
+                        hbm_bytes_fused=cost.bytes_fused)
+    res["roofline"] = terms.as_dict()
+    res["collectives"] = {k: int(v) for k, v in cost.coll_by_kind.items()}
+    res["unknown_trip_loops"] = cost.unknown_trip_loops
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute rooflines from saved HLO, no compiles")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        import glob as _glob
+        n = 0
+        for p in sorted(_glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+            base = os.path.basename(p)[:-5]
+            arch, cell, mk = base.split("__")
+            if os.path.exists(_hlo_path(arch, cell, mk)):
+                reanalyze(arch, cell, mk)
+                n += 1
+        print(f"reanalyzed {n} cells")
+        return
+
+    if args.all:
+        jobs = []
+        for arch in registry.ARCH_IDS:
+            for cell in SHAPE_CELLS:
+                for mk in args.meshes.split(","):
+                    jobs.append((arch, cell, mk))
+        done = ok = 0
+        for arch, cell, mk in jobs:
+            path = _result_path(arch, cell, mk)
+            if os.path.exists(path) and not args.force:
+                done += 1
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--cell", cell, "--mesh", mk]
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               env={**os.environ, "PYTHONPATH": "src",
+                                    "REPRO_DRYRUN_DIR": RESULTS_DIR})
+            if r.returncode == 0:
+                ok += 1
+            else:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "cell": cell, "mesh": mk,
+                               "status": "error",
+                               "error": r.stderr[-4000:]}, f, indent=1)
+                print(f"FAIL {arch} {cell} {mk}", flush=True)
+        print(f"all done: {ok} ran, {done} cached")
+        return
+
+    res = None
+    try:
+        res = run_cell(args.arch, args.cell, args.mesh)
+    except Exception:
+        res = {"arch": args.arch, "cell": args.cell, "mesh": args.mesh,
+               "status": "error", "error": traceback.format_exc()[-4000:]}
+    with open(_result_path(args.arch, args.cell, args.mesh), "w") as f:
+        json.dump(res, f, indent=1)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k in ("arch", "cell", "mesh", "status", "compile_s")}))
+    if res["status"] == "error":
+        print(res["error"][-2000:], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

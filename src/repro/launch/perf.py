@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# §Perf hillclimbing runner: re-lower + re-analyze a single (arch, cell)
+# with RunConfig overrides; results land in results/perf/<label>.json for
+# the EXPERIMENTS.md iteration log.
+#
+#   PYTHONPATH=src python -m repro.launch.perf --arch qwen3-14b \
+#       --cell train_4k --label it1_flat --set attn_shard=flat
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import SHAPE_CELLS
+from repro.launch import mesh as meshlib
+from repro.roofline import analysis as ra, hlo_cost
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "results", "perf")
+
+
+def run(arch: str, cell_name: str, overrides: dict, label: str,
+        mesh_kind: str = "single", attribute: bool = False) -> dict:
+    from repro.models.model_zoo import build_model, param_count, active_param_count
+    from repro.serve import serve_step
+    from repro.train import train_step as ts
+
+    cell = SHAPE_CELLS[cell_name]
+    cfg = registry.get_config(arch)
+    mesh = meshlib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    run_cfg = registry.default_run_config(arch, cell, n_chips)
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(run_cfg, k)
+        typed[k] = type(cur)(v) if cur is not None and not isinstance(cur, bool) \
+            else (v in ("1", "true", "True") if isinstance(cur, bool) else v)
+    run_cfg = dataclasses.replace(run_cfg, **typed)
+
+    model = build_model(cfg, run_cfg)
+    pshapes = jax.eval_shape(model.init, jax.random.key(0))
+    n_active = active_param_count(cfg, pshapes)
+    embed_p = cfg.vocab_size * cfg.d_model
+
+    t0 = time.time()
+    if cell.kind == "train":
+        step, init_state, sh = ts.build_train_step(cfg, run_cfg, mesh=mesh)
+        state_shapes = jax.eval_shape(init_state, jax.random.key(0))
+        lowered = step.lower(state_shapes, registry.input_specs(cfg, cell))
+        mflops = ra.model_flops("train", n_active,
+                                cell.global_batch * cell.seq_len, embed_p)
+    elif cell.kind == "prefill":
+        fns = serve_step.build_serve_fns(cfg, run_cfg, mesh=mesh,
+                                         max_len=cell.seq_len,
+                                         batch=cell.global_batch)
+        cshapes = jax.eval_shape(fns["init_cache"])
+        lowered = fns["prefill"].lower(pshapes, cshapes,
+                                       registry.input_specs(cfg, cell))
+        mflops = ra.model_flops("prefill", n_active,
+                                cell.global_batch * cell.seq_len, embed_p)
+    else:
+        fns = serve_step.build_serve_fns(cfg, run_cfg, mesh=mesh,
+                                         max_len=cell.seq_len,
+                                         batch=cell.global_batch)
+        cshapes = jax.eval_shape(fns["init_cache"])
+        tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+        lowered = fns["decode"].lower(pshapes, cshapes, tok,
+                                      jax.ShapeDtypeStruct((), jnp.int32))
+        mflops = ra.model_flops("decode", n_active, cell.global_batch, embed_p)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    import zstandard
+    os.makedirs(PERF_DIR, exist_ok=True)
+    with open(os.path.join(PERF_DIR, f"{arch}__{cell_name}__{label}.hlo.zst"),
+              "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(hlo.encode()))
+    cost = hlo_cost.analyze(hlo)
+    terms = ra.roofline(cost.flops, cost.bytes, cost.coll_bytes, n_chips,
+                        mflops, hbm_bytes_fused=cost.bytes_fused)
+    out = {
+        "arch": arch, "cell": cell_name, "label": label,
+        "overrides": typed, "compile_s": round(time.time() - t0, 1),
+        "roofline": terms.as_dict(),
+        "collectives": {k: int(v) for k, v in cost.coll_by_kind.items()},
+    }
+    if attribute:
+        out["attribution"] = [
+            (t, round(f, 0), round(b, 0))
+            for t, f, b in hlo_cost.attribute(hlo, depth=6, top_k=12)]
+    os.makedirs(PERF_DIR, exist_ok=True)
+    with open(os.path.join(PERF_DIR, f"{arch}__{cell_name}__{label}.json"),
+              "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="RunConfig override key=value")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--attribute", action="store_true")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    out = run(args.arch, args.cell, overrides, args.label, args.mesh,
+              args.attribute)
+    rf = out["roofline"]
+    print(json.dumps({
+        "label": args.label,
+        "compute_s": round(rf["compute_s"], 4),
+        "memory_s": round(rf["memory_s"], 4),
+        "collective_s": round(rf["collective_s"], 4),
+        "bottleneck": rf["bottleneck"],
+        "useful": round(rf["useful_flops_ratio"], 3),
+        "mfu_bound": round(rf["mfu_bound"], 4),
+    }))
+
+
+if __name__ == "__main__":
+    main()

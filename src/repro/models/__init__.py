@@ -1,0 +1,1 @@
+# LM model stack: layers, attention, MoE, RG-LRU, RWKV6, enc-dec, zoo.

@@ -1,0 +1,363 @@
+"""Transformer building blocks: norms, rope, GQA attention (blockwise
+online-softmax for train/prefill, cached for decode), gated MLP.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Compute
+dtype is the caller's (bf16 by default), softmax/normalization statistics
+in f32.  Activation sharding constraints come from models.sharding.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import cns
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size=None):
+    fan_in = in_axis_size or shape[-2] if len(shape) >= 2 else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std)
+
+
+def norm_init(dim):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def norm_apply(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(s, cap: Optional[float]):
+    if cap is None:
+        return s
+    return jnp.tanh(s / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (train / prefill): online softmax over kv chunks
+# ---------------------------------------------------------------------------
+
+def _pad_seq(x, chunk, axis):
+    s = x.shape[axis]
+    pad = (-s) % chunk
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+def blockwise_attention(
+    q: jax.Array,              # [B, Sq, H, Dh]
+    k: jax.Array,              # [B, Skv, Hkv, Dh]
+    v: jax.Array,              # [B, Skv, Hkv, Dh]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    q_offset: int = 0,         # global position of q[0] (prefill continuation)
+    scores_dtype=jnp.float32,  # bf16 halves score-block traffic; softmax
+    #                            statistics stay f32 (§Perf It5)
+) -> jax.Array:
+    B, Sq0, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = Dh ** -0.5
+
+    q, Sq = _pad_seq(q, q_chunk, 1)
+    k, Skv = _pad_seq(k, kv_chunk, 1)
+    v, _ = _pad_seq(v, kv_chunk, 1)
+    nq = q.shape[1] // q_chunk
+    nk = k.shape[1] // kv_chunk
+
+    qb = (q.reshape(B, nq, q_chunk, Hkv, G, Dh) * scale).astype(q.dtype)
+    kb = k.reshape(B, nk, kv_chunk, Hkv, Dh)
+    vb = v.reshape(B, nk, kv_chunk, Hkv, Dh)
+
+    q_pos0 = jnp.arange(q_chunk)
+    k_pos0 = jnp.arange(kv_chunk)
+
+    # windowed attention only needs kv chunks within [q - window, q]:
+    # scan that fixed-size range instead of all nk chunks (§Perf: for
+    # gemma2/recurrentgemma local layers this cuts the kv loop from
+    # S/kc chunks to (window+qc)/kc + 1).
+    nk_eff = nk
+    if window is not None and causal:
+        nk_eff = min(nk, (window + q_chunk) // kv_chunk + 2)
+
+    def q_step(_, qi):
+        qblk = qb[:, qi]                       # [B, qc, Hkv, G, Dh]
+        q_pos = q_offset + qi * q_chunk + q_pos0
+
+        def kv_step(carry, rel):
+            m, l, o = carry
+            if nk_eff != nk:
+                raw = qi + (q_offset // kv_chunk) - rel
+                ki = jnp.maximum(raw, 0)
+                in_range = raw >= 0          # clamped duplicates are masked
+            else:
+                ki = rel
+                in_range = jnp.array(True)
+            k_pos = ki * kv_chunk + k_pos0
+
+            # static-shape runtime skip: chunk fully masked -> no compute
+            last_q = q_offset + qi * q_chunk + (q_chunk - 1)
+            first_q = q_offset + qi * q_chunk
+            first_k = ki * kv_chunk
+            last_k = ki * kv_chunk + (kv_chunk - 1)
+            needed = in_range
+            if causal:
+                needed = needed & (first_k <= last_q)
+            if window is not None:
+                needed = needed & (last_k >= first_q - window)
+
+            kblk = jax.lax.dynamic_index_in_dim(kb, ki, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, ki, 1, keepdims=False)
+
+            def compute(args):
+                m, l, o = args
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qblk, kblk,
+                    preferred_element_type=scores_dtype,
+                ).astype(jnp.float32)
+                s = _softcap(s, softcap)
+                mask = k_pos[None, :] <= (q_pos[:, None] if causal else jnp.inf)
+                if window is not None:
+                    mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+                mask = mask & (k_pos[None, :] < Skv)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                pv = jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vblk,
+                    preferred_element_type=jnp.float32,
+                )
+                o_new = o * corr[..., None] + pv
+                return m_new, l_new, o_new
+
+            carry = jax.lax.cond(needed, compute, lambda a: a, (m, l, o))
+            return carry, None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk_eff))
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        # [B, Hkv, G, qc, Dh] -> [B, qc, Hkv*G, Dh]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, Dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))   # [nq, B, qc, H, Dh]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, Dh)
+    return out[:, :Sq0]
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,              # [B, 1, H, Dh]
+    k_cache: jax.Array,        # [B, S, Hkv, Dh]
+    v_cache: jax.Array,
+    cache_len: jax.Array,      # [] or [B] valid prefix length (new token incl.)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, _, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = Dh ** -0.5
+    qg = (q.reshape(B, Hkv, G, Dh) * scale)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    pos = jnp.arange(S)
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim == 1 else cl[None, None]
+    valid = pos[None, :] < cl                      # [B or 1, S]
+    if window is not None:
+        valid = valid & (pos[None, :] >= cl - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def seq_sharded_decode_attention(
+    q, k_cache, v_cache, cache_len, mesh, seq_axis: str,
+    *, softcap: Optional[float] = None,
+):
+    """Flash-decoding over a sharded KV sequence axis: each shard computes a
+    partial (max, sum, out) over its KV slice; merged with pmax/psum.
+    Used for long-context decode where one device cannot hold the cache."""
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, _, H, Dh = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    shard = S // mesh.shape[seq_axis]
+    scale = Dh ** -0.5
+
+    def local(q, k, v, cl):
+        idx = jax.lax.axis_index(seq_axis)
+        qg = q.reshape(B, Hkv, G, Dh) * scale
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                       preferred_element_type=jnp.float32)
+        s = _softcap(s, softcap)
+        pos = idx * shard + jnp.arange(shard)
+        cl = jnp.asarray(cl)
+        cl = cl[:, None] if cl.ndim == 1 else cl[None, None]
+        valid = pos[None, :] < cl
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_loc = s.max(axis=-1)
+        m_glb = jax.lax.pmax(m_loc, seq_axis)
+        p = jnp.exp(s - m_glb[..., None])
+        l_glb = jax.lax.psum(p.sum(axis=-1), seq_axis)
+        o_loc = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v,
+                           preferred_element_type=jnp.float32)
+        o = jax.lax.psum(o_loc, seq_axis) / jnp.maximum(l_glb[..., None], 1e-30)
+        return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, seq_axis), P(None, seq_axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(q, k_cache, v_cache, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# attention block params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg):
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh)),
+        "wk": dense_init(ks[1], (d, hkv * dh)),
+        "wv": dense_init(ks[2], (d, hkv * dh)),
+        "wo": dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qk_norm:
+        p["q_ln"] = norm_init(dh)
+        p["k_ln"] = norm_init(dh)
+    return p
+
+
+def attn_qkv(p, x, cfg, positions, attn_shard: str = "heads"):
+    """Project + rope.  x: [B, S, D] -> q [B,S,H,Dh], k/v [B,S,Hkv,Dh].
+
+    attn_shard="flat" (§Perf It-LM1) constrains the projection *outputs* on
+    the flattened H*Dh dim, which always divides the model axis — the
+    projections stay tensor-parallel even when the head count doesn't
+    divide (qwen3: 40 heads on a 16-wide axis).  XLA reshards at the
+    reshape into heads only for the (much cheaper) score computation.
+    """
+    B, S, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    cdt = x.dtype
+    qf = x @ p["wq"].astype(cdt)
+    kf = x @ p["wk"].astype(cdt)
+    vf = x @ p["wv"].astype(cdt)
+    if attn_shard == "flat":
+        qf = cns(qf, ("pod", "data"), None, "model")
+        kf = cns(kf, ("pod", "data"), None, "model")
+        vf = cns(vf, ("pod", "data"), None, "model")
+    q = qf.reshape(B, S, h, dh)
+    k = kf.reshape(B, S, hkv, dh)
+    v = vf.reshape(B, S, hkv, dh)
+    if attn_shard == "heads":
+        q = cns(q, ("pod", "data"), None, "model", None)
+    if cfg.qk_norm:
+        q = norm_apply(p["q_ln"], q, cfg.norm, cfg.norm_eps)
+        k = norm_apply(p["k_ln"], k, cfg.norm, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o, cfg, attn_shard: str = "heads"):
+    B, S, h, dh = o.shape
+    of = o.reshape(B, S, h * dh)
+    if attn_shard == "flat":
+        of = cns(of, ("pod", "data"), None, "model")  # row-parallel contraction
+    y = of @ p["wo"].astype(o.dtype)
+    return cns(y, ("pod", "data"), None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, gated: Optional[bool] = None):
+    gated = cfg.mlp_gated if gated is None else gated
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, f)), "wo": dense_init(ks[1], (f, d))}
+    if gated:
+        p["wg"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def _act(x, kind):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp_apply(p, x, cfg):
+    cdt = x.dtype
+    hi = x @ p["wi"].astype(cdt)
+    hi = cns(hi, ("pod", "data"), None, "model")
+    if "wg" in p:
+        hi = _act(x @ p["wg"].astype(cdt), cfg.act) * hi
+    else:
+        hi = _act(hi, cfg.act)
+    y = hi @ p["wo"].astype(cdt)
+    return cns(y, ("pod", "data"), None, None)

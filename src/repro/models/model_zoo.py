@@ -1,0 +1,42 @@
+"""Build a model object (LM or EncDecLM) from a ModelConfig."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+
+
+def build_model(cfg: ModelConfig, run: RunConfig = RunConfig()):
+    if cfg.encoder_layers > 0:
+        return EncDecLM(cfg, run)
+    return LM(cfg, run)
+
+
+def param_count(params) -> int:
+    import jax
+    import numpy as np
+
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """MoE-aware: router + top-k experts only (for MODEL_FLOPS = 6*N_active*D)."""
+    n = param_count(params)
+    if not cfg.moe:
+        return n
+    # subtract the inactive experts' share of the expert weights
+    import jax
+    import numpy as np
+
+    expert = 0
+    def walk(tree, path=""):
+        nonlocal expert
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + "/" + k)
+        else:
+            if "/moe/" in path and path.rsplit("/", 1)[-1] in ("wi", "wg", "wo"):
+                expert += int(np.prod(tree.shape))
+    walk(params)
+    inactive = expert * (1 - cfg.experts_per_token / max(cfg.num_experts, 1))
+    return int(n - inactive)

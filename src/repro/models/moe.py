@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN with sort-based dispatch and expert parallelism.
+
+Dispatch is the production TPU pattern (no [T, E, C] one-hot blow-up):
+
+  1. router top-k per token -> (expert_id, gate) pairs, flattened [T*k]
+  2. stable-sort assignments by expert; position-within-expert via running
+     rank; drop tokens past the per-expert capacity C = k*T/E * cf
+  3. scatter token indices into an [E, C] index grid, gather tokens to
+     [E, C, D], run the expert FFNs batched with a single einsum chain,
+     scatter-add gated outputs back to [T, D].
+
+Expert weights are sharded over the "model" axis (EP); GSPMD turns the
+gather/scatter into all_to_all exchanges between data and expert shards —
+the direct analogue of GraphH's Broadcast of updated values to owning
+servers (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, _act
+from repro.models.sharding import cns
+
+
+def moe_init(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e)),
+        "wi": dense_init(ks[1], (e, d, f), in_axis_size=d),
+        "wg": dense_init(ks[2], (e, d, f), in_axis_size=d),
+        "wo": dense_init(ks[3], (e, f, d), in_axis_size=f),
+    }
+
+
+def moe_capacity(num_tokens: int, cfg) -> int:
+    c = int(cfg.experts_per_token * num_tokens * cfg.moe_capacity_factor
+            / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_apply(p, x, cfg):
+    """x: [B, S, D] -> [B, S, D]."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = moe_capacity(T, cfg)
+    cdt = x.dtype
+    xt = x.reshape(T, D)
+
+    logits = (xt @ p["router"].astype(cdt)).astype(jnp.float32)   # [T, E]
+    gates, eids = jax.lax.top_k(logits, K)                        # [T, K]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # --- sort-based dispatch -------------------------------------------
+    flat_e = eids.reshape(-1)                                     # [T*K]
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+
+    # position of each assignment within its expert
+    ar = jnp.arange(T * K)
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")  # [E]
+    pos = ar - seg_start[se]                                      # rank in expert
+    keep = pos < C
+
+    # scatter token ids into the [E, C] grid (capacity-dropped slots = T)
+    grid_tok = jnp.full((E, C), T, jnp.int32)
+    grid_gate = jnp.zeros((E, C), jnp.float32)
+    lin = jnp.where(keep, se * C + pos, E * C)   # dropped -> OOB -> discarded
+    grid_tok = grid_tok.reshape(-1).at[lin].set(
+        st.astype(jnp.int32), mode="drop").reshape(E, C)
+    grid_gate = grid_gate.reshape(-1).at[lin].set(
+        sg, mode="drop").reshape(E, C)
+
+    # gather tokens -> [E, C, D] (out-of-range id T -> zeros via clamp+mask)
+    safe = jnp.minimum(grid_tok, T - 1)
+    xe = xt[safe] * (grid_tok < T)[..., None].astype(cdt)
+    xe = cns(xe, "model", ("pod", "data"), None)   # EP x DP: tokens shard over dp
+
+    # expert FFN, batched over E
+    hi = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(cdt))
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(cdt))
+    h = _act(hg, cfg.act) * hi
+    h = cns(h, "model", ("pod", "data"), None)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(cdt))
+
+    # combine back: scatter-add gated outputs to tokens
+    yw = ye * grid_gate[..., None].astype(cdt)
+    out = jnp.zeros((T + 1, D), cdt).at[grid_tok.reshape(-1)].add(
+        yw.reshape(E * C, D), mode="drop")[:T]
+    out = cns(out.reshape(B, S, D), ("pod", "data"), None, None)
+    return out

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the paper's "recurrent block"):
+    x -> ln -> [branch A: linear -> gelu]                       (gate)
+              [branch B: linear -> conv1d(w=4) -> RG-LRU]       (recurrence)
+    out = wo(A * B)
+
+RG-LRU per channel:
+    r_t = sigmoid(W_a x_t)            (recurrence gate)
+    i_t = sigmoid(W_x x_t)            (input gate)
+    a_t = exp(c * softplus(Λ) * (-r_t))            # a in (0,1), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses an associative scan over the length axis (O(log S)
+depth); decode is the single-step recurrence with h carried in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import cns
+
+_C = 8.0
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    r = cfg.rnn_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, r)),          # branch B in-proj
+        "wy": dense_init(ks[1], (d, r)),          # branch A (gate) in-proj
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, r)) * 0.02,
+        "gate_a": dense_init(ks[3], (r, r)),
+        "gate_x": dense_init(ks[4], (r, r)),
+        "a_param": jnp.log(jnp.expm1(                     # softplus^-1
+            -jnp.log(jax.random.uniform(ks[5], (r,), minval=0.9, maxval=0.999))
+            / _C)),
+        "wo": dense_init(key, (r, d)),
+    }
+
+
+def _conv1d(x, w, state=None):
+    """Causal depthwise conv.  x: [B, S, R]; w: [W, R]; state: [B, W-1, R]."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out, new_state
+
+
+def _gates(p, xb):
+    rf = jax.nn.sigmoid((xb @ p["gate_a"].astype(xb.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ p["gate_x"].astype(xb.dtype)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["a_param"]).astype(jnp.float32) * rf
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * xb.astype(jnp.float32)
+
+
+def rglru_scan(p, xb, h0=None):
+    """xb: [B, S, R] conv output.  Returns (y [B,S,R], h_last [B,R])."""
+    a, bx = _gates(p, xb)                         # [B, S, R] f32
+
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h0 + bx_1
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h.astype(xb.dtype), h[:, -1]
+
+
+def rglru_step(p, xb, h):
+    """Single decode step.  xb: [B, 1, R]; h: [B, R] f32."""
+    a, bx = _gates(p, xb)
+    h_new = a[:, 0] * h.astype(jnp.float32) + bx[:, 0]
+    return h_new.astype(xb.dtype)[:, None], h_new
+
+
+def rnn_block_init(key, cfg):
+    return rglru_init(key, cfg)
+
+
+def rnn_block_apply(p, x, cfg, cache=None):
+    """Full recurrent block.  cache: None (train) or dict with
+    {"conv": [B, W-1, R], "h": [B, R]} for decode/prefill continuation."""
+    cdt = x.dtype
+    xb = x @ p["wx"].astype(cdt)
+    gate = jax.nn.gelu(x @ p["wy"].astype(cdt))
+    xb = cns(xb, ("pod", "data"), None, "model")
+    conv_state = None if cache is None else cache["conv"]
+    xb, new_conv = _conv1d(xb, p["conv"], conv_state)
+
+    if cache is None:
+        y, h_last = rglru_scan(p, xb)
+        new_cache = None
+    elif x.shape[1] == 1:
+        y, h_last = rglru_step(p, xb, cache["h"])
+        new_cache = {"conv": new_conv, "h": h_last}
+    else:  # prefill with state
+        y, h_last = rglru_scan(p, xb, h0=cache["h"])
+        new_cache = {"conv": new_conv, "h": h_last}
+
+    out = (gate * y) @ p["wo"].astype(cdt)
+    return cns(out, ("pod", "data"), None, None), new_cache
+
+
+def rnn_cache_init(batch: int, cfg, dtype=jnp.float32):
+    r = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+        "h": jnp.zeros((batch, r), jnp.float32),
+    }

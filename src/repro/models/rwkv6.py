@@ -1,0 +1,156 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay, plus the squared-ReLU channel mix.
+
+Time mix (per head, Dk = Dv = head size):
+    state_t = diag(w_t) state_{t-1} + k_t^T v_t          [Dk, Dv]
+    out_t   = r_t (state_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0,1) data-dependent.
+
+Train/prefill runs a lax.scan over time (baseline; the chunked parallel
+form is a §Perf optimization), decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_apply, norm_init
+from repro.models.sharding import cns
+
+LORA_RANK = 32
+
+
+def rwkv_head_dim(cfg) -> int:
+    return 64
+
+
+def rwkv_init(key, cfg):
+    d = cfg.d_model
+    dh = rwkv_head_dim(cfg)
+    h = d // dh
+    ks = jax.random.split(key, 12)
+    tm = {
+        "mix": jax.random.uniform(ks[0], (5, d)),            # r,k,v,g,w mixes
+        "wr": dense_init(ks[1], (d, d)),
+        "wk": dense_init(ks[2], (d, d)),
+        "wv": dense_init(ks[3], (d, d)),
+        "wg": dense_init(ks[4], (d, d)),
+        "w_decay": jnp.full((h, dh), -2.0)                    # w0 base decay
+        + jax.random.normal(ks[5], (h, dh)) * 0.1,
+        "decay_lora_a": dense_init(ks[6], (d, LORA_RANK)),
+        "decay_lora_b": dense_init(ks[7], (LORA_RANK, d)) * 0.1,
+        "u": jax.random.normal(ks[8], (h, dh)) * 0.5,         # bonus
+        "ln_out": norm_init(d),
+        "wo": dense_init(ks[9], (d, d)),
+    }
+    cm = {
+        "mix": jax.random.uniform(ks[10], (2, d)),
+        "wk": dense_init(ks[11], (d, cfg.d_ff)),
+        "wv": dense_init(ks[11], (cfg.d_ff, d)),
+        "wr": dense_init(ks[10], (d, d)),
+    }
+    return {"tmix": tm, "cmix": cm}
+
+
+def _token_shift(x, last):
+    """previous token's activation; last: [B, 1, D] carried state."""
+    prev = jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+    return prev
+
+
+def _tm_inputs(p, x, prev):
+    xx = prev - x
+    mix = p["mix"].astype(x.dtype)
+    xr = x + xx * mix[0]
+    xk = x + xx * mix[1]
+    xv = x + xx * mix[2]
+    xg = x + xx * mix[3]
+    xw = x + xx * mix[4]
+    return xr, xk, xv, xg, xw
+
+
+def time_mix(p, x, cfg, cache=None):
+    """x: [B, S, D]; cache: {"shift": [B,1,D], "state": [B,H,Dk,Dv]} or None."""
+    B, S, D = x.shape
+    dh = rwkv_head_dim(cfg)
+    H = D // dh
+    cdt = x.dtype
+    last = (jnp.zeros((B, 1, D), cdt) if cache is None else cache["shift"])
+    prev = _token_shift(x, last)
+    xr, xk, xv, xg, xw = _tm_inputs(p, x, prev)
+
+    r = (xr @ p["wr"].astype(cdt)).reshape(B, S, H, dh)
+    k = (xk @ p["wk"].astype(cdt)).reshape(B, S, H, dh)
+    v = (xv @ p["wv"].astype(cdt)).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ p["wg"].astype(cdt))
+    lora = jnp.tanh(xw @ p["decay_lora_a"].astype(cdt)) @ p["decay_lora_b"].astype(cdt)
+    w = jnp.exp(-jnp.exp(
+        (p["w_decay"].reshape(1, 1, H, dh) + lora.reshape(B, S, H, dh))
+        .astype(jnp.float32)))                                  # [B,S,H,dh]
+
+    u = p["u"].astype(jnp.float32)
+    state0 = (jnp.zeros((B, H, dh, dh), jnp.float32)
+              if cache is None else cache["state"])
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                               # [B,H,dh] each
+        kv = k_t[..., :, None] * v_t[..., None, :]             # [B,H,dk,dv]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, out
+
+    rs = r.transpose(1, 0, 2, 3).astype(jnp.float32)
+    ks_ = k.transpose(1, 0, 2, 3).astype(jnp.float32)
+    vs = v.transpose(1, 0, 2, 3).astype(jnp.float32)
+    ws = w.transpose(1, 0, 2, 3)
+    state, outs = jax.lax.scan(step, state0, (rs, ks_, vs, ws))
+    out = outs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(cdt)
+
+    out = norm_apply(p["ln_out"], out, "rmsnorm", cfg.norm_eps) * g
+    out = out @ p["wo"].astype(cdt)
+    new_cache = {"shift": x[:, -1:], "state": state}
+    return cns(out, ("pod", "data"), None, None), new_cache
+
+
+def channel_mix(p, x, cfg, cache=None):
+    B, S, D = x.shape
+    cdt = x.dtype
+    last = (jnp.zeros((B, 1, D), cdt) if cache is None else cache["shift"])
+    prev = _token_shift(x, last)
+    xx = prev - x
+    mix = p["mix"].astype(cdt)
+    xk = x + xx * mix[0]
+    xr = x + xx * mix[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(cdt)))
+    k = cns(k, ("pod", "data"), None, "model")
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(cdt))
+    out = r * (k @ p["wv"].astype(cdt))
+    return cns(out, ("pod", "data"), None, None), {"shift": x[:, -1:]}
+
+
+def rwkv_block_apply(p, x, cfg, ln1, ln2, cache=None):
+    """Full RWKV block: x + TimeMix(ln1(x)); x + ChannelMix(ln2(x))."""
+    tc = None if cache is None else cache["tmix"]
+    cc = None if cache is None else cache["cmix"]
+    h, new_tc = time_mix(p["tmix"], norm_apply(ln1, x, cfg.norm, cfg.norm_eps),
+                         cfg, tc)
+    x = x + h
+    h, new_cc = channel_mix(p["cmix"], norm_apply(ln2, x, cfg.norm, cfg.norm_eps),
+                            cfg, cc)
+    x = x + h
+    new_cache = None if cache is None else {"tmix": new_tc, "cmix": new_cc}
+    if cache is None:
+        new_cache = {"tmix": new_tc, "cmix": new_cc}
+    return x, new_cache
+
+
+def rwkv_cache_init(batch: int, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    dh = rwkv_head_dim(cfg)
+    h = d // dh
+    return {
+        "tmix": {"shift": jnp.zeros((batch, 1, d), dtype),
+                 "state": jnp.zeros((batch, h, dh, dh), jnp.float32)},
+        "cmix": {"shift": jnp.zeros((batch, 1, d), dtype)},
+    }

@@ -1,0 +1,198 @@
+"""Sharding rules: logical -> mesh axis mapping for params and activations.
+
+LM-side distribution uses pjit/GSPMD (the graph engine uses shard_map).
+A contextvar carries (mesh, rules) so layer code can annotate activations
+with plain helper calls; when no mesh is set (CPU smoke tests) constraints
+are no-ops.
+
+Rules:
+  dp axes  = ("pod", "data") when present — batch parallel
+  tp axis  = "model"          — heads / ffn / vocab / experts
+  fsdp     = params (and optimizer state) additionally sharded over "data"
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp: bool = True                 # shard params over dp_axes[-1]
+    zero1: bool = True                # shard optimizer state over dp
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return self.dp_axes[-1] if self.fsdp else None
+
+
+_CTX: ContextVar[Optional[tuple[Mesh, Rules]]] = ContextVar("mesh_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Rules):
+    tok = _CTX.set((mesh, rules) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current() -> Optional[tuple[Mesh, Rules]]:
+    return _CTX.get()
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Make a spec legal for this mesh: drop axes the mesh doesn't have and
+    axes whose size doesn't divide the dim (NamedSharding is strict;
+    non-dividing head/vocab counts fall back to replication on that dim —
+    recorded in DESIGN.md as a hardware-adaptation note)."""
+    out = []
+    for i, s in enumerate(spec):
+        if s is None or i >= len(shape):
+            out.append(None if i >= len(shape) else s)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            out.append(None)
+            continue
+        s2 = axes[0] if len(axes) == 1 else axes
+        if shape[i] % axis_size(mesh, s2) != 0:
+            out.append(None)
+        else:
+            out.append(s2)
+    return P(*out)
+
+
+def cns(x, *spec):
+    """Constrain activation sharding (no-op without a mesh context;
+    divisibility-sanitized against the current mesh)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    sp = sanitize_spec(P(*spec), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, sp))
+
+
+def act_specs():
+    """Common activation specs resolved from the current rules context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    _, r = ctx
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by path-name heuristics
+# ---------------------------------------------------------------------------
+
+_COL_PARALLEL = ("wq", "wk", "wv", "wi", "wg", "w_rkvg", "wx", "wy")   # [.., D, F*]
+_ROW_PARALLEL = ("wo",)                                               # [.., F*, D]
+_REPLICATED = ("scale", "bias", "router", "conv", "a_param", "u", "decay_lora",
+               "mix", "pos", "w_decay", "ln")
+
+
+def _leaf_spec(path: str, ndim: int, rules: Rules) -> P:
+    f = rules.fsdp_axis
+    tp = rules.tp_axis
+    last = path.split("/")[-1]
+    is_expert = "/moe/" in path and last in ("wi", "wg", "wo")
+    if last in ("tok", "lm_head"):                 # [V, D] / [D, V]
+        if last == "tok":
+            return P(tp, f)
+        return P(f, tp)
+    if is_expert:                                   # [E, D, F] / [E, F, D]
+        if last == "wo":
+            return P(tp, None, f)
+        return P(tp, f, None)
+    if any(last == n or last.startswith(n) for n in _REPLICATED):
+        return P(*([None] * ndim))
+    if last in _COL_PARALLEL:                       # [..., D, F] col-parallel
+        spec = [None] * ndim
+        spec[-1] = tp
+        if ndim >= 2:
+            spec[-2] = f
+        return P(*spec)
+    if last in _ROW_PARALLEL:                       # [..., F, D] row-parallel
+        spec = [None] * ndim
+        if ndim >= 2:
+            spec[-2] = tp
+        spec[-1] = f
+        return P(*spec)
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_tree, rules: Rules, mesh: Optional[Mesh] = None):
+    """PartitionSpec pytree matching ``params_tree`` (arrays or ShapeDtype).
+    With a mesh, specs are divisibility-sanitized against leaf shapes."""
+    def leaf(path, x):
+        sp = _leaf_spec(_path_str(path), len(x.shape), rules)
+        if mesh is not None:
+            sp = sanitize_spec(sp, x.shape, mesh)
+        return sp
+
+    return jax.tree_util.tree_map_with_path(leaf, params_tree)
+
+
+def param_shardings(params_tree, mesh: Mesh, rules: Rules):
+    specs = param_specs(params_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_spec_from_param(spec: P, rules: Rules, shape=None,
+                              mesh: Optional[Mesh] = None) -> P:
+    """ZeRO-1: give optimizer-state copies an extra shard over the dp axis
+    on the first unsharded dim that divides (falls back to the param spec)."""
+    if not rules.zero1:
+        return spec
+    dp = rules.dp_axes[-1]
+    used = {a for s in spec if s for a in ((s,) if isinstance(s, str) else s)}
+    if dp in used:
+        return spec
+    new = list(spec)
+    for i, s in enumerate(new):
+        if s is None:
+            if shape is not None and mesh is not None and \
+                    shape[i] % axis_size(mesh, dp) != 0:
+                continue
+            new[i] = dp
+            return P(*new)
+    return spec

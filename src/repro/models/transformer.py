@@ -1,0 +1,388 @@
+"""Decoder-only LM over heterogeneous layer patterns with scan-over-cycles.
+
+The layer stack is described by cfg.layer_pattern cycled over num_layers
+(e.g. "LG" for gemma2's local/global alternation, "RRL" for
+recurrentgemma, "K" for RWKV6, "G" for vanilla).  Full cycles are stacked
+and applied with jax.lax.scan so compile time is independent of depth;
+remainder layers are unrolled.
+
+Three entry modes share the block code:
+  train   — full-sequence forward, no cache, blockwise attention
+  prefill — full-sequence forward building a decode cache
+  decode  — one token per step against the cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import rwkv6 as K
+from repro.models.sharding import cns
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Physical vocab rounded up to 256 so the vocab axis always shards over
+    the model axis (whisper 51865 / granite 49155 don't divide 16).  Logits
+    for pad rows are masked to -inf; labels never reference them."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def _mask_pad_logits(logits, cfg: ModelConfig):
+    vpad = logits.shape[-1]
+    if vpad == cfg.vocab_size:
+        return logits
+    ids = jnp.arange(vpad)
+    return jnp.where(ids >= cfg.vocab_size,
+                     jnp.asarray(-1e30, logits.dtype), logits)
+
+
+# ---------------------------------------------------------------------------
+# single block: init / apply / cache
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("G", "L"):
+        ffn = M.moe_init(ks[2], cfg) if cfg.moe else L.mlp_init(ks[2], cfg)
+        return {
+            "ln1": L.norm_init(d),
+            "attn": L.attn_init(ks[1], cfg),
+            "ln2": L.norm_init(d),
+            ("moe" if cfg.moe else "mlp"): ffn,
+        }
+    if kind == "R":
+        return {
+            "ln1": L.norm_init(d),
+            "rnn": R.rnn_block_init(ks[1], cfg),
+            "ln2": L.norm_init(d),
+            "mlp": L.mlp_init(ks[2], cfg),
+        }
+    if kind == "K":
+        return {
+            "ln1": L.norm_init(d),
+            "ln2": L.norm_init(d),
+            "rwkv": K.rwkv_init(ks[1], cfg),
+        }
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+def cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
+    if kind == "G":
+        s = max_len
+        return {"k": jnp.zeros((batch, s, hkv, dh), dtype),
+                "v": jnp.zeros((batch, s, hkv, dh), dtype)}
+    if kind == "L":
+        s = min(max_len, cfg.sliding_window)
+        return {"k": jnp.zeros((batch, s, hkv, dh), dtype),
+                "v": jnp.zeros((batch, s, hkv, dh), dtype)}
+    if kind == "R":
+        return R.rnn_cache_init(batch, cfg, dtype)
+    if kind == "K":
+        return K.rwkv_cache_init(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _ffn_apply(p, x, cfg):
+    if cfg.moe:
+        return M.moe_apply(p["moe"], x, cfg)
+    return L.mlp_apply(p["mlp"], x, cfg)
+
+
+def _write_prefill_cache(cache_kv, k, v, window: Optional[int]):
+    """Write full-sequence K/V into a (possibly rolling) cache buffer."""
+    S = k.shape[1]
+    W = cache_kv["k"].shape[1]
+    if window is None or S <= W:
+        kk = cache_kv["k"].at[:, :min(S, W)].set(
+            k[:, :min(S, W)].astype(cache_kv["k"].dtype))
+        vv = cache_kv["v"].at[:, :min(S, W)].set(
+            v[:, :min(S, W)].astype(cache_kv["v"].dtype))
+        return {"k": kk, "v": vv}
+    # rolling: keep the last W entries at slot = pos % W
+    p0 = S - W + jnp.arange(W)
+    slots = p0 % W
+    kk = cache_kv["k"].at[:, slots].set(k[:, -W:].astype(cache_kv["k"].dtype))
+    vv = cache_kv["v"].at[:, slots].set(v[:, -W:].astype(cache_kv["v"].dtype))
+    return {"k": kk, "v": vv}
+
+
+def _write_decode_cache(cache_kv, k1, v1, cache_len, window: Optional[int]):
+    """cache_len: scalar or per-batch [B] — per-slot lengths enable the
+    continuous-batching serve engine."""
+    B, W = cache_kv["k"].shape[0], cache_kv["k"].shape[1]
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    slot = cl % W if window is not None else jnp.minimum(cl, W - 1)
+    b = jnp.arange(B)
+    kk = cache_kv["k"].at[b, slot].set(k1[:, 0].astype(cache_kv["k"].dtype))
+    vv = cache_kv["v"].at[b, slot].set(v1[:, 0].astype(cache_kv["v"].dtype))
+    return {"k": kk, "v": vv}
+
+
+def block_apply(p, x, cfg: ModelConfig, run: RunConfig, kind: str,
+                mode: str, cache, cache_len, positions):
+    """Apply one block.  Returns (x, new_cache)."""
+    window = cfg.sliding_window if kind == "L" else None
+
+    if kind == "K":
+        return K.rwkv_block_apply(p["rwkv"], x, cfg, p["ln1"], p["ln2"],
+                                  cache=cache if mode != "train" else None)
+
+    if kind == "R":
+        h = L.norm_apply(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        h, new_rnn = R.rnn_block_apply(
+            p["rnn"], h, cfg, cache=cache if mode != "train" else None)
+        x = x + h
+        h = L.norm_apply(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        x = x + _ffn_apply(p, h, cfg)
+        return x, new_rnn
+
+    # attention block (G / L)
+    h = L.norm_apply(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], h, cfg, positions, run.attn_shard)
+    new_cache = cache
+    sdt = jnp.dtype(run.scores_dtype)
+    if mode == "train":
+        o = L.blockwise_attention(
+            q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+            q_chunk=run.q_chunk, kv_chunk=run.kv_chunk, scores_dtype=sdt)
+    elif mode == "prefill":
+        o = L.blockwise_attention(
+            q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+            q_chunk=run.q_chunk, kv_chunk=run.kv_chunk, scores_dtype=sdt)
+        new_cache = _write_prefill_cache(cache, k, v, window)
+    else:  # decode
+        new_cache = _write_decode_cache(cache, k, v, cache_len, window)
+        if window is not None:
+            W = new_cache["k"].shape[1]
+            eff_len = jnp.minimum(cache_len + 1, W)
+            o = L.decode_attention(q, new_cache["k"], new_cache["v"], eff_len,
+                                   window=None, softcap=cfg.attn_softcap)
+        else:
+            o = L.decode_attention(q, new_cache["k"], new_cache["v"],
+                                   cache_len + 1, window=None,
+                                   softcap=cfg.attn_softcap)
+    x = x + L.attn_out(p["attn"], o, cfg, run.attn_shard)
+    h = L.norm_apply(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    x = x + _ffn_apply(p, h, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+    run: RunConfig = RunConfig()
+
+    # -- structure ------------------------------------------------------
+    @property
+    def pattern(self) -> str:
+        return self.cfg.layer_pattern
+
+    @property
+    def n_full_cycles(self) -> int:
+        return self.cfg.num_layers // len(self.pattern)
+
+    @property
+    def tail_kinds(self) -> list[str]:
+        rem = self.cfg.num_layers % len(self.pattern)
+        return list(self.pattern[:rem])
+
+    # -- init -----------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_embed, k_cyc, k_tail, k_head = jax.random.split(key, 4)
+        params: dict[str, Any] = {
+            "embed": {"tok": (jax.random.normal(
+                k_embed, (padded_vocab(cfg), cfg.d_model)) * 0.02
+            ).astype(jnp.float32)},
+            "final_norm": L.norm_init(cfg.d_model),
+        }
+        n = self.n_full_cycles
+        cycles = {}
+        for i, kind in enumerate(self.pattern):
+            ki = jax.random.fold_in(k_cyc, i)
+            if n > 0:
+                cycles[f"{i}{kind}"] = jax.vmap(
+                    lambda kk: block_init(kk, cfg, kind)
+                )(jax.random.split(ki, n))
+        params["cycles"] = cycles
+        tail = {}
+        for i, kind in enumerate(self.tail_kinds):
+            tail[f"{i}{kind}"] = block_init(jax.random.fold_in(k_tail, i), cfg, kind)
+        params["tail"] = tail
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(
+                k_head, (cfg.d_model, padded_vocab(cfg))) * 0.02
+            ).astype(jnp.float32)
+        return params
+
+    # -- caches ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        n = self.n_full_cycles
+
+        def stack(kind):
+            one = cache_init(cfg, kind, batch, max_len, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+
+        cache = {"cycles": {f"{i}{k}": stack(k)
+                            for i, k in enumerate(self.pattern) if n > 0},
+                 "tail": {f"{i}{k}": cache_init(cfg, k, batch, max_len, dtype)
+                          for i, k in enumerate(self.tail_kinds)}}
+        return cache
+
+    # -- forward ---------------------------------------------------------
+    def _embed(self, params, tokens, extra_embeds):
+        cfg = self.cfg
+        cdt = jnp.dtype(self.run.compute_dtype)
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(cdt)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+        return cns(x, ("pod", "data"), None, None)
+
+    def _stack_forward(self, params, x, mode, cache, cache_len, positions):
+        cfg, run = self.cfg, self.run
+        pat = self.pattern
+        n = self.n_full_cycles
+
+        def cycle_body(x, inp):
+            cyc_params, cyc_cache = inp
+            new_caches = {}
+            for i, kind in enumerate(pat):
+                key = f"{i}{kind}"
+                c = None if cyc_cache is None else cyc_cache[key]
+                x, nc = block_apply(cyc_params[key], x, cfg, run, kind,
+                                    mode, c, cache_len, positions)
+                new_caches[key] = nc
+            return x, new_caches
+
+        body = cycle_body
+        if run.remat in ("block", "full") and mode == "train":
+            body = jax.checkpoint(cycle_body)
+
+        if n > 0:
+            cyc_caches = None if cache is None else cache["cycles"]
+            if cache is None:
+                def scan_body(x, p):
+                    x, _ = body(x, (p, None))
+                    return x, None
+                x, _ = jax.lax.scan(scan_body, x, params["cycles"])
+                new_cyc = None
+            else:
+                def scan_body(x, pc):
+                    p, c = pc
+                    x, nc = body(x, (p, c))
+                    return x, nc
+                x, new_cyc = jax.lax.scan(scan_body, x,
+                                          (params["cycles"], cyc_caches))
+        else:
+            new_cyc = None
+
+        new_tail = {}
+        for i, kind in enumerate(self.tail_kinds):
+            key = f"{i}{kind}"
+            c = None if cache is None else cache["tail"][key]
+            x, nc = block_apply(params["tail"][key], x, cfg, run, kind,
+                                mode, c, cache_len, positions)
+            new_tail[key] = nc
+
+        new_cache = None
+        if cache is not None:
+            new_cache = {"cycles": new_cyc, "tail": new_tail}
+        return x, new_cache
+
+    def hidden(self, params, tokens, extra_embeds=None, mode="train",
+               cache=None, cache_len=None, positions=None):
+        x = self._embed(params, tokens, extra_embeds)
+        S = x.shape[1]
+        if positions is None:
+            if mode == "decode":
+                cl = jnp.asarray(cache_len if cache_len is not None else 0)
+                positions = (jnp.broadcast_to(cl, (x.shape[0],))
+                             .astype(jnp.int32)[:, None])     # [B, 1]
+            else:
+                positions = jnp.arange(S)[None, :]
+        x, new_cache = self._stack_forward(params, x, mode, cache, cache_len,
+                                           positions)
+        x = L.norm_apply(params["final_norm"], x, self.cfg.norm, self.cfg.norm_eps)
+        return x, new_cache
+
+    def unembed(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"]["tok"].T     # [D, V]
+        return params["lm_head"]
+
+    def logits(self, params, hidden):
+        cdt = hidden.dtype
+        logits = hidden @ self.unembed(params).astype(cdt)
+        if self.cfg.logit_softcap:
+            logits = jnp.tanh(logits / self.cfg.logit_softcap) * self.cfg.logit_softcap
+        logits = _mask_pad_logits(logits, self.cfg)
+        return cns(logits, ("pod", "data"), None, "model")
+
+    # -- loss (chunked over sequence, vocab-sharded) ----------------------
+    def loss(self, params, tokens, labels, extra_embeds=None):
+        h, _ = self.hidden(params, tokens, extra_embeds, mode="train")
+        return self.chunked_xent(params, h, labels)
+
+    def chunked_xent(self, params, h, labels):
+        """Mean token xent without materializing [B, S, V] at once."""
+        B, S, D = h.shape
+        chunk = min(self.run.loss_chunk, S)
+        n = (S + chunk - 1) // chunk
+        pad = n * chunk - S
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        hs = h.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+        ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+        emb = self.unembed(params)
+        cap = self.cfg.logit_softcap
+
+        def chunk_loss(carry, inp):
+            hc, lc = inp
+            logits = (hc @ emb.astype(hc.dtype)).astype(jnp.float32)
+            if cap:
+                logits = jnp.tanh(logits / cap) * cap
+            logits = _mask_pad_logits(logits, self.cfg)
+            logits = cns(logits, ("pod", "data"), None, "model")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            valid = lc >= 0
+            tgt = jnp.take_along_axis(
+                logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+            nll = (lse - tgt) * valid
+            return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(chunk_loss, (0.0, 0.0), (hs, ls))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # -- serving ----------------------------------------------------------
+    def prefill(self, params, tokens, cache, extra_embeds=None):
+        """Returns (new_cache, last_position_logits)."""
+        h, new_cache = self.hidden(params, tokens, extra_embeds,
+                                   mode="prefill", cache=cache, cache_len=None)
+        last = h[:, -1:]
+        return new_cache, self.logits(params, last)
+
+    def decode_step(self, params, token, cache, cache_len):
+        """token: [B, 1] -> (new_cache, logits [B, 1, V])."""
+        h, new_cache = self.hidden(params, token, mode="decode",
+                                   cache=cache, cache_len=cache_len)
+        return new_cache, self.logits(params, h)

@@ -1,0 +1,451 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's HloCostAnalysis (and hence compiled.cost_analysis()) counts a while
+loop's body ONCE, ignoring the trip count — useless for scan-over-layers
+models where >95% of work sits inside loops.  This module re-derives
+
+    flops            (dot ops exact, elementwise 1/elem)
+    hbm bytes        (fusion-boundary operands + results)
+    collective bytes (operand sizes of all-gather/all-reduce/
+                      reduce-scatter/all-to-all/collective-permute)
+
+by walking the computation graph and multiplying loop bodies by their trip
+counts (parsed from the loop condition's `compare(iv, constant)` or the
+`known_trip_count` backend config).  Conditionals take the max of branches
+(pessimistic for compute, matching the runtime of a taken branch).
+
+Approximations (documented):
+  * elementwise/transcendental ops: 1 flop per output element
+  * gather/scatter bytes: 2x result + indices (random-access reads)
+  * reshape/bitcast/tuple/parameter/constant: free
+  * broadcast/iota/copy/transpose: result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# lazy type capture: tuple types embed /*index=N*/ comments (contain '='),
+# so match everything up to the first lowercase op token followed by '('.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([a-z][\w\-]*)\(")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|branch_computations|to_apply)="
+                           r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*"n"\s*:\s*"?(\d+)')
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "negate", "abs", "rsqrt", "sqrt", "sign",
+    "cosine", "sine", "floor", "ceil", "round-nearest-afz", "logistic",
+    "select", "compare", "and", "or", "xor", "not", "clamp", "atan2",
+    "exponential-minus-one", "log-plus-one", "remainder", "cbrt", "erf",
+}
+FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "rng-bit-generator",
+    "get-dimension-size", "domain", "opt-barrier",
+}
+MOVE = {"broadcast", "iota", "copy", "transpose", "reverse", "pad", "slice",
+        "concatenate", "convert", "reduce",
+        "select-and-scatter", "sort", "rng",
+        "reduce-window", "cholesky", "triangular-solve"}
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "collective-permute-start", "ragged-all-to-all"}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    line: str
+    operands: list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict                    # name -> Op
+    order: list                  # op names in order
+    root: Optional[str] = None
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0          # conservative: op-boundary traffic
+    coll_bytes: float = 0.0
+    bytes_fused: float = 0.0    # optimistic: standalone elementwise/move ops
+    #                             assumed fused away (TPU fusion granularity)
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_bytes += o.coll_bytes
+        self.bytes_fused += o.bytes_fused
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0) + v
+        self.unknown_trip_loops += o.unknown_trip_loops
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n, self.coll_bytes * n,
+                    self.bytes_fused * n,
+                    {k: v * n for k, v in self.coll_by_kind.items()},
+                    self.unknown_trip_loops)
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """Split HLO module text into computations."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{\s*$", line)
+            if m and ("(" in line or "ENTRY" in line):
+                cur = Computation(m.group(2), {}, [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, type_str, kind = dm.group(1), dm.group(2), dm.group(3)
+        # operand segment: inside the op's parens
+        try:
+            pstart = line.index(kind + "(", line.index("=")) + len(kind) + 1
+        except ValueError:
+            continue
+        depth, i = 1, pstart
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        opnds = _OPND_RE.findall(line[pstart:i - 1])
+        op = Op(name, kind, type_str, line, opnds)
+        cur.ops[name] = op
+        cur.order.append(name)
+        if stripped.startswith("ROOT"):
+            cur.root = name
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, out_b = _shape_elems_bytes(op.type_str)
+    out_e, _ = _shape_elems_bytes(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    lhs = comp.ops.get(op.operands[0]) if op.operands else None
+    if lhs is None or m is None:
+        return 2.0 * out_e  # fallback
+    lhs_dims = []
+    sm = _SHAPE_RE.search(lhs.type_str)
+    if sm:
+        lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for ci in (int(c) for c in m.group(1).split(",") if c):
+        if ci < len(lhs_dims):
+            k *= lhs_dims[ci]
+    return 2.0 * out_e * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_e, _ = _shape_elems_bytes(op.type_str)
+    rhs = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+    k = 1
+    if rhs is not None:
+        sm = _SHAPE_RE.search(rhs.type_str)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            # kernel spatial+input-feature product (all dims except output feat)
+            if dims:
+                k = 1
+                for d in dims[:-1]:
+                    k *= d
+    return 2.0 * out_e * k
+
+
+def _operand_bytes(op: Op, comp: Computation) -> float:
+    b = 0
+    for nm in op.operands:
+        src = comp.ops.get(nm)
+        if src is not None:
+            b += _shape_elems_bytes(src.type_str)[1]
+    return b
+
+
+def _trip_count(op: Op, comps: dict) -> Optional[int]:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    cm = _CALL_ATTR_RE.findall(op.line)
+    cond_name = None
+    for grp, single in cm:
+        target = grp or single
+        if "condition=" + (("{" + grp + "}") if grp else target) in op.line.replace("%", "") \
+           or ("condition=" in op.line and target in op.line.split("condition=")[1][:len(target) + 2]):
+            cond_name = target.strip().lstrip("%")
+            break
+    if cond_name is None:
+        mm = re.search(r"condition=%?([\w.\-]+)", op.line)
+        cond_name = mm.group(1) if mm else None
+    cond = comps.get(cond_name) if cond_name else None
+    if cond is None or cond.root is None:
+        return None
+    root = cond.ops[cond.root]
+    if root.kind != "compare":
+        return None
+    for nm in root.operands:
+        src = cond.ops.get(nm)
+        if src is not None and src.kind == "constant":
+            cmv = re.search(r"constant\((\d+)\)", src.line)
+            if cmv:
+                return int(cmv.group(1))
+    return None
+
+
+def comp_cost(comp: Computation, comps: dict, memo: dict) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    total = Cost()
+    for nm in comp.order:
+        op = comp.ops[nm]
+        kind = op.kind
+        out_e, out_b = _shape_elems_bytes(op.type_str)
+        if kind in FREE or kind.endswith("-done"):
+            continue
+        if kind in COLLECTIVES:
+            b = _operand_bytes(op, comp)
+            total.coll_bytes += b
+            base = kind.replace("-start", "")
+            total.coll_by_kind[base] = total.coll_by_kind.get(base, 0) + b
+            total.bytes += _operand_bytes(op, comp) + out_b
+            total.bytes_fused += _operand_bytes(op, comp) + out_b
+            continue
+        if kind == "dot":
+            total.flops += _dot_flops(op, comp)
+            total.bytes += _operand_bytes(op, comp) + out_b
+            total.bytes_fused += _operand_bytes(op, comp) + out_b
+            continue
+        if kind == "convolution":
+            total.flops += _conv_flops(op, comp)
+            total.bytes += _operand_bytes(op, comp) + out_b
+            total.bytes_fused += _operand_bytes(op, comp) + out_b
+            continue
+        if kind == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.line)
+            inner = comps.get(m.group(1)) if m else None
+            if inner is not None:
+                ic = comp_cost(inner, comps, memo)
+                # fusion: inner flops count, but bytes cross the boundary once
+                total.flops += ic.flops
+                total.coll_bytes += ic.coll_bytes
+                for k, v in ic.coll_by_kind.items():
+                    total.coll_by_kind[k] = total.coll_by_kind.get(k, 0) + v
+            total.bytes += _operand_bytes(op, comp) + out_b
+            total.bytes_fused += _operand_bytes(op, comp) + out_b
+            continue
+        if kind == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", op.line)
+            body = comps.get(mb.group(1)) if mb else None
+            trips = _trip_count(op, comps)
+            if body is not None:
+                bc = comp_cost(body, comps, memo)
+                if trips is None:
+                    trips = 1
+                    total.unknown_trip_loops += 1
+                total += bc.scaled(trips)
+            continue
+        if kind == "conditional":
+            mb = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+            branches = []
+            if mb:
+                branches = [comps.get(x.strip().lstrip("%"))
+                            for x in mb.group(1).split(",")]
+            best = Cost()
+            for br in branches:
+                if br is None:
+                    continue
+                c = comp_cost(br, comps, memo)
+                if c.flops + c.bytes > best.flops + best.bytes:
+                    best = c
+            total += best
+            total.bytes += out_b
+            continue
+        if kind in ("call", "async-start"):
+            m = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", op.line)
+            inner = comps.get(m.group(1)) if m else None
+            if inner is not None:
+                total += comp_cost(inner, comps, memo)
+            continue
+        if kind == "dynamic-update-slice":
+            # in-place: traffic is the updated slice, not the full buffer
+            upd = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+            ub = _shape_elems_bytes(upd.type_str)[1] if upd is not None else 0
+            total.bytes += 2 * ub
+            total.bytes_fused += 2 * ub
+            continue
+        if kind == "dynamic-slice":
+            total.bytes += 2 * out_b          # read slice region, write result
+            total.bytes_fused += 2 * out_b
+            continue
+        if kind in ("gather", "scatter"):
+            total.bytes += 2 * out_b + _operand_bytes(op, comp) * 0  # approx
+            total.bytes_fused += 2 * out_b
+            idx = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+            if idx is not None:
+                total.bytes += _shape_elems_bytes(idx.type_str)[1]
+                total.bytes_fused += _shape_elems_bytes(idx.type_str)[1]
+            if kind == "scatter":
+                total.flops += out_e
+            continue
+        if kind == "custom-call":
+            total.bytes += _operand_bytes(op, comp) + out_b
+            total.bytes_fused += _operand_bytes(op, comp) + out_b
+            continue
+        if kind in ELEMENTWISE:
+            total.flops += out_e
+            # fused later usually; charge boundary bytes only for large ops
+            total.bytes += _operand_bytes(op, comp) + out_b
+            continue
+        if kind in MOVE:
+            total.bytes += _operand_bytes(op, comp) + out_b
+            if kind == "reduce":
+                total.flops += _operand_bytes(op, comp) / 4.0
+            continue
+        # unknown op: move-like default
+        total.bytes += _operand_bytes(op, comp) + out_b
+    memo[comp.name] = total
+    return total
+
+
+def analyze(hlo_text: str) -> Cost:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        # fall back: the largest computation
+        entry = max(comps, key=lambda c: len(comps[c].order)) if comps else None
+    if entry is None:
+        return Cost()
+    return comp_cost(comps[entry], comps, {})
+
+
+# ---------------------------------------------------------------------------
+# attribution: where do the flops/bytes go? (the dry-run "profile")
+# ---------------------------------------------------------------------------
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_tag(line: str, depth: int = 3) -> str:
+    m = _META_RE.search(line)
+    if not m:
+        return "(no-metadata)"
+    parts = m.group(1).split("/")
+    return "/".join(parts[:depth])
+
+
+def attribute(hlo_text: str, depth: int = 4, top_k: int = 20) -> list:
+    """Group trip-count-scaled flops/bytes by jax op_name prefix.
+
+    Returns [(tag, flops, bytes)] sorted by flops+bytes-seconds-equivalent.
+    Loop bodies inherit their own ops' metadata (jax records source scopes),
+    so scan-over-layers work shows up under its model-code path.
+    """
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return []
+    buckets: dict[str, list] = {}
+
+    def walk(comp: Computation, scale: float, seen: tuple):
+        if comp.name in seen:       # recursion guard
+            return
+        for nm in comp.order:
+            op = comp.ops[nm]
+            kind = op.kind
+            out_e, out_b = _shape_elems_bytes(op.type_str)
+            if kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                body = comps.get(mb.group(1)) if mb else None
+                trips = _trip_count(op, comps) or 1
+                if body is not None:
+                    walk(body, scale * trips, seen + (comp.name,))
+                continue
+            if kind == "fusion" or kind in ("call", "async-start"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line)
+                inner = comps.get(m.group(1)) if m else None
+                if inner is not None:
+                    walk(inner, scale, seen + (comp.name,))
+                if kind == "fusion":
+                    tag = _op_tag(op.line, depth)
+                    b = buckets.setdefault(tag, [0.0, 0.0])
+                    b[1] += scale * (_operand_bytes(op, comp) + out_b)
+                continue
+            if kind == "conditional":
+                mb = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+                if mb:
+                    brs = [comps.get(x.strip().lstrip("%"))
+                           for x in mb.group(1).split(",")]
+                    sizes = [(len(b.order) if b else 0) for b in brs]
+                    big = brs[int(np.argmax(sizes))] if brs else None
+                    if big is not None:
+                        walk(big, scale, seen + (comp.name,))
+                continue
+            if kind in FREE or kind.endswith("-done"):
+                continue
+            tag = _op_tag(op.line, depth)
+            b = buckets.setdefault(tag, [0.0, 0.0])
+            if kind == "dot":
+                b[0] += scale * _dot_flops(op, comp)
+                b[1] += scale * (_operand_bytes(op, comp) + out_b)
+            elif kind == "dynamic-update-slice":
+                upd = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+                ub = _shape_elems_bytes(upd.type_str)[1] if upd else 0
+                b[1] += scale * 2 * ub
+            elif kind in ELEMENTWISE:
+                b[0] += scale * out_e
+                b[1] += scale * (_operand_bytes(op, comp) + out_b)
+            else:
+                b[1] += scale * (_operand_bytes(op, comp) + out_b)
+
+    import numpy as np  # local: keep module import-light
+    walk(comps[entry], 1.0, ())
+    rows = [(k, v[0], v[1]) for k, v in buckets.items()]
+    rows.sort(key=lambda r: -(r[1] / 197e12 + r[2] / 819e9))
+    return rows[:top_k]

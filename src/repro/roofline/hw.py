@@ -1,0 +1,8 @@
+"""Target hardware constants: TPU v5e (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s/link (~45-50 GB/s on v5e)
+HBM_BYTES = 16 * 1024**3        # 16 GiB
+VMEM_BYTES = 128 * 1024**2      # ~128 MiB vector memory
+MXU_ALIGN = 128

@@ -1,0 +1,31 @@
+"""Elastic rescale: move a train/serve state between meshes of different
+size or shape.
+
+Checkpoints store full logical arrays (train.checkpoint), so rescaling is
+"restore with the new mesh's shardings".  This module adds the in-memory
+variant (device-to-device resharding without a disk round-trip) and the
+recipe used by launch/train.py when the world size changes:
+
+    new_shardings = state_shardings(new_mesh)
+    state = reshard(state, new_shardings)
+
+The graph engine rescales by re-running stage-2 tile assignment
+(partition.assign_tiles) for the new N — tiles are mesh-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def reshard(tree, new_shardings):
+    """Device-put every leaf onto its new sharding (works across meshes)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, new_shardings,
+        is_leaf=lambda x: not isinstance(x, dict),
+    )
+
+
+def rescale_via_checkpoint(ckpt_mgr, step, state, new_shardings):
+    """Disk-mediated rescale (what a real job restart does)."""
+    ckpt_mgr.save(step, state)
+    return ckpt_mgr.restore(step, shardings=new_shardings)

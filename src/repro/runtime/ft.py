@@ -1,0 +1,77 @@
+"""Fault-tolerance orchestration: periodic + preemption checkpointing,
+crash-consistent resume, and failure-injection hooks for tests.
+
+Works with train.checkpoint.CheckpointManager:
+  * save every N steps (async-handoff friendly: state is device_get'd once)
+  * SIGTERM/SIGINT => final checkpoint before exit (preemption handling)
+  * resume() restores the latest checkpoint and the step counter; the data
+    pipeline is step-indexed (train.data), so the token stream continues
+    exactly where it left off.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Optional
+
+from repro.train.checkpoint import CheckpointManager
+
+
+class FaultTolerantLoop:
+    def __init__(self, ckpt: CheckpointManager, save_every: int = 100,
+                 on_preempt_save: bool = True):
+        self.ckpt = ckpt
+        self.save_every = save_every
+        self.preempted = False
+        self._prev_handlers = {}
+        if on_preempt_save:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._prev_handlers[sig] = signal.signal(sig, self._on_signal)
+                except ValueError:     # non-main thread (tests)
+                    pass
+
+    def _on_signal(self, signum, frame):
+        self.preempted = True
+
+    # ------------------------------------------------------------------
+    def resume_or_init(self, init_fn: Callable, shardings=None):
+        """(step, state): restore the latest checkpoint or build fresh."""
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            step, state = self.ckpt.restore(latest, shardings=shardings)
+            return step, state
+        return 0, init_fn()
+
+    def maybe_save(self, step: int, state, force: bool = False) -> bool:
+        if force or self.preempted or (self.save_every and
+                                       step % self.save_every == 0 and step > 0):
+            self.ckpt.save(step, state)
+            return True
+        return False
+
+    def should_stop(self) -> bool:
+        return self.preempted
+
+    def restore_handlers(self):
+        for sig, h in self._prev_handlers.items():
+            signal.signal(sig, h)
+
+
+class FailureInjector:
+    """Deterministic failure injection for resilience tests: raises
+    SimulatedFailure at the given steps."""
+
+    def __init__(self, fail_at_steps: set[int]):
+        self.fail_at = set(fail_at_steps)
+        self.failures = 0
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.failures += 1
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+class SimulatedFailure(RuntimeError):
+    pass

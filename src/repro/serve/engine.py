@@ -1,0 +1,160 @@
+"""Batched serving engine with continuous batching (slot refill).
+
+Requests carry their own prompt/length; the engine keeps B cache slots:
+
+  * waves of prefill fill empty slots (per-slot prefill, KV inserted into
+    the batched cache — decoder-only archs), per-slot cache_len vector;
+  * one decode step advances every active slot;
+  * finished slots (EOS or max_new) are refilled from the queue.
+
+Recurrent-state archs (R/K layers) and enc-dec run in wave mode (equal
+prompt lengths per wave) — noted limitation of slot insertion for
+stateful layers is handled by per-slot state insertion as well (states
+have a batch axis too), so they also support refill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.model_zoo import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [L] int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 => greedy
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+def _insert_slot(batched, single, slot: int):
+    """Insert a 1-batch cache pytree into slot `slot` of a batched cache."""
+    def leaf(path, full, one):
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        axis = 1 if top in ("cycles", "dec", "xkv") else 0
+        idx = [slice(None)] * full.ndim
+        idx[axis] = slot
+        src_idx = [slice(None)] * one.ndim
+        src_idx[axis] = 0
+        return full.at[tuple(idx)].set(one[tuple(src_idx)])
+
+    return jax.tree_util.tree_map_with_path(leaf, batched, single)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, run: RunConfig, params,
+                 slots: int = 4, max_len: int = 512,
+                 cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.run = run
+        self.model = build_model(cfg, run)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = self.model.init_cache(slots, max_len, cache_dtype)
+        self.single_cache_fn = lambda: self.model.init_cache(1, max_len, cache_dtype)
+        self._prefill1 = jax.jit(
+            lambda p, c, t: self.model.prefill(p, t, c))
+        self._decode = jax.jit(
+            lambda p, c, t, cl: self.model.decode_step(p, t, c, cl))
+        self.cache_len = np.zeros(slots, np.int32)
+        self.active = np.zeros(slots, bool)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.slot_out: list[list] = [[] for _ in range(slots)]
+        self.stats = dict(prefill_calls=0, decode_steps=0, tokens=0)
+
+    # ------------------------------------------------------------------
+    def _fill_slot(self, slot: int, req: Request) -> None:
+        t0 = time.perf_counter()
+        sc = self.single_cache_fn()
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        sc, logits = self._prefill1(self.params, sc, toks)
+        self.cache = _insert_slot(self.cache, sc, slot)
+        nxt = self._sample(logits[0, -1], req)
+        self.cache_len[slot] = len(req.prompt)
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        self.slot_out[slot] = [int(nxt)]
+        self.stats["prefill_calls"] += 1
+        self._prefill_s = time.perf_counter() - t0
+
+    def _sample(self, logits, req: Request):
+        if req.temperature <= 0:
+            return int(jnp.argmax(logits))
+        p = jax.nn.softmax(logits / req.temperature)
+        return int(np.random.default_rng(req.rid + len(self.slot_out)).choice(
+            len(p), p=np.asarray(p, dtype=np.float64) / float(np.sum(p))))
+
+    def _slot_done(self, slot: int) -> bool:
+        req = self.slot_req[slot]
+        out = self.slot_out[slot]
+        if len(out) >= req.max_new_tokens:
+            return True
+        if req.eos_id is not None and out and out[-1] == req.eos_id:
+            return True
+        if self.cache_len[slot] + len(out) >= self.max_len - 1:
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def run_requests(self, requests: list[Request]) -> list[Completion]:
+        queue = list(requests)
+        done: list[Completion] = []
+        completions: dict[int, Completion] = {}
+
+        while queue or self.active.any():
+            # refill empty slots (continuous batching)
+            for s in range(self.slots):
+                if not self.active[s] and queue:
+                    req = queue.pop(0)
+                    self._fill_slot(s, req)
+                    completions[req.rid] = Completion(req.rid, [],
+                                                      prefill_s=self._prefill_s)
+            if not self.active.any():
+                break
+
+            # one decode step for every slot (inactive slots decode garbage,
+            # results discarded — the batched step is a single jit call)
+            last = np.zeros((self.slots, 1), np.int32)
+            for s in range(self.slots):
+                if self.active[s]:
+                    last[s, 0] = self.slot_out[s][-1]
+            t0 = time.perf_counter()
+            cl = jnp.asarray(self.cache_len + np.maximum(
+                np.array([len(o) for o in self.slot_out]) - 1, 0), jnp.int32)
+            self.cache, logits = self._decode(
+                self.params, self.cache, jnp.asarray(last), cl)
+            dt = time.perf_counter() - t0
+            self.stats["decode_steps"] += 1
+
+            for s in range(self.slots):
+                if not self.active[s]:
+                    continue
+                req = self.slot_req[s]
+                nxt = self._sample(logits[s, -1], req)
+                self.slot_out[s].append(int(nxt))
+                completions[req.rid].decode_s += dt / max(self.active.sum(), 1)
+                self.stats["tokens"] += 1
+                if self._slot_done(s):
+                    comp = completions[req.rid]
+                    comp.tokens = list(self.slot_out[s])
+                    done.append(comp)
+                    self.active[s] = False
+                    self.slot_req[s] = None
+        return done

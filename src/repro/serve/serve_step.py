@@ -1,0 +1,156 @@
+"""Serve step builders: jit-compiled prefill and decode functions with
+mesh-aware shardings — these are what decode_* / long_* dry-run cells lower.
+
+KV-cache shardings: batch over dp axes, kv-heads over "model" (GSPMD pads
+when head counts don't divide — noted in DESIGN.md).  For long-context
+cells the per-layer global KV cache can instead be sharded over the
+*sequence* axis ("seq_shard_decode"), pairing with the flash-decoding
+attention in models.layers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import sharding as shd
+from repro.models.model_zoo import build_model
+
+
+def cache_pspec(path: str, ndim: int, rules: shd.Rules,
+                seq_shard: bool = False) -> P:
+    """KV leaves: [n_cyc?, B, S, Hkv, Dh]; rnn/rwkv states: [.., B, ...]."""
+    dp = rules.dp
+    if ndim >= 4:          # kv cache (maybe with leading stack dim)
+        spec = [None] * ndim
+        spec[-4] = dp
+        if seq_shard:
+            spec[-3] = rules.tp_axis
+        else:
+            spec[-2] = rules.tp_axis
+        return P(*spec)
+    if ndim >= 2:          # recurrent states [.., B, ...]
+        spec = [None] * ndim
+        if ndim == 2:
+            spec[0] = dp
+        else:
+            spec[-3 if ndim >= 3 else 0] = dp
+        return P(*spec)
+    return P()
+
+
+def _cache_shardings(cache_shapes, mesh, rules, seq_shard=False):
+    def leaf(path, x):
+        p = shd._path_str(path)
+        ndim = len(x.shape)
+        if p.endswith("k") or p.endswith("v"):
+            sp = cache_pspec(p, ndim, rules, seq_shard)
+        else:
+            # recurrent state leaves: shard the batch dim
+            spec = [None] * ndim
+            bidx = 1 if ndim >= 3 else 0   # stacked [n_cyc, B, ...] vs [B, ...]
+            spec[bidx] = rules.dp
+            sp = P(*spec)
+        return NamedSharding(mesh, shd.sanitize_spec(sp, x.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def build_serve_fns(
+    cfg: ModelConfig,
+    run: RunConfig,
+    mesh: Optional[Mesh] = None,
+    max_len: int = 2048,
+    batch: int = 1,
+    cache_dtype=jnp.bfloat16,
+):
+    """Returns dict with jitted prefill/decode fns + shardings + cache init."""
+    model = build_model(cfg, run)
+    rules = None
+    if mesh is not None:
+        rules = shd.Rules(
+            dp_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+            fsdp=run.sharding_mode == "fsdp", zero1=False)
+
+    def init_cache():
+        return model.init_cache(batch, max_len, cache_dtype)
+
+    def prefill(params, cache, batch_inputs):
+        ctx = shd.use_mesh(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            if cfg.encoder_layers > 0:
+                return model.prefill(params, batch_inputs["tokens"], cache,
+                                     batch_inputs["enc_frames"])
+            return model.prefill(params, batch_inputs["tokens"], cache,
+                                 extra_embeds=batch_inputs.get("patch_embeds"))
+
+    def decode(params, cache, token, cache_len):
+        ctx = shd.use_mesh(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            return model.decode_step(params, token, cache, cache_len)
+
+    if mesh is None:
+        return dict(model=model, init_cache=init_cache,
+                    prefill=jax.jit(prefill), decode=jax.jit(decode),
+                    shardings=None, rules=None)
+
+    pshapes = jax.eval_shape(model.init, jax.random.key(0))
+    pspecs = shd.param_specs(pshapes, rules, mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    cshapes = jax.eval_shape(init_cache)
+    cshard = _cache_shardings(cshapes, mesh, rules, run.seq_shard_decode)
+    dp = rules.dp
+    # batch=1 (long-context) can't shard over dp -> replicate tokens/cache B
+    dp_ok = batch % shd.axis_size(mesh, dp) == 0
+    tok_shard = NamedSharding(mesh, P(dp) if dp_ok else P())
+    rep = NamedSharding(mesh, P())
+
+    in_batch_shardings = {"tokens": tok_shard}
+    if cfg.encoder_layers > 0:
+        in_batch_shardings["enc_frames"] = NamedSharding(mesh, P(dp) if dp_ok else P())
+    if cfg.frontend == "vision":
+        in_batch_shardings["patch_embeds"] = NamedSharding(mesh, P(dp) if dp_ok else P())
+
+    # decode consumes the *prefilled* cache, whose structure can be richer
+    # than init_cache (whisper adds cross-attention K/V at prefill time).
+    if cfg.encoder_layers > 0:
+        enc_len = max_len // 2
+        batch_shapes = {
+            "tokens": jax.ShapeDtypeStruct((batch, max_len - 1), jnp.int32),
+            "enc_frames": jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model),
+                                               jnp.bfloat16),
+        }
+        full_cache_shapes = jax.eval_shape(
+            lambda p, c, b: prefill(p, c, b)[0], pshapes, cshapes, batch_shapes)
+        dec_cshard = _cache_shardings(full_cache_shapes, mesh, rules,
+                                      run.seq_shard_decode)
+    else:
+        dec_cshard = cshard
+
+    prefill_j = jax.jit(
+        prefill,
+        in_shardings=(pshard, cshard, in_batch_shardings),
+        donate_argnums=(1,),
+    )
+    decode_j = jax.jit(
+        decode,
+        in_shardings=(pshard, dec_cshard, tok_shard, rep),
+        donate_argnums=(1,),
+    )
+    return dict(model=model, init_cache=init_cache, prefill=prefill_j,
+                decode=decode_j,
+                shardings=dict(params=pshard, cache=cshard,
+                               dec_cache=dec_cshard, specs=pspecs),
+                rules=rules)
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,131 @@
+"""Optimizers (AdamW, Adafactor-lite) + LR schedules + gradient transforms.
+
+Plain-pytree implementations (no optax in this environment).  Optimizer
+state shardings are derived in launch/mesh.py via
+sharding.opt_state_spec_from_param (ZeRO-1: m/v sharded over the data
+axis on top of the param sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# GraphH-style gradient compression: top-k sparsification + error feedback
+# (the paper's hybrid dense/sparse broadcast applied to DP gradient exchange)
+# ---------------------------------------------------------------------------
+
+def ef_init(params) -> dict:
+    return {"residual": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def topk_compress(grads, ef_state, density: float = 0.01):
+    """Keep the top `density` fraction of each gradient tensor (by |g|),
+    accumulate the rest into the error-feedback residual.
+
+    Returns (sparse grads, new ef state, stats with measured wire ratio):
+    on a cluster the sparse tensors are what crosses the network (as
+    (idx, val) pairs — GraphH's sparse mode), so wire bytes scale with
+    density * (1 + idx overhead) instead of 1.0.
+    """
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        flat = jnp.abs(acc.reshape(-1))
+        k = max(1, int(density * flat.shape[0]))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = jnp.abs(acc) >= thresh
+        sent = jnp.where(mask, acc, 0.0)
+        resid = acc - sent
+        return sent.astype(g.dtype), resid, mask.mean()
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef_state["residual"])
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    mean_density = jnp.mean(jnp.stack([o[2] for o in outs]))
+    # wire model: dense = 4B/elem; sparse = density * (4B idx + 4B val)
+    wire_ratio = mean_density * 2.0
+    return new_g, {"residual": new_r}, {"density": mean_density,
+                                        "wire_ratio": wire_ratio}

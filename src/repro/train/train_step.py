@@ -1,0 +1,145 @@
+"""Train step builder: microbatched grad accumulation, remat, optional
+gradient compression, mesh-aware shardings.
+
+``build_train_step`` returns (step_fn, init_state_fn) where step_fn is
+jit-compiled with explicit in/out shardings when a mesh is given — the
+same function the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import sharding as shd
+from repro.models.model_zoo import build_model
+from repro.train import optimizer as opt
+
+
+def model_loss_fn(model, cfg: ModelConfig):
+    """Uniform loss entry point across families."""
+    def loss_fn(params, batch):
+        if cfg.encoder_layers > 0:
+            return model.loss(params, batch["tokens"], batch["labels"],
+                              batch["enc_frames"])
+        if cfg.frontend == "vision":
+            return model.loss(params, batch["tokens"], batch["labels"],
+                              extra_embeds=batch["patch_embeds"])
+        return model.loss(params, batch["tokens"], batch["labels"])
+    return loss_fn
+
+
+def _microbatch(batch, n: int, i: int):
+    def slc(x):
+        b = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+    return jax.tree.map(slc, batch)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    run: RunConfig,
+    opt_cfg: opt.OptConfig = opt.OptConfig(),
+    mesh: Optional[Mesh] = None,
+    rules: Optional[shd.Rules] = None,
+    donate: bool = True,
+):
+    """Returns (jitted step, init_fn, shardings dict)."""
+    model = build_model(cfg, run)
+    loss_fn = model_loss_fn(model, cfg)
+    use_ef = run.grad_compression == "topk"
+
+    def raw_step(state, batch):
+        params = state["params"]
+        nmb = run.microbatch
+
+        def one_micro(i, acc):
+            mb = _microbatch(batch, nmb, i) if nmb > 1 else batch
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            return (acc[0] + loss,
+                    jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 acc[1], grads))
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        loss_sum, grads = jax.lax.fori_loop(0, nmb, one_micro, (0.0, zero))
+        loss = loss_sum / nmb
+        grads = jax.tree.map(lambda g: g / nmb, grads)
+
+        if run.grad_compression == "bf16":
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(jnp.float32),
+                                 grads)
+        stats_extra = {}
+        ef_state = state.get("ef")
+        if use_ef:
+            grads, ef_state, cstats = opt.topk_compress(grads, ef_state)
+            stats_extra = cstats
+
+        new_params, opt_state, stats = opt.adamw_update(
+            params, grads, state["opt"], opt_cfg)
+        new_state = {"params": new_params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        if use_ef:
+            new_state["ef"] = ef_state
+        stats = {**stats, **stats_extra, "loss": loss}
+        return new_state, stats
+
+    def wrapped_step(state, batch):
+        if mesh is None:
+            return raw_step(state, batch)
+        with shd.use_mesh(mesh, rules):
+            return raw_step(state, batch)
+
+    def init_state(key):
+        params = model.init(key)
+        state = {"params": params, "opt": opt.adamw_init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if use_ef:
+            state["ef"] = opt.ef_init(params)
+        return state
+
+    if mesh is None:
+        return jax.jit(wrapped_step, donate_argnums=(0,) if donate else ()), \
+            init_state, None
+
+    # --- mesh-aware shardings -------------------------------------------
+    rules = rules or shd.Rules(dp_axes=tuple(a for a in ("pod", "data")
+                                             if a in mesh.axis_names),
+                               fsdp=run.sharding_mode == "fsdp",
+                               zero1=run.zero1)
+    shapes = jax.eval_shape(init_state, jax.random.key(0))
+    pspecs = state_specs(shapes, rules, mesh)
+    state_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    batch_sharding = NamedSharding(mesh, P(rules.dp))
+    step = jax.jit(
+        wrapped_step,
+        in_shardings=(state_shardings, batch_sharding),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return step, init_state, dict(state=state_shardings, batch=batch_sharding,
+                                  rules=rules, specs=pspecs)
+
+
+def state_specs(state_shapes, rules: shd.Rules, mesh=None):
+    """PartitionSpec tree for the full train state."""
+    param_sp = shd.param_specs(state_shapes["params"], rules, mesh)
+
+    def opt_sp(spec, shape_leaf):
+        return shd.opt_state_spec_from_param(spec, rules, shape_leaf.shape, mesh)
+
+    def map_opt():
+        return jax.tree.map(opt_sp, param_sp, state_shapes["params"],
+                            is_leaf=lambda x: isinstance(x, P))
+
+    out = {"params": param_sp,
+           "opt": {"m": map_opt(), "v": map_opt(), "step": P()},
+           "step": P()}
+    if "ef" in state_shapes:
+        out["ef"] = {"residual": map_opt()}
+    return out

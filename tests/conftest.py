@@ -1,0 +1,45 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device flag is ONLY for
+# the dry-run entry point).  Distributed tests spawn subprocesses that set
+# their own XLA_FLAGS.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    """Deduped random directed graph (300 vertices, ~1.8k edges)."""
+    rng = np.random.default_rng(7)
+    nv, ne = 300, 2000
+    src = rng.integers(0, nv, ne)
+    dst = rng.integers(0, nv, ne)
+    key = src * nv + dst
+    _, idx = np.unique(key, return_index=True)
+    return nv, src[idx], dst[idx]
+
+
+@pytest.fixture(scope="session")
+def small_store(small_graph, tmp_path_factory):
+    from repro.graphio import spe
+    from repro.graphio.formats import TileStore
+
+    nv, src, dst = small_graph
+    store = TileStore(str(tmp_path_factory.mktemp("store")))
+    plan = spe.preprocess_arrays(src, dst, None, nv, store, tile_size=128)
+    return store, plan, (nv, src, dst)
+
+
+@pytest.fixture(scope="session")
+def nx_pagerank(small_graph):
+    import networkx as nx
+
+    nv, src, dst = small_graph
+    G = nx.DiGraph()
+    G.add_nodes_from(range(nv))
+    G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    pr = nx.pagerank(G, alpha=0.85, tol=1e-12, max_iter=500)
+    return np.array([pr[i] for i in range(nv)])

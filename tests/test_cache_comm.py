@@ -1,0 +1,116 @@
+"""Edge cache (paper §III-D-2) and hybrid communication (§III-D-3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm
+from repro.core.cache import DEFAULT_GAMMAS, EdgeCache, auto_select_mode
+from repro.graphio import formats
+
+
+# --------------------------- cache ---------------------------------------
+
+def test_auto_select_mode_paper_rule():
+    # min i s.t. working_set / gamma_i <= C, else mode 3
+    assert auto_select_mode(100, 200) == 1          # raw fits
+    assert auto_select_mode(300, 200) == 2          # needs 2x
+    assert auto_select_mode(700, 200) == 3          # needs 4x
+    assert auto_select_mode(900, 200) == 4          # needs 5x
+    assert auto_select_mode(10_000, 200) == 3       # nothing fits -> mode 3
+
+
+def test_cache_hit_miss_eviction(small_store):
+    store, plan, _ = small_store
+    sizes = [store.tile_disk_bytes(t) for t in range(plan.num_tiles)]
+    cache = EdgeCache(store, capacity_bytes=sum(sizes[:3]) + 64, mode=1)
+    cache.get(0), cache.get(1)
+    assert cache.stats.misses == 2
+    cache.get(0)
+    assert cache.stats.hits == 1
+    # fill beyond capacity -> eviction of LRU (tile 1 is older than 0)
+    for t in range(plan.num_tiles):
+        cache.get(t)
+    assert cache.stats.evictions > 0
+    assert cache.resident_bytes() <= cache.capacity_bytes
+
+
+def test_cache_modes_equivalent_content(small_store):
+    store, plan, _ = small_store
+    tiles = {}
+    for mode in (1, 2, 3, 4):
+        c = EdgeCache(store, 1 << 30, mode)
+        t = c.get(1)
+        t2 = c.get(1)     # from cache (decompression path)
+        assert c.stats.hits == 1
+        np.testing.assert_array_equal(t.src, t2.src)
+        tiles[mode] = t2
+    for mode in (2, 3, 4):
+        np.testing.assert_array_equal(tiles[1].src, tiles[mode].src)
+        np.testing.assert_array_equal(tiles[1].dst_local, tiles[mode].dst_local)
+
+
+def test_compressed_modes_smaller(small_store):
+    store, plan, _ = small_store
+    blob = formats.decompress_blob(store.read_tile_blob(0), store.disk_mode)
+    raw = len(formats.compress_blob(blob, 1))
+    z1 = len(formats.compress_blob(blob, 2))
+    z9 = len(formats.compress_blob(blob, 4))
+    assert z1 < raw and z9 <= z1
+
+
+@given(st.binary(min_size=0, max_size=4096), st.sampled_from([1, 2, 3, 4]))
+@settings(max_examples=30, deadline=None)
+def test_blob_roundtrip(blob, mode):
+    assert formats.decompress_blob(formats.compress_blob(blob, mode), mode) == blob
+
+
+# --------------------------- hybrid comm ---------------------------------
+
+def test_plan_broadcast_mode_switch():
+    nv = 1000
+    vals = np.random.default_rng(0).normal(size=nv).astype(np.float32)
+    dense_upd = np.ones(nv, bool)
+    sparse_upd = np.zeros(nv, bool)
+    sparse_upd[:50] = True
+    rec_d = comm.plan_broadcast(vals, dense_upd)
+    rec_s = comm.plan_broadcast(vals, sparse_upd)
+    assert rec_d.mode == "dense" and rec_s.mode == "sparse"
+    # sparse payload is much smaller at 5% density
+    assert rec_s.raw_bytes < rec_d.raw_bytes / 4
+    # threshold boundary
+    upd = np.zeros(nv, bool)
+    upd[:400] = True
+    assert comm.plan_broadcast(vals, upd).mode == "dense"
+    upd[:] = False
+    upd[:399] = True
+    assert comm.plan_broadcast(vals, upd).mode == "sparse"
+
+
+def test_wire_bytes_model_matches_payloads():
+    nv = 4096
+    vals = np.zeros(nv, np.float32)
+    upd = np.zeros(nv, bool)
+    upd[:100] = True
+    est = comm.wire_bytes_estimate(nv, 100 / nv)
+    assert est == len(comm.sparse_payload(vals, upd))
+    upd[:] = True
+    est_d = comm.wire_bytes_estimate(nv, 1.0)
+    assert est_d == len(comm.dense_payload(vals, upd))
+
+
+def test_compression_reduces_wire_bytes():
+    rng = np.random.default_rng(0)
+    nv = 10000
+    # correlated values compress well
+    vals = np.repeat(rng.normal(size=nv // 10), 10).astype(np.float32)
+    upd = np.ones(nv, bool)
+    raw = comm.plan_broadcast(vals, upd, compressor="none")
+    z = comm.plan_broadcast(vals, upd, compressor="zstd-1")
+    assert z.wire_bytes < raw.wire_bytes
+
+
+def test_sparse_capacity_bound():
+    for nv in (100, 1000, 12345):
+        k = comm.sparse_capacity(nv)
+        assert k >= int(np.ceil(nv * comm.DENSITY_THRESHOLD))
+        assert k <= nv or nv < 128

@@ -1,0 +1,145 @@
+"""Per-arch smoke tests (reduced configs): one train step, prefill/decode
+consistency, output shapes, no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import RunConfig, ShapeCell
+from repro.models.model_zoo import build_model, param_count
+
+RUN = RunConfig(remat="none", q_chunk=16, kv_chunk=16, loss_chunk=16,
+                compute_dtype="float32")
+CELL = ShapeCell("smoke", "train", 32, 2)
+
+
+def _loss(model, cfg, params, batch):
+    if cfg.encoder_layers > 0:
+        return model.loss(params, batch["tokens"], batch["labels"],
+                          batch["enc_frames"])
+    if cfg.frontend == "vision":
+        return model.loss(params, batch["tokens"], batch["labels"],
+                          extra_embeds=batch["patch_embeds"])
+    return model.loss(params, batch["tokens"], batch["labels"])
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    cfg = registry.get_config(arch, reduced=True)
+    model = build_model(cfg, RUN)
+    params = model.init(jax.random.key(0))
+    assert param_count(params) > 0
+    batch = {k: jnp.asarray(v) for k, v in
+             registry.synthetic_batch(cfg, CELL, batch=2, seq=32).items()}
+    loss, grads = jax.value_and_grad(lambda p: _loss(model, cfg, p, batch))(params)
+    assert bool(jnp.isfinite(loss)), arch
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b",
+                                  "recurrentgemma-9b", "rwkv6-1.6b",
+                                  "whisper-base"])
+def test_decode_matches_full_forward(arch):
+    cfg = registry.get_config(arch, reduced=True)
+    model = build_model(cfg, RUN)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(0)
+    B, S = 2, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    if cfg.encoder_layers > 0:
+        frames = jnp.asarray(rng.normal(size=(B, S // 2, cfg.d_model))
+                             .astype(np.float32))
+        enc = model.encode(params, frames)
+        xkv = model._cross_kv(params, enc)
+        h, _ = model._dec_forward(params, toks, xkv, "train", None, None)
+        full = model._logits(params, h[:, -1:])
+        cache = model.init_cache(B, S, dtype=jnp.float32)
+        cache, _ = model.prefill(params, toks[:, :S - 1], cache, frames)
+        _, dec = model.decode_step(params, toks[:, S - 1:S], cache,
+                                   jnp.int32(S - 1))
+    else:
+        h, _ = model.hidden(params, toks, mode="train")
+        full = model.logits(params, h[:, -1:])
+        cache = model.init_cache(B, S, dtype=jnp.float32)
+        cache, _ = model.prefill(params, toks[:, :S - 1], cache)
+        _, dec = model.decode_step(params, toks[:, S - 1:S], cache,
+                                   jnp.int32(S - 1))
+    assert float(jnp.max(jnp.abs(full - dec))) < 2e-3, arch
+
+
+def test_moe_decode_matches_with_high_capacity():
+    cfg = dataclasses.replace(registry.get_config("dbrx-132b", reduced=True),
+                              moe_capacity_factor=8.0)
+    model = build_model(cfg, RUN)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    h, _ = model.hidden(params, toks, mode="train")
+    full = model.logits(params, h[:, -1:])
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    cache, _ = model.prefill(params, toks[:, :S - 1], cache)
+    _, dec = model.decode_step(params, toks[:, S - 1:S], cache, jnp.int32(S - 1))
+    assert float(jnp.max(jnp.abs(full - dec))) < 2e-3
+
+
+def test_sliding_window_cache_rolls():
+    """gemma2-style local layer with S > window: rolling cache equals the
+    full-forward last-token logits."""
+    cfg = registry.get_config("gemma2-2b", reduced=True)   # window 16
+    model = build_model(cfg, RUN)
+    params = model.init(jax.random.key(2))
+    rng = np.random.default_rng(0)
+    B, S = 1, 30   # exceeds window 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    h, _ = model.hidden(params, toks, mode="train")
+    full = model.logits(params, h[:, -1:])
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    cache, _ = model.prefill(params, toks[:, :S - 1], cache)
+    _, dec = model.decode_step(params, toks[:, S - 1:S], cache, jnp.int32(S - 1))
+    assert float(jnp.max(jnp.abs(full - dec))) < 2e-3
+
+
+def test_blockwise_attention_matches_naive():
+    from repro.models.layers import blockwise_attention
+
+    rng = np.random.default_rng(0)
+    B, S, H, Hkv, Dh = 2, 37, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)).astype(np.float32))
+    for window in (None, 9):
+        out = blockwise_attention(q, k, v, causal=True, window=window,
+                                  q_chunk=8, kv_chunk=8)
+        # naive reference
+        kk = jnp.repeat(k, H // Hkv, axis=2)
+        vv = jnp.repeat(v, H // Hkv, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(Dh)
+        pos = np.arange(S)
+        mask = pos[None, :] <= pos[:, None]
+        if window is not None:
+            mask &= pos[None, :] > pos[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_vocab_padding_masked():
+    cfg = registry.get_config("whisper-base", reduced=True)
+    from repro.models.transformer import padded_vocab
+    assert padded_vocab(cfg) % 256 == 0
+    model = build_model(cfg, RUN)
+    params = model.init(jax.random.key(0))
+    assert params["embed"]["tok"].shape[0] == padded_vocab(cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32))
+    frames = jnp.asarray(rng.normal(size=(1, 4, cfg.d_model)).astype(np.float32))
+    cache = model.init_cache(1, 16, dtype=jnp.float32)
+    cache, logits = model.prefill(params, toks, cache, frames)
+    pad_region = np.asarray(logits)[..., cfg.vocab_size:]
+    assert np.all(pad_region < -1e20), "pad logits must be -inf-ish"

@@ -1,0 +1,91 @@
+"""Two-stage partitioning invariants (paper §III-B), incl. property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as pt
+from repro.core.tiles import build_tile, stack_tiles
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=300),
+       st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_splitter_invariants(degs, tile_size):
+    in_deg = np.asarray(degs, dtype=np.int64)
+    sp = pt.make_splitter(in_deg, tile_size)
+    # covers all vertices exactly once, monotone
+    assert sp[0] == 0 and sp[-1] == len(degs)
+    assert np.all(np.diff(sp) >= 1)
+    # edge conservation
+    csum = np.concatenate([[0], np.cumsum(in_deg)])
+    per_tile = csum[sp[1:]] - csum[sp[:-1]]
+    assert per_tile.sum() == in_deg.sum()
+    # paper's rule: every tile except the last stops at the first vertex
+    # that pushes it past S => tile minus its last vertex is < S
+    for t in range(len(sp) - 2):
+        lo, hi = sp[t], sp[t + 1]
+        if hi - lo > 1:
+            assert (csum[hi - 1] - csum[lo]) < tile_size
+
+
+@given(st.integers(1, 500), st.integers(1, 2000), st.integers(8, 256))
+@settings(max_examples=30, deadline=None)
+def test_plan_partition_caps(nv, ne, tile_size):
+    rng = np.random.default_rng(nv * 31 + ne)
+    dst = rng.integers(0, nv, ne)
+    in_deg = np.bincount(dst, minlength=nv)
+    plan = pt.plan_partition(in_deg, tile_size)
+    assert plan.num_edges == ne
+    assert plan.edge_cap >= plan.edges_per_tile.max()
+    assert plan.row_cap >= np.diff(plan.splitter).max()
+    # tile_of_vertex consistent with splitter
+    for v in rng.integers(0, nv, 10):
+        t = plan.tile_of_vertex(int(v))
+        assert plan.splitter[t] <= v < plan.splitter[t + 1]
+
+
+def test_round_robin_assignment():
+    a = pt.assign_tiles(10, 3)
+    assert a == [[0, 3, 6, 9], [1, 4, 7], [2, 5, 8]]
+
+
+def test_balanced_assignment_better_than_round_robin():
+    rng = np.random.default_rng(0)
+    edges = rng.pareto(1.2, 64) * 1000 + 10
+    rr = pt.assign_tiles(64, 8)
+    lpt = pt.assign_tiles_balanced(edges, 8)
+    s_rr = pt.balance_stats(edges, rr)
+    s_lpt = pt.balance_stats(edges, lpt)
+    assert s_lpt["max_over_mean"] <= s_rr["max_over_mean"] + 1e-9
+    # both cover every tile exactly once
+    assert sorted(t for g in lpt for t in g) == list(range(64))
+
+
+def test_build_tile_and_stack(small_graph):
+    nv, src, dst = small_graph
+    m = (dst >= 10) & (dst < 60)
+    t = build_tile(0, 10, 60, src[m], dst[m], None, edge_cap=1024, row_cap=64)
+    t.validate()
+    assert t.meta.num_edges == m.sum()
+    stk = stack_tiles([t], row_cap=64)
+    assert stk["src"].shape == (1, 1024)
+    # padding points at the global sink row
+    assert np.all(stk["dst_local"][0, t.meta.num_edges:] == 64)
+    # real edge values are 1.0 (unweighted), padding 0
+    assert np.all(stk["val"][0, :t.meta.num_edges] == 1.0)
+    assert np.all(stk["val"][0, t.meta.num_edges:] == 0.0)
+
+
+def test_spe_preserves_edges(small_store):
+    store, plan, (nv, src, dst) = small_store
+    got = []
+    for t in range(plan.num_tiles):
+        tile = store.read_tile(t)
+        n = tile.meta.num_edges
+        got.append((tile.src[:n], tile.dst_local[:n] + tile.meta.row_start))
+    gs = np.concatenate([g[0] for g in got])
+    gd = np.concatenate([g[1] for g in got])
+    want = np.lexsort((src, dst))
+    have = np.lexsort((gs, gd))
+    assert np.array_equal(gs[have], src[want])
+    assert np.array_equal(gd[have], dst[want])

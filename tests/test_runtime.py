@@ -1,0 +1,131 @@
+"""Scheduler (work stealing + speculation), serving engine, baselines."""
+import numpy as np
+import pytest
+
+from repro.core.partition import assign_tiles
+from repro.runtime.scheduler import WorkStealingScheduler, simulate_superstep
+
+
+def _sched(n_tiles=32, n_servers=4, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    edges = rng.pareto(1.3, n_tiles) * 1000 + 100
+    return WorkStealingScheduler(assign_tiles(n_tiles, n_servers), edges, **kw), edges
+
+
+def test_all_tiles_complete_exactly_once():
+    sched, edges = _sched()
+    stats = simulate_superstep(sched, np.ones(4), lambda t: edges[t])
+    assert sched.all_done()
+    winners = [t.completed_by for t in sched.tasks.values()]
+    assert all(w is not None for w in winners)
+
+
+def test_work_stealing_beats_static_with_skew():
+    """Heterogeneous server speeds: stealing shortens the makespan vs
+    static round-robin (no stealing)."""
+    speeds = np.array([1.0, 1.0, 1.0, 0.25])     # one slow straggler node
+    rng = np.random.default_rng(1)
+    edges = rng.uniform(100, 1000, 64)           # no single dominating tile
+    sched1 = WorkStealingScheduler(assign_tiles(64, 4), edges,
+                                   enable_speculation=False)
+    dynamic = simulate_superstep(sched1, speeds, lambda t: edges[t])
+
+    # static: each server must run exactly its own tiles
+    assign = assign_tiles(64, 4)
+    static_makespan = max(
+        sum(edges[t] for t in assign[s]) / speeds[s] for s in range(4))
+    assert dynamic["makespan"] < static_makespan * 0.75
+    assert dynamic["steals"] > 0
+
+
+def test_speculation_rescues_giant_tile_on_slow_server():
+    """A dominating tile landing on a slow node: speculative re-execution
+    on a fast node bounds the makespan near the fast-node tile time."""
+    edges = np.array([100.0] * 16)
+    edges[3] = 10_000.0
+    # tile 3 is server 3's FIRST tile: it starts immediately on the slow
+    # node, so stealing can't rescue it (in flight) — only speculation can.
+    speeds = np.array([1.0, 1.0, 1.0, 0.1])
+    sched = WorkStealingScheduler(assign_tiles(16, 4), edges,
+                                  enable_speculation=True,
+                                  straggler_factor=2.0)
+    dyn = simulate_superstep(sched, speeds, lambda t: edges[t])
+    nospec = WorkStealingScheduler(assign_tiles(16, 4), edges,
+                                   enable_speculation=False)
+    base = simulate_superstep(nospec, speeds, lambda t: edges[t])
+    assert base["makespan"] >= 10_000 / 0.1 * 0.99    # stuck on the slow node
+    assert dyn["makespan"] < base["makespan"] * 0.25  # speculation rescued it
+    assert dyn["speculative"] >= 1
+
+
+def test_speculative_execution_counts():
+    sched, edges = _sched(16, 4, enable_speculation=True)
+    sim = simulate_superstep(sched, np.array([1, 1, 1, 0.05]),
+                             lambda t: edges[t])
+    assert sched.all_done()
+
+
+def test_completion_idempotent():
+    sched, edges = _sched(4, 2)
+    t = sched.next_tile(0)
+    assert sched.complete(0, t) is True
+    assert sched.complete(1, t) is False          # duplicate finish ignored
+
+
+def test_serve_engine_continuous_batching_consistency():
+    import jax
+    from repro.configs import registry
+    from repro.configs.base import RunConfig
+    from repro.models.model_zoo import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    run = RunConfig(remat="none", q_chunk=16, kv_chunk=16,
+                    compute_dtype="float32")
+    cfg = registry.get_config("qwen3-1.7b", reduced=True)
+    params = build_model(cfg, run).init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 10))).astype(np.int32),
+                    max_new_tokens=6) for i in range(5)]
+    eng = ServeEngine(cfg, run, params, slots=2, max_len=48)
+    outs = {o.rid: o.tokens for o in eng.run_requests(reqs)}
+    assert len(outs) == 5
+    # continuous-batched result equals isolated single-slot decoding
+    for rid in (0, 3):
+        single = ServeEngine(cfg, run, params, slots=1, max_len=48)
+        ref = single.run_requests(
+            [Request(rid=rid, prompt=reqs[rid].prompt, max_new_tokens=6)])
+        assert outs[rid] == ref[0].tokens, rid
+
+
+@pytest.mark.parametrize("name", ["pregel+", "powergraph", "graphd", "chaos"])
+def test_baselines_match_networkx(name, small_graph, nx_pagerank):
+    from repro.core.apps import PageRank
+    from repro.core.baselines import ENGINES
+
+    nv, src, dst = small_graph
+    eng = ENGINES[name](src, dst, None, nv, num_servers=3)
+    res = eng.run(PageRank(update_tol=1e-10), max_supersteps=150)
+    ours = res.values / res.values.sum()
+    assert np.abs(ours - nx_pagerank).max() < 1e-7, name
+
+
+def test_baseline_cost_shapes(small_graph):
+    """Table III qualitative shape: Chaos moves the most bytes; out-of-core
+    engines do real disk I/O, in-memory ones none."""
+    from repro.core.apps import PageRank
+    from repro.core.baselines import ENGINES
+
+    nv, src, dst = small_graph
+    stats = {}
+    for name, cls in ENGINES.items():
+        eng = cls(src, dst, None, nv, num_servers=3)
+        res = eng.run(PageRank(update_tol=1e-10), max_supersteps=3)
+        h = res.history[1]
+        stats[name] = h
+    assert stats["pregel+"].disk_read_bytes == 0
+    assert stats["powergraph"].disk_read_bytes == 0
+    assert stats["graphd"].disk_read_bytes > 0
+    assert stats["chaos"].disk_read_bytes > 0
+    assert stats["chaos"].network_bytes > stats["pregel+"].network_bytes
