@@ -14,6 +14,7 @@ P_resident_bytes / gamma_i <= capacity; if none fits, use mode 3.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from typing import Optional
@@ -63,7 +64,16 @@ class CacheStats:
 
 class EdgeCache:
     """LRU tile cache.  ``get`` returns a deserialized Tile; blobs are held
-    compressed at ``mode``.  A miss reads from the TileStore (disk tier)."""
+    compressed at ``mode``.  A miss reads from the TileStore (disk tier).
+
+    Thread-safe: the pipelined engine's prefetch workers
+    (``TileStore.prefetch_iter``) perform lookups concurrently, so LRU
+    bookkeeping and stats are guarded by a lock — but disk reads and
+    compress/decompress (the expensive part; both release the GIL) run
+    *outside* it, so concurrent ``get`` calls genuinely overlap.  Two
+    threads missing on the same tile may both read it from disk; the
+    second insert replaces the first (byte-identical) blob.
+    """
 
     def __init__(self, store: TileStore, capacity_bytes: int, mode: int = 1):
         self.store = store
@@ -71,34 +81,46 @@ class EdgeCache:
         self.mode = mode
         self._lru: OrderedDict[int, bytes] = OrderedDict()
         self._bytes = 0
+        self._lock = threading.RLock()
         self.stats = CacheStats()
 
     # -- public -------------------------------------------------------------
     def get(self, tile_id: int) -> Tile:
-        blob = self._lru.get(tile_id)
+        with self._lock:
+            blob = self._lru.get(tile_id)
+            if blob is not None:
+                self._lru.move_to_end(tile_id)
+                self.stats.hits += 1
         if blob is not None:
-            self._lru.move_to_end(tile_id)
-            self.stats.hits += 1
             return self._decode(blob)
-        self.stats.misses += 1
+
         t0 = time.perf_counter()
         disk_blob = self.store.read_tile_blob(tile_id)
-        self.stats.disk_seconds += time.perf_counter() - t0
-        self.stats.disk_bytes_read += len(disk_blob)
+        disk_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
         raw = formats.decompress_blob(disk_blob, self.store.disk_mode)
         cache_blob = formats.compress_blob(raw, self.mode)
-        self._insert(tile_id, cache_blob)
+        codec_s = time.perf_counter() - t0
+        with self._lock:
+            self.stats.misses += 1
+            self.stats.disk_seconds += disk_s
+            self.stats.decompress_seconds += codec_s
+            self.stats.disk_bytes_read += len(disk_blob)
+            self._insert(tile_id, cache_blob)
         return formats.deserialize_tile(raw)
 
     def resident_bytes(self) -> int:
-        return self._bytes
+        with self._lock:
+            return self._bytes
 
     def contains(self, tile_id: int) -> bool:
-        return tile_id in self._lru
+        with self._lock:
+            return tile_id in self._lru
 
     def clear(self) -> None:
-        self._lru.clear()
-        self._bytes = 0
+        with self._lock:
+            self._lru.clear()
+            self._bytes = 0
 
     def warm(self, tile_ids) -> None:
         for t in tile_ids:
@@ -114,15 +136,21 @@ class EdgeCache:
     def _decode(self, blob: bytes) -> Tile:
         t0 = time.perf_counter()
         raw = formats.decompress_blob(blob, self.mode)
-        self.stats.decompress_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.stats.decompress_seconds += dt
         return formats.deserialize_tile(raw)
 
     def _insert(self, tile_id: int, blob: bytes) -> None:
+        # caller holds self._lock
         if len(blob) > self.capacity_bytes:
             return  # single tile larger than the whole cache: don't thrash
-        while self._bytes + len(blob) > self.capacity_bytes and self._lru:
-            _, old = self._lru.popitem(last=False)
+        old = self._lru.pop(tile_id, None)  # concurrent double-miss
+        if old is not None:
             self._bytes -= len(old)
+        while self._bytes + len(blob) > self.capacity_bytes and self._lru:
+            _, evicted = self._lru.popitem(last=False)
+            self._bytes -= len(evicted)
             self.stats.evictions += 1
         self._lru[tile_id] = blob
         self._bytes += len(blob)

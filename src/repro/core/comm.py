@@ -19,6 +19,7 @@ Two layers:
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Optional
 
 import jax
@@ -70,6 +71,36 @@ def plan_broadcast(
         mode="dense" if use_dense else "sparse",
         raw_bytes=raw, wire_bytes=wire, density=density, compressor=compressor,
     )
+
+
+# Payload compression is CPU-bound byte work with no dependence on the next
+# server's gather/apply, so the pipelined engine ships it to a small executor
+# and collects the BroadcastRecords at the superstep barrier (the "tile N-1
+# broadcast-compression" leg of the I/O-compute-comm overlap).  Two workers:
+# one per in-flight payload is plenty, and zlib/zstd release the GIL.
+_COMM_POOL: Optional[ThreadPoolExecutor] = None
+
+
+def _comm_pool() -> ThreadPoolExecutor:
+    global _COMM_POOL
+    if _COMM_POOL is None:
+        _COMM_POOL = ThreadPoolExecutor(max_workers=2,
+                                        thread_name_prefix="graphh-comm")
+    return _COMM_POOL
+
+
+def plan_broadcast_async(
+    values: np.ndarray,
+    updated: np.ndarray,
+    threshold: float = DENSITY_THRESHOLD,
+    compressor: str = "zstd-1",
+    mode: str = "hybrid",
+) -> "Future[BroadcastRecord]":
+    """Submit :func:`plan_broadcast` onto the comm executor.  The caller owns
+    ``values``/``updated`` after submission — pass freshly built arrays."""
+    return _comm_pool().submit(plan_broadcast, values, updated,
+                               threshold=threshold, compressor=compressor,
+                               mode=mode)
 
 
 # ---------------------------------------------------------------------------

@@ -24,10 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map_unchecked
 
 from repro.core import comm
 from repro.core.gab import VertexProgram, stacked_tiles_step
@@ -60,16 +57,23 @@ def make_empty_tile_arrays(stk: dict) -> dict:
     )
 
 
-def stack_and_pad(tiles: list[Tile], row_cap: int, num_shards: int) -> dict:
-    """Stack tiles and pad the tile axis to a multiple of num_shards."""
-    stk = stack_tiles(tiles, row_cap)
-    total = pad_tile_count(len(tiles), num_shards)
-    pad = total - len(tiles)
-    if pad:
+def pad_stack_to(stk: dict, total: int) -> dict:
+    """Pad a ``stack_tiles`` dict along the tile axis to exactly ``total``
+    tiles using inert tiles (all edges at the sink row, zero rows).  Padding
+    changes no per-row result — used by the distributed engine to even out
+    shards and by the pipelined engine to fix the batch shape."""
+    pad = total - len(stk["row_start"])
+    if pad > 0:
         empty = make_empty_tile_arrays(stk)
         for k in ("src", "dst_local", "val", "row_start", "num_rows", "num_edges"):
             stk[k] = np.concatenate([stk[k]] + [empty[k]] * pad, axis=0)
     return stk
+
+
+def stack_and_pad(tiles: list[Tile], row_cap: int, num_shards: int) -> dict:
+    """Stack tiles and pad the tile axis to a multiple of num_shards."""
+    stk = stack_tiles(tiles, row_cap)
+    return pad_stack_to(stk, pad_tile_count(len(tiles), num_shards))
 
 
 def build_superstep(
@@ -103,12 +107,11 @@ def build_superstep(
 
     tile_spec = P(axis)
     rep = P()
-    fn = shard_map(
+    fn = shard_map_unchecked(
         local_step,
         mesh=mesh,
         in_specs=(rep, rep, tile_spec, tile_spec, tile_spec, tile_spec, tile_spec),
         out_specs=(rep, rep),
-        check_vma=False,
     )
 
     def superstep(values, aux, stk):

@@ -55,6 +55,13 @@ class EngineConfig:
     # wire accounting: "full" compresses every payload (measured bytes);
     # "sampled" compresses every 4th superstep and reuses the last ratio
     comm_accounting: str = "full"
+    # --- pipelined superstep (DESIGN.md §7): overlap tile N+1 load with
+    # tile N compute and server s-1 broadcast-compression.  pipeline=False
+    # keeps the paper-faithful serial loop as the baseline.
+    pipeline: bool = False
+    prefetch_depth: int = 4                 # tiles read+decompressed ahead
+    prefetch_workers: int = 2               # parallel read/decompress threads
+    stack_size: int = 4                     # tiles per jitted batch dispatch
 
 
 @dataclasses.dataclass
@@ -72,6 +79,23 @@ class SuperstepStats:
     network_bytes: int        # wire * (N-1): each server ships to N-1 peers
     cache_hit_ratio: float
     disk_bytes_read: int
+    # time the compute loop spent *blocked* waiting for tile data.  Serial
+    # engine: equals the full load time.  Pipelined engine: only the residual
+    # wait after prefetch overlap — the disk-stall the pipeline couldn't hide.
+    stall_seconds: float = 0.0
+    # disk read + (de)compress busy time this superstep, wherever it ran
+    # (inline for the serial engine, prefetch threads for the pipelined one)
+    io_busy_seconds: float = 0.0
+
+    @property
+    def stall_fraction(self) -> float:
+        return self.stall_seconds / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def io_hidden_seconds(self) -> float:
+        """I/O busy time overlapped behind compute instead of stalling it.
+        ~0 for the serial engine by construction."""
+        return max(self.io_busy_seconds - self.stall_seconds, 0.0)
 
 
 @dataclasses.dataclass
@@ -88,6 +112,12 @@ class RunResult:
     def mean_superstep_seconds(self, skip_first: bool = True) -> float:
         hs = self.history[1:] if skip_first and len(self.history) > 1 else self.history
         return float(np.mean([h.seconds for h in hs])) if hs else 0.0
+
+    def disk_stall_fraction(self, skip_first: bool = True) -> float:
+        """Fraction of wall time the compute loop was blocked on tile I/O."""
+        hs = self.history[1:] if skip_first and len(self.history) > 1 else self.history
+        tot = sum(h.seconds for h in hs)
+        return sum(h.stall_seconds for h in hs) / tot if tot > 0 else 0.0
 
 
 class OutOfCoreEngine:
@@ -118,6 +148,7 @@ class OutOfCoreEngine:
         self._stack_fn = None
         self._streamed: list[list[int]] = [[] for _ in range(N)]
         self._wire_ratio: Optional[float] = None
+        self._io_busy_cum = 0.0   # cache io_seconds at end of last superstep
 
     # ------------------------------------------------------------------
     def run(self, prog: VertexProgram,
@@ -142,11 +173,15 @@ class OutOfCoreEngine:
             values_dev = jnp.asarray(values)
             load_s = 0.0
             comp_s = 0.0
+            stall_s = 0.0
             tiles_done = 0
             tiles_skipped = 0
             upd_idx_parts: list[np.ndarray] = []
             upd_val_parts: list[np.ndarray] = []
             per_server_updates: list[tuple[np.ndarray, np.ndarray]] = []
+            bcast_futures: dict[int, object] = {}
+            sample = not (cfg.comm_accounting == "sampled" and ss % 4 != 0
+                          and self._wire_ratio is not None)
 
             skip_on = (
                 cfg.tile_skipping
@@ -191,43 +226,71 @@ class OutOfCoreEngine:
                     s_val.append(sv.astype(values.dtype))
                     tiles_done += len(self.assignment[s]) - len(self._streamed[s])
                     server_tiles = self._streamed[s]
-                for tid in server_tiles:
-                    if skip_on:
+
+                # Tile-skipping pre-pass: the filter set is fixed for the
+                # whole superstep, so the survivor list can be computed up
+                # front (and handed to the prefetcher in pipelined mode).
+                if skip_on:
+                    run_list = []
+                    for tid in server_tiles:
                         f = self._filters[tid]
                         hit = (
                             f.intersects(active_words)
                             if cfg.skip_filter == "bitmap"
                             else f.might_contain_any(updated_ids)
                         )
-                        if not hit:
+                        if hit:
+                            run_list.append(tid)
+                        else:
                             tiles_skipped += 1
-                            continue
-                    t0 = time.perf_counter()
-                    tile = self.caches[s].get(tid)
-                    load_s += time.perf_counter() - t0
+                else:
+                    run_list = list(server_tiles)
 
-                    if building_filters and filters[tid] is None:
-                        filters[tid] = self._make_filter(tile, nv)
+                if cfg.pipeline:
+                    p_idx, p_val, ld, cp, stl = self._run_tiles_pipelined(
+                        s, run_list, prog, values_dev, aux_dev,
+                        filters if building_filters else None, nv)
+                    s_idx += p_idx
+                    s_val += p_val
+                    load_s += ld
+                    comp_s += cp
+                    stall_s += stl
+                    tiles_done += len(run_list)
+                else:
+                    for tid in run_list:
+                        t0 = time.perf_counter()
+                        tile = self.caches[s].get(tid)
+                        dt = time.perf_counter() - t0
+                        load_s += dt
+                        stall_s += dt   # serial: every load blocks compute
 
-                    t0 = time.perf_counter()
-                    rows, new, upd = run_tile(
-                        prog, values_dev, aux_dev,
-                        (tile.src, tile.dst_local, tile_edge_values(tile)),
-                        tile.meta.row_start, tile.meta.num_rows,
-                        row_cap, cfg.seg_impl,
-                    )
-                    rows = np.asarray(rows)
-                    new = np.asarray(new)
-                    upd = np.asarray(upd)
-                    comp_s += time.perf_counter() - t0
-                    s_idx.append(rows[upd])
-                    s_val.append(new[upd])
-                    tiles_done += 1
+                        if building_filters and filters[tid] is None:
+                            filters[tid] = self._make_filter(tile, nv)
+
+                        t0 = time.perf_counter()
+                        rows, new, upd = run_tile(
+                            prog, values_dev, aux_dev,
+                            (tile.src, tile.dst_local, tile_edge_values(tile)),
+                            tile.meta.row_start, tile.meta.num_rows,
+                            row_cap, cfg.seg_impl,
+                        )
+                        rows = np.asarray(rows)
+                        new = np.asarray(new)
+                        upd = np.asarray(upd)
+                        comp_s += time.perf_counter() - t0
+                        s_idx.append(rows[upd])
+                        s_val.append(new[upd])
+                        tiles_done += 1
                 si = np.concatenate(s_idx) if s_idx else np.zeros(0, np.int64)
                 sv = np.concatenate(s_val) if s_val else np.zeros(0, values.dtype)
                 per_server_updates.append((si, sv))
                 upd_idx_parts.append(si)
                 upd_val_parts.append(sv)
+                if cfg.pipeline and sample:
+                    # overlap this server's payload compression with the next
+                    # server's compute; records collected at the barrier below
+                    bcast_futures[s] = self._measure_broadcast(
+                        si, sv, nv, values.dtype, background=True)
 
             if building_filters and all(f is not None for f in filters):
                 self._filters = filters
@@ -235,20 +298,13 @@ class OutOfCoreEngine:
 
             # --- Broadcast (BSP barrier): measure payloads, apply updates ---
             raw_b = wire_b = 0
-            sample = not (cfg.comm_accounting == "sampled" and ss % 4 != 0
-                          and self._wire_ratio is not None)
             for s in range(cfg.num_servers):
                 si, sv = per_server_updates[s]
                 if sample:
-                    upd_mask = np.zeros(nv, dtype=bool)
-                    upd_mask[si] = True
-                    rec = comm.plan_broadcast(
-                        _densify(sv, si, nv, values.dtype),
-                        upd_mask,
-                        threshold=cfg.comm_threshold,
-                        compressor=cfg.comm_compressor,
-                        mode=cfg.comm_mode,
-                    )
+                    if s in bcast_futures:
+                        rec = bcast_futures[s].result()
+                    else:
+                        rec = self._measure_broadcast(si, sv, nv, values.dtype)
                     raw_b += rec.raw_bytes
                     wire_b += rec.wire_bytes
                 else:
@@ -264,6 +320,8 @@ class OutOfCoreEngine:
             updated_ids = all_idx
 
             cache_stats = self._agg_cache_stats()
+            io_busy = cache_stats["io_seconds"] - self._io_busy_cum
+            self._io_busy_cum = cache_stats["io_seconds"]
             history.append(SuperstepStats(
                 superstep=ss,
                 seconds=time.perf_counter() - t_start,
@@ -278,6 +336,8 @@ class OutOfCoreEngine:
                 network_bytes=wire_b * max(cfg.num_servers - 1, 0),
                 cache_hit_ratio=cache_stats["hit_ratio"],
                 disk_bytes_read=cache_stats["disk_bytes_read"],
+                stall_seconds=stall_s,
+                io_busy_seconds=io_busy,
             ))
             if len(all_idx) == 0:
                 converged = True
@@ -285,6 +345,97 @@ class OutOfCoreEngine:
 
         return RunResult(values=values, aux=state, history=history,
                          supersteps=len(history), converged=converged)
+
+    # ------------------------------------------------------------------
+    def _measure_broadcast(self, si, sv, nv, dtype, background=False):
+        """Build one server's broadcast payload and measure its wire size —
+        inline (returns a BroadcastRecord) or on the comm executor
+        (returns a Future resolving to one)."""
+        cfg = self.cfg
+        upd_mask = np.zeros(nv, dtype=bool)
+        upd_mask[si] = True
+        plan = comm.plan_broadcast_async if background else comm.plan_broadcast
+        return plan(
+            _densify(sv, si, nv, dtype),
+            upd_mask,
+            threshold=cfg.comm_threshold,
+            compressor=cfg.comm_compressor,
+            mode=cfg.comm_mode,
+        )
+
+    # ------------------------------------------------------------------
+    # pipelined path (cfg.pipeline): prefetch thread + batched dispatch
+    # ------------------------------------------------------------------
+    def _run_tiles_pipelined(self, s, tids, prog, values_dev, aux_dev,
+                             filters, nv):
+        """Overlapped tile processing for one server (DESIGN.md §7).
+
+        A background thread reads + decompresses up to ``prefetch_depth``
+        tiles ahead through the server's EdgeCache while the consumer
+        stacks ``stack_size`` tiles and dispatches them as one jitted
+        ``run_tile_stack`` call.  The consumer's queue-wait is the disk
+        stall the pipeline failed to hide — reported per superstep.
+
+        Returns ([indices], [values], load_s, compute_s, stall_s) with
+        results identical to the serial per-tile loop: tiles own disjoint
+        row ranges and the per-tile math is the same jitted gather/apply.
+        """
+        from repro.core.distributed import pad_stack_to
+        from repro.core.gab import run_tile_stack
+        from repro.core.tiles import stack_tiles
+
+        cfg = self.cfg
+        if not tids:
+            return [], [], 0.0, 0.0, 0.0
+        row_cap = self.plan.row_cap
+        stack_k = max(1, cfg.stack_size)
+        load_s = comp_s = stall_s = 0.0
+        masked_acc = upd_acc = None
+        batch: list = []
+
+        def flush():
+            nonlocal comp_s, masked_acc, upd_acc, batch
+            stk = stack_tiles(batch, row_cap)
+            if len(batch) < stack_k:
+                stk = pad_stack_to(stk, stack_k)  # keep one compiled shape
+            t0 = time.perf_counter()
+            new_masked, upd = run_tile_stack(
+                prog, values_dev, aux_dev, stk, row_cap, cfg.seg_impl)
+            if masked_acc is None:
+                masked_acc, upd_acc = new_masked, upd
+            else:  # disjoint row ranges: set-where-updated merge is exact
+                masked_acc = jnp.where(upd, new_masked, masked_acc)
+                upd_acc = jnp.logical_or(upd_acc, upd)
+            comp_s += time.perf_counter() - t0
+            batch = []
+
+        it = self.store.prefetch_iter(tids, depth=cfg.prefetch_depth,
+                                      cache=self.caches[s],
+                                      workers=cfg.prefetch_workers)
+        try:
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    tid, tile = next(it)
+                except StopIteration:
+                    break
+                wait = time.perf_counter() - t0
+                load_s += wait
+                stall_s += wait
+                if filters is not None and filters[tid] is None:
+                    filters[tid] = self._make_filter(tile, nv)
+                batch.append(tile)
+                if len(batch) == stack_k:
+                    flush()
+            if batch:
+                flush()
+        finally:
+            it.close()
+
+        upd_np = np.asarray(upd_acc)
+        si = np.nonzero(upd_np)[0]
+        sv = np.asarray(masked_acc)[si]
+        return [si], [sv], load_s, comp_s, stall_s
 
     # ------------------------------------------------------------------
     # stacked fast path (engine_mode="stacked"): device-resident tiles
@@ -374,6 +525,8 @@ class OutOfCoreEngine:
         return dict(
             hit_ratio=hits / max(hits + misses, 1),
             disk_bytes_read=sum(c.stats.disk_bytes_read for c in self.caches),
+            io_seconds=sum(c.stats.disk_seconds + c.stats.decompress_seconds
+                           for c in self.caches),
         )
 
 

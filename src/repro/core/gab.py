@@ -266,3 +266,28 @@ def run_tile(prog, values, aux, tile_arrays, row_start, num_rows,
         prog, values, aux, src, dst_local, edge_val,
         (jnp.int32(row_start), jnp.int32(num_rows)), row_cap, seg_impl,
     )
+
+
+# ---------------------------------------------------------------------------
+# Stacked-tile batch entry used by the pipelined engine: K prefetched tiles,
+# padded to a fixed stack size, dispatched as ONE jitted scan.  Amortizes
+# per-tile dispatch overhead; compilation is keyed by (K, edge_cap, row_cap),
+# so a fixed stack_size means a single compile for the whole run.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0, 4, 5))
+def _jit_run_tile_stack(prog, values, aux, stk, row_cap, seg_impl):
+    return stacked_tiles_step(prog, values, aux, stk, row_cap, seg_impl)
+
+
+def run_tile_stack(prog, values, aux, stk, row_cap, seg_impl="jnp"):
+    """Process a K-tile stack (``tiles.stack_tiles`` output, possibly padded
+    with inert tiles via ``distributed.pad_stack_to``) in one dispatch.
+
+    Returns (new_masked [V], updated [V] bool) — identical per-row results
+    to running ``run_tile`` over the same tiles one at a time, since tiles
+    own disjoint row ranges.
+    """
+    scan = {k: jnp.asarray(stk[k])
+            for k in ("src", "dst_local", "val", "row_start", "num_rows")}
+    return _jit_run_tile_stack(prog, values, aux, scan, row_cap, seg_impl)

@@ -17,11 +17,12 @@ import io
 import json
 import os
 import struct
-from typing import Iterator, Optional
+import threading
+from typing import Iterable, Iterator, Optional
 
 import numpy as np
-import zstandard
 
+from repro.compat import zstd_compress, zstd_decompress
 from repro.core.partition import PartitionPlan
 from repro.core.tiles import Tile, TileMeta
 
@@ -29,7 +30,9 @@ MAGIC = b"GHT1"
 
 # The paper's cache modes: 1=raw, 2=snappy, 3=zlib-1, 4=zlib-3.  snappy/zlib
 # are not shipped in this environment; zstd levels are the stand-ins with the
-# same fast/slow compression trade-off shape (DESIGN.md §3).
+# same fast/slow compression trade-off shape (DESIGN.md §3).  When zstandard
+# itself is unavailable, repro.compat transparently substitutes stdlib zlib
+# at the same levels.
 MODE_CODECS = {
     1: ("raw", None),
     2: ("zstd-1", 1),     # snappy analogue: fast, modest ratio
@@ -42,14 +45,14 @@ def compress_blob(blob: bytes, mode: int) -> bytes:
     name, level = MODE_CODECS[mode]
     if level is None:
         return blob
-    return zstandard.ZstdCompressor(level=level).compress(blob)
+    return zstd_compress(blob, level)
 
 
 def decompress_blob(blob: bytes, mode: int) -> bytes:
     name, level = MODE_CODECS[mode]
     if level is None:
         return blob
-    return zstandard.ZstdDecompressor().decompress(blob)
+    return zstd_decompress(blob)
 
 
 def serialize_tile(tile: Tile) -> bytes:
@@ -101,6 +104,7 @@ class TileStore:
         self.tile_dir = os.path.join(root, "tiles")
         self.bytes_read = 0
         self.bytes_written = 0
+        self._stats_lock = threading.Lock()  # prefetch workers share counters
 
     # -- write side (SPE) --------------------------------------------------
     def initialize(self, plan: PartitionPlan, weighted: bool,
@@ -125,7 +129,8 @@ class TileStore:
         with open(tmp, "wb") as f:
             f.write(blob)
         os.replace(tmp, path)  # atomic: a reader never sees a torn tile
-        self.bytes_written += len(blob)
+        with self._stats_lock:
+            self.bytes_written += len(blob)
         return len(blob)
 
     # -- read side (MPE) ---------------------------------------------------
@@ -146,7 +151,8 @@ class TileStore:
         """Raw (possibly disk-compressed) blob — what the cache stores."""
         with open(self._tile_path(tile_id), "rb") as f:
             blob = f.read()
-        self.bytes_read += len(blob)
+        with self._stats_lock:
+            self.bytes_read += len(blob)
         return blob
 
     def read_tile(self, tile_id: int) -> Tile:
@@ -160,6 +166,80 @@ class TileStore:
     def iter_tiles(self, tile_ids: Iterator[int]) -> Iterator[Tile]:
         for t in tile_ids:
             yield self.read_tile(t)
+
+    def prefetch_iter(self, tile_ids: Iterable[int], depth: int = 4,
+                      cache=None, workers: int = 2) -> Iterator[tuple[int, Tile]]:
+        """Yield ``(tile_id, Tile)`` in order, reading + decompressing up to
+        ``depth`` tiles ahead on ``workers`` background threads (the
+        pipelined engine's I/O stage — paper §IV: keep the disk busy while
+        workers compute).  Multiple workers matter because decompression is
+        the dominant per-tile cost and zlib/zstd release the GIL.
+
+        When an :class:`~repro.core.cache.EdgeCache` is passed, lookups go
+        through it on the prefetch threads: hits decode straight from idle
+        memory without touching the disk, misses are read once and admitted
+        to the cache, and hit/miss/disk stats accrue exactly as on the
+        serial path.  EdgeCache does its codec work outside its lock, so
+        workers genuinely overlap.
+
+        ``depth`` bounds memory: at most ``depth`` tiles are decoded-but-
+        unconsumed (completed or in flight) at any moment, regardless of
+        worker count.  Delivery order always matches ``tile_ids`` order.
+        """
+        ids = list(tile_ids)
+        if not ids:
+            return
+        depth = max(1, depth)
+        nworkers = max(1, min(workers, depth, len(ids)))
+        budget = threading.Semaphore(depth)
+        cond = threading.Condition()
+        results: dict[int, tuple[int, Optional[Tile], Optional[BaseException]]] = {}
+        cursor = [0]          # next id index to claim (under cond)
+        stop = threading.Event()
+
+        def produce() -> None:
+            while not stop.is_set():
+                if not budget.acquire(timeout=0.1):
+                    continue  # re-check stop
+                with cond:
+                    i = cursor[0]
+                    if i >= len(ids):
+                        budget.release()
+                        return
+                    cursor[0] += 1
+                tid = ids[i]
+                try:
+                    tile = cache.get(tid) if cache is not None \
+                        else self.read_tile(tid)
+                    item = (tid, tile, None)
+                except BaseException as exc:  # surfaced on the consumer side
+                    item = (tid, None, exc)
+                with cond:
+                    results[i] = item
+                    cond.notify_all()
+
+        threads = [threading.Thread(target=produce, daemon=True,
+                                    name=f"graphh-prefetch-{w}")
+                   for w in range(nworkers)]
+        for t in threads:
+            t.start()
+        try:
+            for i in range(len(ids)):
+                with cond:
+                    while i not in results:
+                        if not any(t.is_alive() for t in threads):
+                            raise RuntimeError(
+                                f"prefetch workers died before tile index {i}")
+                        cond.wait(timeout=0.1)
+                    tid, tile, exc = results.pop(i)
+                budget.release()
+                if exc is not None:
+                    raise exc
+                yield tid, tile
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=5.0)
 
     def _tile_path(self, tile_id: int) -> str:
         return os.path.join(self.tile_dir, f"t{tile_id:06d}.bin")

@@ -65,9 +65,12 @@ def _kernel(offs_ref, mask_ref, val_ref, idx_out_ref, val_out_ref,
                         jnp.int32(fill))
 
     off = offs_ref[0, b]
-    pl.store(idx_out_ref, (0, pl.dslice(off, block)), buf_idx)
-    pl.store(val_out_ref, (0, pl.dslice(off, block)),
-             buf_val.astype(val_out_ref.dtype))
+    # row index as a 1-wide dslice: plain-int indexers trip newer jax's
+    # interpret-mode discharge rule
+    pl.store(idx_out_ref, (pl.dslice(0, 1), pl.dslice(off, block)),
+             buf_idx[None, :])
+    pl.store(val_out_ref, (pl.dslice(0, 1), pl.dslice(off, block)),
+             buf_val.astype(val_out_ref.dtype)[None, :])
 
 
 @functools.partial(

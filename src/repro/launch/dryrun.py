@@ -165,17 +165,17 @@ def _hlo_path(arch, cell, mesh_kind):
 
 
 def _save_hlo(arch, cell, mesh_kind, text: str) -> None:
-    import zstandard
+    from repro.compat import zstd_compress
 
     with open(_hlo_path(arch, cell, mesh_kind), "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(text.encode()))
+        f.write(zstd_compress(text.encode(), level=3))
 
 
 def load_hlo(arch, cell, mesh_kind) -> str:
-    import zstandard
+    from repro.compat import zstd_decompress
 
     with open(_hlo_path(arch, cell, mesh_kind), "rb") as f:
-        return zstandard.ZstdDecompressor().decompress(f.read()).decode()
+        return zstd_decompress(f.read()).decode()
 
 
 def reanalyze(arch, cell, mesh_kind) -> dict:

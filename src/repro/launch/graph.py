@@ -50,6 +50,13 @@ def main(argv=None):
                     help="reuse an existing tile store directory")
     ap.add_argument("--reuse", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="overlap tile I/O, compute, and broadcast "
+                         "compression (DESIGN.md §7)")
+    ap.add_argument("--prefetch-depth", type=int, default=4)
+    ap.add_argument("--prefetch-workers", type=int, default=2)
+    ap.add_argument("--stack-size", type=int, default=4,
+                    help="tiles per jitted batch dispatch (pipelined mode)")
     args = ap.parse_args(argv)
 
     if args.reuse and args.store:
@@ -65,6 +72,10 @@ def main(argv=None):
         else int(args.cache_mode),
         comm_mode=args.comm_mode,
         max_supersteps=args.supersteps,
+        pipeline=args.pipeline,
+        prefetch_depth=args.prefetch_depth,
+        prefetch_workers=args.prefetch_workers,
+        stack_size=args.stack_size,
     )
     eng = OutOfCoreEngine(store, cfg)
     prog = APPS[args.app]()
@@ -77,7 +88,9 @@ def main(argv=None):
     h = res.history[-1]
     print(f"  cache hit ratio {h.cache_hit_ratio:.2f}, "
           f"net {sum(x.network_bytes for x in res.history)/1e6:.1f} MB total, "
-          f"mode={eng.cache_mode}")
+          f"mode={eng.cache_mode}, "
+          f"disk-stall {res.disk_stall_fraction()*100:.0f}% of wall time"
+          f"{' (pipelined)' if args.pipeline else ''}")
     return res
 
 

@@ -4,7 +4,19 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly all-Auto
+    AxisType = None
+
+
+def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -12,19 +24,18 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(axes: tuple[str, ...] = ("data",)) -> Mesh:
     """Whatever devices exist locally, flattened onto the first axis."""
     n = jax.device_count()
     shape = (n,) + (1,) * (len(axes) - 1)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def graph_engine_axes(mesh: Mesh) -> tuple[str, ...]:

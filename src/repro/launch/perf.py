@@ -75,11 +75,11 @@ def run(arch: str, cell_name: str, overrides: dict, label: str,
         mflops = ra.model_flops("decode", n_active, cell.global_batch, embed_p)
     compiled = lowered.compile()
     hlo = compiled.as_text()
-    import zstandard
+    from repro.compat import zstd_compress
     os.makedirs(PERF_DIR, exist_ok=True)
     with open(os.path.join(PERF_DIR, f"{arch}__{cell_name}__{label}.hlo.zst"),
               "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(hlo.encode()))
+        f.write(zstd_compress(hlo.encode(), level=3))
     cost = hlo_cost.analyze(hlo)
     terms = ra.roofline(cost.flops, cost.bytes, cost.coll_bytes, n_chips,
                         mflops, hbm_bytes_fused=cost.bytes_fused)

@@ -231,11 +231,9 @@ def seq_sharded_decode_attention(
     """Flash-decoding over a sharded KV sequence axis: each shard computes a
     partial (max, sum, out) over its KV slice; merged with pmax/psum.
     Used for long-context decode where one device cannot hold the cache."""
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map_unchecked
 
     B, _, H, Dh = q.shape
     S = k_cache.shape[1]
@@ -264,11 +262,10 @@ def seq_sharded_decode_attention(
         o = jax.lax.psum(o_loc, seq_axis) / jnp.maximum(l_glb[..., None], 1e-30)
         return o.reshape(B, 1, H, Dh).astype(q.dtype)
 
-    fn = shard_map(
+    fn = shard_map_unchecked(
         local, mesh=mesh,
         in_specs=(P(), P(None, seq_axis), P(None, seq_axis), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(q, k_cache, v_cache, cache_len)
 

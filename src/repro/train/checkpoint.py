@@ -26,7 +26,8 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
-import zstandard
+
+from repro.compat import zstd_compress, zstd_decompress
 
 
 _EMPTY = "__empty_dict__"
@@ -84,8 +85,7 @@ class CheckpointManager:
                                     "dtype": str(arr.dtype)}
             fn = os.path.join(tmp, path.replace("/", "_") + ".npy")
             if self.compress:
-                blob = zstandard.ZstdCompressor(level=3).compress(
-                    arr.tobytes(order="C"))
+                blob = zstd_compress(arr.tobytes(order="C"), level=3)
                 with open(fn + ".zst", "wb") as f:
                     f.write(blob)
             else:
@@ -147,7 +147,7 @@ class CheckpointManager:
             fn = os.path.join(d, path.replace("/", "_") + ".npy")
             if os.path.exists(fn + ".zst"):
                 with open(fn + ".zst", "rb") as f:
-                    raw = zstandard.ZstdDecompressor().decompress(f.read())
+                    raw = zstd_decompress(f.read())
                 arr = np.frombuffer(raw, dtype=np.dtype(info["dtype"])).reshape(
                     info["shape"]).copy()
             else:

@@ -1,0 +1,91 @@
+"""Deterministic stand-ins for the tiny slice of the hypothesis API this
+suite uses (``given``/``settings`` + integers/floats/lists/binary/
+sampled_from strategies).
+
+Imported only when ``hypothesis`` is not installed, so property tests
+degrade to a fixed-seed random sweep instead of being skipped wholesale.
+Install the real thing (``pip install -e .[test]``) for shrinking and a
+proper example database.
+"""
+from __future__ import annotations
+
+
+import random
+import sys
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # draw(rng) -> value
+
+    def boundary(self):
+        return []  # overridden per strategy where bounds exist
+
+
+def integers(lo: int, hi: int) -> _Strategy:
+    s = _Strategy(lambda rng: rng.randint(lo, hi))
+    s.boundary = lambda: [lo, hi]
+    return s
+
+
+def floats(lo: float, hi: float) -> _Strategy:
+    s = _Strategy(lambda rng: rng.uniform(lo, hi))
+    s.boundary = lambda: [lo, hi]
+    return s
+
+
+def binary(min_size: int = 0, max_size: int = 100) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return bytes(rng.randrange(256) for _ in range(n))
+
+    s = _Strategy(draw)
+    s.boundary = lambda: [b"\x00" * min_size]
+    return s
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elem.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def settings(**kw):
+    def deco(fn):
+        fn._max_examples = kw.get("max_examples", 20)
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NB: no functools.wraps — pytest must see the zero-arg wrapper
+        # signature, not the strategy parameters (they'd look like fixtures).
+        def run(*args, **kwargs):
+            rng = random.Random(0)
+            n = getattr(fn, "_max_examples", 20)
+            # one pass over per-strategy boundary values, then random draws
+            bounds = [s.boundary() for s in strats]
+            for i in range(max(len(b) for b in bounds) if bounds else 0):
+                if all(len(b) > i for b in bounds):
+                    fn(*args, *[b[i] for b in bounds], **kwargs)
+            for _ in range(n):
+                fn(*args, *[s.draw(rng) for s in strats], **kwargs)
+
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+
+    return deco
+
+
+# ``from _hypothesis_compat import strategies as st`` mirrors the real layout
+strategies = sys.modules[__name__]

@@ -1,7 +1,11 @@
 """Edge cache (paper §III-D-2) and hybrid communication (§III-D-3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see _hypothesis_compat
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import comm
 from repro.core.cache import DEFAULT_GAMMAS, EdgeCache, auto_select_mode

@@ -1,7 +1,10 @@
 """Two-stage partitioning invariants (paper §III-B), incl. property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see _hypothesis_compat
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import partition as pt
 from repro.core.tiles import build_tile, stack_tiles
