@@ -75,6 +75,42 @@ def bench_cache_fig8():
     emit("fig8.cache.auto_mode_selected", 0, f"mode={eng.cache_mode}")
 
 
+def bench_cache_tiers():
+    """Paper Fig. 11-style capacity-vs-runtime curve for the edge-cache
+    policies (DESIGN.md §8): at each cache capacity (fraction of the on-disk
+    working set), compare the paper's single-mode LRU against the adaptive
+    tiered and cost-aware policies — wall time per superstep, hit ratio, and
+    per-tier residency.  Small tiles + compressed disk tier so misses pay a
+    real decompress cost."""
+    from benchmarks import common
+    from repro.core.apps import PageRank
+    from repro.core.engine import EngineConfig, OutOfCoreEngine
+
+    if common.SMOKE:
+        nv, ne, tile, fracs, steps = 8_000, 60_000, 1024, (0.25,), 3
+    else:
+        nv, ne, tile, fracs, steps = NV, NE, 8192, (0.125, 0.25, 0.5), 6
+    store = make_store(nv, ne, tile, disk_mode=3)
+    plan = store.load_plan()
+    total = sum(store.tile_disk_bytes(t) for t in range(plan.num_tiles))
+    for frac in fracs:
+        for policy in ("lru", "tiered", "cost-aware"):
+            eng = OutOfCoreEngine(store, EngineConfig(
+                num_servers=2, cache_capacity_bytes=int(total * frac / 2),
+                cache_mode="auto", cache_policy=policy,
+                tile_skipping=False, max_supersteps=steps))
+            res = eng.run(PageRank())
+            h = res.history[-1]
+            tiers = "/".join(f"{k}:{v['tiles']}"
+                             for k, v in sorted(h.cache_tiers.items()))
+            emit(f"cache_tiers.{policy}.cap{int(frac*100)}pct",
+                 res.mean_superstep_seconds() * 1e6,
+                 f"hit={h.cache_hit_ratio:.2f} "
+                 f"promo={sum(x.cache_promotions for x in res.history)} "
+                 f"demo={sum(x.cache_demotions for x in res.history)} "
+                 f"tiers={tiers}")
+
+
 def bench_comm_fig9():
     from repro.core.apps import SSSP, PageRank
     from repro.core.engine import EngineConfig, OutOfCoreEngine
@@ -245,6 +281,6 @@ def bench_scheduler():
 
 
 ALL = [bench_partition_fig5, bench_compression_tablev, bench_cache_fig8,
-       bench_comm_fig9, bench_pagerank_fig10, bench_sssp_fig11,
-       bench_memory_fig7, bench_costmodel_tableiii, bench_pipeline_overlap,
-       bench_scheduler]
+       bench_cache_tiers, bench_comm_fig9, bench_pagerank_fig10,
+       bench_sssp_fig11, bench_memory_fig7, bench_costmodel_tableiii,
+       bench_pipeline_overlap, bench_scheduler]

@@ -9,6 +9,10 @@ import numpy as np
 
 ROWS = []
 
+# --smoke (benchmarks/run.py): shrink problem sizes so every bench path is
+# exercisable in CI on every push without meaningful runtime.
+SMOKE = False
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"

@@ -16,9 +16,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filter on bench names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes (CI: exercise the code paths, "
+                         "not the numbers)")
     args = ap.parse_args()
 
-    from benchmarks import bench_graph, bench_kernels, bench_train
+    from benchmarks import bench_graph, bench_kernels, bench_train, common
+
+    common.SMOKE = args.smoke
 
     fns = bench_graph.ALL + bench_kernels.ALL + bench_train.ALL
     if args.only:

@@ -26,9 +26,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.graphio import formats
 
 DENSITY_THRESHOLD = 0.4  # paper's sparsity switch point
+
+# compressor name -> formats.MODE_CODECS mode (paper default: snappy; we use
+# the zstd ladder, transparently zlib when zstandard is absent — compat.py)
+COMPRESSORS = {"none": 1, "zstd-1": 2, "zstd-3": 3, "zstd-9": 4}
+
+
+def resolve_compressor(name: str) -> tuple[int, str]:
+    """Validate a compressor name and return (mode, actual codec label) —
+    the label reflects what will really run, e.g. ``zlib-1`` when
+    repro.compat has fallen back from zstd to stdlib zlib."""
+    mode = COMPRESSORS.get(name)
+    if mode is None:
+        raise ValueError(
+            f"unknown compressor {name!r}; valid: {', '.join(sorted(COMPRESSORS))}")
+    if mode == 1:
+        return mode, "none"
+    _, level = formats.MODE_CODECS[mode]
+    return mode, f"{'zstd' if compat.HAVE_ZSTD else 'zlib'}-{level}"
 
 
 # ---------------------------------------------------------------------------
@@ -61,15 +80,15 @@ def plan_broadcast(
     compressor: str = "zstd-1",       # paper default: snappy
     mode: str = "hybrid",             # "dense" | "sparse" | "hybrid"
 ) -> BroadcastRecord:
+    comp_mode, codec = resolve_compressor(compressor)
     density = float(updated.mean()) if updated.size else 0.0
     use_dense = mode == "dense" or (mode == "hybrid" and density >= threshold)
     payload = dense_payload(values, updated) if use_dense else sparse_payload(values, updated)
     raw = len(payload)
-    comp_mode = {"none": 1, "zstd-1": 2, "zstd-3": 3, "zstd-9": 4}[compressor]
     wire = len(formats.compress_blob(payload, comp_mode))
     return BroadcastRecord(
         mode="dense" if use_dense else "sparse",
-        raw_bytes=raw, wire_bytes=wire, density=density, compressor=compressor,
+        raw_bytes=raw, wire_bytes=wire, density=density, compressor=codec,
     )
 
 
@@ -129,7 +148,37 @@ def dense_broadcast(old: jax.Array, new_masked: jax.Array,
 def sparse_broadcast(old: jax.Array, new_masked: jax.Array,
                      updated: jax.Array, capacity: int,
                      axis_name: str, value_dtype=None) -> jax.Array:
-    """Sparse mode: compact (idx, new value), all_gather, scatter-set."""
+    """Sparse mode: compact (idx, new value), all_gather, scatter-set.
+
+    Safety: the fixed-size ``jnp.nonzero`` compaction silently truncates
+    when a shard has more than ``capacity`` updates — under forced
+    ``mode="sparse"`` nothing upstream guarantees that bound (the hybrid
+    path's density switch does).  The overflow check is *global* (pmax of
+    per-shard update counts) so every shard takes the same branch and the
+    collectives stay matched; on overflow the whole step falls back to a
+    dense psum broadcast instead of dropping updates.
+    """
+    nv = old.shape[0]
+    if capacity >= nv:       # cannot truncate: skip the guard entirely
+        return _sparse_broadcast_unchecked(old, new_masked, updated, capacity,
+                                           axis_name, value_dtype)
+    local_count = jnp.sum(updated.astype(jnp.int32))
+    max_count = jax.lax.pmax(local_count, axis_name)
+
+    def dense_fn(_):
+        return dense_broadcast(old, new_masked, updated, axis_name)
+
+    def sparse_fn(_):
+        return _sparse_broadcast_unchecked(old, new_masked, updated, capacity,
+                                           axis_name, value_dtype)
+
+    return jax.lax.cond(max_count > capacity, dense_fn, sparse_fn,
+                        operand=None)
+
+
+def _sparse_broadcast_unchecked(old: jax.Array, new_masked: jax.Array,
+                                updated: jax.Array, capacity: int,
+                                axis_name: str, value_dtype=None) -> jax.Array:
     nv = old.shape[0]
     (idx,) = jnp.nonzero(updated, size=capacity, fill_value=nv)
     vals = jnp.where(idx < nv, new_masked[jnp.minimum(idx, nv - 1)], 0.0)
@@ -169,18 +218,26 @@ def hybrid_broadcast(
     if mode == "dense":
         return dense_broadcast(old, new_masked, updated, axis_name), density
     if mode == "sparse":
+        # forced sparse: sparse_broadcast's global overflow guard falls back
+        # to dense when any shard's update count exceeds capacity
         return sparse_broadcast(old, new_masked, updated, capacity,
                                 axis_name, value_dtype), density
 
     def dense_fn(_):
         return dense_broadcast(old, new_masked, updated, axis_name)
 
-    def sparse_fn(_):
-        return sparse_broadcast(old, new_masked, updated, capacity,
-                                axis_name, value_dtype)
+    # Unchecked is safe only when capacity covers the density switch point:
+    # the sparse branch then runs only at global density < threshold, and
+    # capacity >= ceil(threshold * nv) bounds every local update count.  A
+    # caller-supplied smaller capacity keeps the overflow guard.
+    safe_sparse = (_sparse_broadcast_unchecked
+                   if capacity >= int(np.ceil(nv * threshold))
+                   else sparse_broadcast)
 
-    # Note: local density can exceed capacity/nv only when global density
-    # >= threshold, in which case the dense branch is taken.
+    def sparse_fn(_):
+        return safe_sparse(old, new_masked, updated, capacity,
+                           axis_name, value_dtype)
+
     out = jax.lax.cond(density >= threshold, dense_fn, sparse_fn, operand=None)
     return out, density
 
@@ -189,6 +246,7 @@ def wire_bytes_estimate(num_vertices: int, density: float, itemsize: int = 4,
                         threshold: float = DENSITY_THRESHOLD) -> int:
     """Analytic per-server payload size (paper Fig. 9 model)."""
     if density >= threshold:
-        return num_vertices // 8 + num_vertices * itemsize
+        # bitvector is np.packbits output: ceil(V / 8) bytes
+        return (num_vertices + 7) // 8 + num_vertices * itemsize
     u = int(density * num_vertices)
     return u * (4 + itemsize)

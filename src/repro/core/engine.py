@@ -33,7 +33,16 @@ class EngineConfig:
     num_servers: int = 1
     num_workers: int = 1                    # paper's T (accounting only here)
     cache_capacity_bytes: int = 1 << 30     # per server
-    cache_mode: int | str = "auto"          # 1..4 or "auto"
+    cache_mode: int | str = "auto"          # 1..4 or "auto" (lru policy)
+    # --- adaptive multi-tier cache (DESIGN.md §8) ---
+    # "lru": paper-faithful whole-cache single mode + LRU eviction
+    # "tiered": per-tile hot/warm/cold ladder, demote-before-evict
+    # "cost-aware": tiered with decompress-seconds-saved/byte victims
+    cache_policy: str = "lru"
+    cache_promote_hits: int = 2             # hits between tier promotions
+    # cache-hit-first tile ordering: resident tiles run while the prefetcher
+    # pulls the misses (order is irrelevant to results — disjoint rows)
+    cache_aware_order: bool = True
     comm_mode: str = "hybrid"               # dense | sparse | hybrid
     comm_compressor: str = "zstd-1"         # paper default: snappy
     comm_threshold: float = comm.DENSITY_THRESHOLD
@@ -86,6 +95,11 @@ class SuperstepStats:
     # disk read + (de)compress busy time this superstep, wherever it ran
     # (inline for the serial engine, prefetch threads for the pipelined one)
     io_busy_seconds: float = 0.0
+    # tiered-cache activity this superstep (zeros for policy="lru")
+    cache_promotions: int = 0
+    cache_demotions: int = 0
+    # per-tier residency at the barrier: {tier: {tiles, bytes, hits}}
+    cache_tiers: dict = dataclasses.field(default_factory=dict)
 
     @property
     def stall_fraction(self) -> float:
@@ -141,7 +155,10 @@ class OutOfCoreEngine:
             mode = int(config.cache_mode)
         self.cache_mode = mode
         self.caches = [
-            EdgeCache(store, config.cache_capacity_bytes, mode) for _ in range(N)
+            EdgeCache(store, config.cache_capacity_bytes, mode,
+                      policy=config.cache_policy,
+                      promote_hits=config.cache_promote_hits)
+            for _ in range(N)
         ]
         self._filters: Optional[list] = None  # built during first superstep
         self._stacks: Optional[list] = None   # per-server device-resident tiles
@@ -149,6 +166,8 @@ class OutOfCoreEngine:
         self._streamed: list[list[int]] = [[] for _ in range(N)]
         self._wire_ratio: Optional[float] = None
         self._io_busy_cum = 0.0   # cache io_seconds at end of last superstep
+        self._promo_cum = 0       # cache promotions at end of last superstep
+        self._demo_cum = 0
 
     # ------------------------------------------------------------------
     def run(self, prog: VertexProgram,
@@ -246,6 +265,9 @@ class OutOfCoreEngine:
                 else:
                     run_list = list(server_tiles)
 
+                if cfg.cache_aware_order and len(run_list) > 1:
+                    run_list = self._order_cache_first(s, run_list)
+
                 if cfg.pipeline:
                     p_idx, p_val, ld, cp, stl = self._run_tiles_pipelined(
                         s, run_list, prog, values_dev, aux_dev,
@@ -319,9 +341,19 @@ class OutOfCoreEngine:
             values[all_idx] = all_val
             updated_ids = all_idx
 
+            # Re-tier at the barrier: off the tile hot path, after this
+            # superstep's access pattern has updated the per-tile counters.
+            if cfg.cache_policy != "lru":
+                for c in self.caches:
+                    c.maintain()
+
             cache_stats = self._agg_cache_stats()
             io_busy = cache_stats["io_seconds"] - self._io_busy_cum
             self._io_busy_cum = cache_stats["io_seconds"]
+            promo = cache_stats["promotions"] - self._promo_cum
+            demo = cache_stats["demotions"] - self._demo_cum
+            self._promo_cum = cache_stats["promotions"]
+            self._demo_cum = cache_stats["demotions"]
             history.append(SuperstepStats(
                 superstep=ss,
                 seconds=time.perf_counter() - t_start,
@@ -338,6 +370,9 @@ class OutOfCoreEngine:
                 disk_bytes_read=cache_stats["disk_bytes_read"],
                 stall_seconds=stall_s,
                 io_busy_seconds=io_busy,
+                cache_promotions=promo,
+                cache_demotions=demo,
+                cache_tiers=cache_stats["tiers"],
             ))
             if len(all_idx) == 0:
                 converged = True
@@ -519,14 +554,35 @@ class OutOfCoreEngine:
         f.add(srcs)
         return f
 
+    def _order_cache_first(self, s: int, tids: list[int]) -> list[int]:
+        """Cache-hit-first scheduling: resident tiles run immediately while
+        the prefetcher pulls the misses from disk.  Stable within each
+        class, and order never changes results (tiles own disjoint rows)."""
+        cache = self.caches[s]
+        resident = {t for t in tids if cache.contains(t)}
+        if not resident or len(resident) == len(tids):
+            return list(tids)
+        return ([t for t in tids if t in resident]
+                + [t for t in tids if t not in resident])
+
     def _agg_cache_stats(self) -> dict:
         hits = sum(c.stats.hits for c in self.caches)
         misses = sum(c.stats.misses for c in self.caches)
+        tiers: dict[str, dict] = {}
+        for c in self.caches:
+            for name, d in c.tier_snapshot().items():
+                agg = tiers.setdefault(name, dict(tiles=0, bytes=0, hits=0))
+                agg["tiles"] += d.get("tiles", 0)
+                agg["bytes"] += d.get("bytes", 0)
+                agg["hits"] += d.get("hits", 0)
         return dict(
             hit_ratio=hits / max(hits + misses, 1),
             disk_bytes_read=sum(c.stats.disk_bytes_read for c in self.caches),
             io_seconds=sum(c.stats.disk_seconds + c.stats.decompress_seconds
-                           for c in self.caches),
+                           + c.stats.retier_seconds for c in self.caches),
+            promotions=sum(c.stats.promotions for c in self.caches),
+            demotions=sum(c.stats.demotions for c in self.caches),
+            tiers=tiers,
         )
 
 

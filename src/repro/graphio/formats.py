@@ -176,11 +176,15 @@ class TileStore:
         the dominant per-tile cost and zlib/zstd release the GIL.
 
         When an :class:`~repro.core.cache.EdgeCache` is passed, lookups go
-        through it on the prefetch threads: hits decode straight from idle
-        memory without touching the disk, misses are read once and admitted
-        to the cache, and hit/miss/disk stats accrue exactly as on the
-        serial path.  EdgeCache does its codec work outside its lock, so
-        workers genuinely overlap.
+        through it on the prefetch threads: the cache is consulted
+        (``get_if_resident``) before any disk read is issued, so hits decode
+        straight from idle memory without touching the disk; misses are read
+        once and admitted to the cache, and hit/miss/disk stats accrue
+        exactly as on the serial path.  EdgeCache does its codec work
+        outside its lock, so workers genuinely overlap.  The engine feeds
+        this iterator a cache-hit-first tile order (``cache_aware_order``),
+        so resident tiles flow to the consumer immediately while the
+        workers' lookahead pulls the misses off disk behind them.
 
         ``depth`` bounds memory: at most ``depth`` tiles are decoded-but-
         unconsumed (completed or in flight) at any moment, regardless of
@@ -209,6 +213,9 @@ class TileStore:
                     cursor[0] += 1
                 tid = ids[i]
                 try:
+                    # cache.get consults residency (get_if_resident) before
+                    # issuing any disk read: resident tiles decode straight
+                    # from idle memory, only misses touch the disk tier
                     tile = cache.get(tid) if cache is not None \
                         else self.read_tile(tid)
                     item = (tid, tile, None)

@@ -43,6 +43,15 @@ def main(argv=None):
     ap.add_argument("--supersteps", type=int, default=30)
     ap.add_argument("--cache-mb", type=float, default=1024)
     ap.add_argument("--cache-mode", default="auto")
+    ap.add_argument("--cache-policy", default="lru",
+                    choices=["lru", "tiered", "cost-aware"],
+                    help="lru = paper's whole-cache single mode; tiered / "
+                         "cost-aware = per-tile hot/warm/cold ladder with "
+                         "demote-before-evict (DESIGN.md §8)")
+    ap.add_argument("--cache-promote-hits", type=int, default=2,
+                    help="hits between tier promotions (tiered policies)")
+    ap.add_argument("--static-order", action="store_true",
+                    help="disable cache-hit-first tile ordering")
     ap.add_argument("--comm-mode", default="hybrid",
                     choices=["dense", "sparse", "hybrid"])
     ap.add_argument("--disk-mode", type=int, default=1)
@@ -71,6 +80,9 @@ def main(argv=None):
         cache_mode=args.cache_mode if args.cache_mode == "auto"
         else int(args.cache_mode),
         comm_mode=args.comm_mode,
+        cache_policy=args.cache_policy,
+        cache_promote_hits=args.cache_promote_hits,
+        cache_aware_order=not args.static_order,
         max_supersteps=args.supersteps,
         pipeline=args.pipeline,
         prefetch_depth=args.prefetch_depth,
@@ -91,6 +103,15 @@ def main(argv=None):
           f"mode={eng.cache_mode}, "
           f"disk-stall {res.disk_stall_fraction()*100:.0f}% of wall time"
           f"{' (pipelined)' if args.pipeline else ''}")
+    if args.cache_policy != "lru":
+        promo = sum(x.cache_promotions for x in res.history)
+        demo = sum(x.cache_demotions for x in res.history)
+        tiers = ", ".join(
+            f"{name}: {d['tiles']} tiles/{d['bytes']/1e6:.1f} MB "
+            f"({d['hits']} hits)"
+            for name, d in sorted(h.cache_tiers.items()))
+        print(f"  cache tiers [{args.cache_policy}]: {tiers or 'empty'}; "
+              f"{promo} promotions, {demo} demotions")
     return res
 
 

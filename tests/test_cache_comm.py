@@ -102,6 +102,86 @@ def test_wire_bytes_model_matches_payloads():
     assert est_d == len(comm.dense_payload(vals, upd))
 
 
+def test_wire_bytes_dense_parity_non_multiple_of_8():
+    """The dense bitvector is np.packbits output = ceil(V/8) bytes; the
+    estimate must match the real payload for V not divisible by 8
+    (regression: V // 8 undercounted by one byte)."""
+    for nv in (7, 1001, 4093, 4095, 4097):
+        vals = np.zeros(nv, np.float32)
+        upd = np.ones(nv, bool)
+        est = comm.wire_bytes_estimate(nv, 1.0)
+        assert est == len(comm.dense_payload(vals, upd)), nv
+
+
+def test_plan_broadcast_rejects_unknown_compressor():
+    vals = np.zeros(16, np.float32)
+    upd = np.ones(16, bool)
+    with pytest.raises(ValueError, match="snappy"):
+        comm.plan_broadcast(vals, upd, compressor="snappy")
+
+
+def test_plan_broadcast_records_actual_codec():
+    """The recorded compressor must name the codec that actually ran —
+    zlib-N when repro.compat has fallen back from zstd (regression: the
+    record always claimed zstd)."""
+    from repro import compat
+
+    vals = np.zeros(64, np.float32)
+    upd = np.ones(64, bool)
+    rec = comm.plan_broadcast(vals, upd, compressor="zstd-1")
+    expected = "zstd-1" if compat.HAVE_ZSTD else "zlib-1"
+    assert rec.compressor == expected
+    assert comm.plan_broadcast(vals, upd, compressor="none").compressor == "none"
+    _, label9 = comm.resolve_compressor("zstd-9")
+    assert label9.endswith("-9")
+
+
+def test_forced_sparse_overflow_falls_back_to_dense():
+    """Forced mode="sparse" with more updates than the fixed compaction
+    capacity used to silently truncate (jnp.nonzero(..., size=capacity));
+    the global overflow guard must now deliver every update via the dense
+    fallback."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map_unchecked
+    from repro.launch.mesh import make_mesh
+
+    nv, capacity = 64, 8
+    mesh = make_mesh((1,), ("data",))
+    old = jnp.zeros(nv, jnp.float32)
+    new = jnp.arange(1, nv + 1, dtype=jnp.float32)
+
+    fn = shard_map_unchecked(
+        lambda o, n, u: comm.hybrid_broadcast(o, n, u, "data",
+                                              capacity=capacity, mode="sparse"),
+        mesh, in_specs=(P(), P(), P()), out_specs=(P(), P()))
+
+    # overflow: 64 updates > capacity 8 -> dense fallback, nothing dropped
+    out, _ = fn(old, new, jnp.ones(nv, bool))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(new))
+
+    # no overflow: the sparse path itself is untouched
+    upd = np.zeros(nv, bool)
+    upd[:capacity - 2] = True
+    out2, _ = fn(old, new, jnp.asarray(upd))
+    ref = np.where(upd, np.asarray(new), 0.0)
+    np.testing.assert_array_equal(np.asarray(out2), ref)
+
+    # hybrid mode with a caller-supplied capacity below the density switch
+    # point must keep the guard too: density 0.31 < 0.4 selects the sparse
+    # branch, 20 updates > capacity 8 would truncate without it
+    fn_h = shard_map_unchecked(
+        lambda o, n, u: comm.hybrid_broadcast(o, n, u, "data",
+                                              capacity=capacity, mode="hybrid"),
+        mesh, in_specs=(P(), P(), P()), out_specs=(P(), P()))
+    upd3 = np.zeros(nv, bool)
+    upd3[:20] = True
+    out3, _ = fn_h(old, new, jnp.asarray(upd3))
+    ref3 = np.where(upd3, np.asarray(new), 0.0)
+    np.testing.assert_array_equal(np.asarray(out3), ref3)
+
+
 def test_compression_reduces_wire_bytes():
     rng = np.random.default_rng(0)
     nv = 10000
