@@ -262,6 +262,57 @@ def bench_pipeline_overlap():
          f"stall_per_io_reduced={stall_red:.2f}")
 
 
+def bench_multi_query():
+    """Q-sweep for the multi-query GAB layer (DESIGN.md §9): batch Q
+    personalized-PageRank instances into one edge pass and report tile-I/O
+    bytes per query and wall-clock per query vs Q independent runs.  The
+    paper's dominant cost — streaming every tile from the disk tier each
+    superstep — is paid once per superstep regardless of Q, so per-query
+    I/O should fall ~1/Q (modulo slower stragglers keeping late supersteps
+    alive after query retirement)."""
+    from benchmarks import common
+    from repro.core.apps import PersonalizedPageRank
+    from repro.core.engine import EngineConfig, OutOfCoreEngine
+
+    if common.SMOKE:
+        nv, ne, tile, qs, steps = 8_000, 60_000, 1024, (1, 4), 5
+    else:
+        nv, ne, tile, qs, steps = NV, NE, 8192, (1, 8, 32, 128), 8
+    store = make_store(nv, ne, tile, disk_mode=3)
+    plan = store.load_plan()
+    total = sum(store.tile_disk_bytes(t) for t in range(plan.num_tiles))
+    rng = np.random.default_rng(0)
+    all_seeds = tuple(int(v) for v in rng.choice(nv, size=max(qs), replace=False))
+
+    # Fixed superstep horizon for every Q: per-*run* I/O would conflate
+    # amortization with per-seed convergence speed (a lone PPR query can
+    # retire in a handful of supersteps; a 128-batch runs as long as its
+    # slowest member).  Per-superstep tile I/O is the paper-faithful cost
+    # unit and must be flat in Q.
+    def run_q(seeds):
+        eng = OutOfCoreEngine(store, EngineConfig(
+            num_servers=2, cache_capacity_bytes=int(total * 0.25 / 2),
+            cache_mode="auto", tile_skipping=False, max_supersteps=steps))
+        t0 = time.perf_counter()
+        res = eng.run(PersonalizedPageRank(seeds=seeds))
+        dt = time.perf_counter() - t0
+        ss = max(res.supersteps, 1)
+        io_ss = sum(h.disk_bytes_read for h in res.history) / ss
+        return res, dt / ss, io_ss
+
+    _, t1, io1 = run_q((all_seeds[0],))
+    emit("multi_query.q1", t1 * 1e6,
+         f"io_MB_per_superstep={io1/1e6:.2f} (baseline)")
+    for q in qs[1:]:
+        res, tq, ioq = run_q(all_seeds[:q])
+        emit(f"multi_query.q{q}", tq * 1e6,
+             f"io_MB_per_superstep={ioq/1e6:.2f} "
+             f"io_MB_per_ss_per_query={ioq/q/1e6:.3f} "
+             f"ms_per_ss_per_query={tq/q*1e3:.1f} "
+             f"io_amortization={io1*q/max(ioq,1):.1f}x "
+             f"time_amortization={t1*q/max(tq,1e-9):.1f}x")
+
+
 def bench_scheduler():
     """Beyond-paper: straggler mitigation makespan (DESIGN.md §5)."""
     from repro.core.partition import assign_tiles
@@ -283,4 +334,4 @@ def bench_scheduler():
 ALL = [bench_partition_fig5, bench_compression_tablev, bench_cache_fig8,
        bench_cache_tiers, bench_comm_fig9, bench_pagerank_fig10,
        bench_sssp_fig11, bench_memory_fig7, bench_costmodel_tableiii,
-       bench_pipeline_overlap, bench_scheduler]
+       bench_pipeline_overlap, bench_scheduler, bench_multi_query]

@@ -2,6 +2,14 @@
 
 PageRank and SSSP follow the paper's pseudo-code exactly; WCC, BFS and
 in-degree-count are standard extras exercising min/sum monoids.
+
+Batched (multi-query) programs — DESIGN.md §9: PersonalizedPageRank,
+MultiSourceBFS and LandmarkDistances evaluate Q program instances in one
+edge pass; vertex state is [V, Q] and per-column convergence lets the
+engine retire finished queries early.  Their hooks receive [E, Q] / [R, Q]
+arrays and broadcast the shared 1-D aux/edge terms explicitly, so each
+column's float ops are identical to a Q=1 run of the same program —
+batched results are bit-identical to independent runs.
 """
 from __future__ import annotations
 
@@ -120,10 +128,110 @@ class InDegree(VertexProgram):
         return accum
 
 
+# ---------------------------------------------------------------------------
+# Batched multi-query programs (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class PersonalizedPageRank(VertexProgram):
+    """Q-seed personalized PageRank: column q solves
+    ``pr = (1-d) * e_{seed_q} + d * P^T pr`` — teleport mass concentrated
+    on that query's seed vertex instead of spread uniformly.
+
+    One batched run shares every tile visit across all Q seed queries; the
+    engine retires each column as it converges.
+    """
+
+    seeds: tuple[int, ...] = (0,)
+    damping: float = 0.85
+    combine: str = "sum"
+    src_aux: tuple[str, ...] = ("inv_out_degree",)
+    dst_aux: tuple[str, ...] = ("seed_mass",)
+    update_tol: float = 1e-9
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.seeds)
+
+    def init(self, num_vertices, out_degree, in_degree, **kw):
+        q = len(self.seeds)
+        inv = np.zeros(num_vertices, dtype=np.float32)
+        nz = out_degree > 0
+        inv[nz] = 1.0 / out_degree[nz]
+        seed_mass = np.zeros((num_vertices, q), dtype=np.float32)
+        seed_mass[np.asarray(self.seeds, dtype=np.int64), np.arange(q)] = 1.0
+        return {
+            "value": seed_mass.copy(),   # start with all mass on the seed
+            "inv_out_degree": inv,       # [V]: shared across queries
+            "seed_mass": seed_mass,      # [V, Q]: per-query teleport vector
+        }
+
+    def gather(self, src_value, edge_val, aux):
+        # src_value [E, Q]; shared per-edge factor broadcast over the query
+        # axis (edge_val is 1.0 real / 0.0 padding -> padding inert)
+        return src_value * (aux["inv_out_degree"] * edge_val)[:, None]
+
+    def apply(self, old_value, accum, aux):
+        return (1.0 - self.damping) * aux["seed_mass"] + self.damping * accum
+
+
+@dataclasses.dataclass(eq=False)
+class MultiSourceBFS(VertexProgram):
+    """Level-synchronous BFS from Q sources at once (hop counts per column)."""
+
+    sources: tuple[int, ...] = (0,)
+    combine: str = "min"
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.sources)
+
+    def init(self, num_vertices, out_degree, in_degree, **kw):
+        q = len(self.sources)
+        v = np.full((num_vertices, q), np.inf, dtype=np.float32)
+        v[np.asarray(self.sources, dtype=np.int64), np.arange(q)] = 0.0
+        return {"value": v}
+
+    def gather(self, src_value, edge_val, aux):
+        return src_value + 1.0
+
+    def apply(self, old_value, accum, aux):
+        return jnp.minimum(old_value, accum)
+
+
+@dataclasses.dataclass(eq=False)
+class LandmarkDistances(VertexProgram):
+    """Weighted shortest-path distances from Q landmark vertices (min-plus)
+    — the batched form of SSSP, e.g. for landmark-based distance oracles."""
+
+    landmarks: tuple[int, ...] = (0,)
+    combine: str = "min"
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.landmarks)
+
+    def init(self, num_vertices, out_degree, in_degree, **kw):
+        q = len(self.landmarks)
+        v = np.full((num_vertices, q), np.inf, dtype=np.float32)
+        v[np.asarray(self.landmarks, dtype=np.int64), np.arange(q)] = 0.0
+        return {"value": v}
+
+    def gather(self, src_value, edge_val, aux):
+        # min-plus message per column; inf + w == inf keeps unreached inert
+        return src_value + edge_val[:, None]
+
+    def apply(self, old_value, accum, aux):
+        return jnp.minimum(old_value, accum)
+
+
 APPS = {
     "pagerank": PageRank,
     "sssp": SSSP,
     "wcc": WCC,
     "bfs": BFS,
     "indegree": InDegree,
+    "ppr": PersonalizedPageRank,
+    "msbfs": MultiSourceBFS,
+    "landmarks": LandmarkDistances,
 }

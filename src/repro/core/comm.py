@@ -56,11 +56,14 @@ def resolve_compressor(name: str) -> tuple[int, str]:
 
 @dataclasses.dataclass
 class BroadcastRecord:
-    mode: str                 # "dense" | "sparse"
+    mode: str                 # "dense" | "sparse" | "mixed" (2-D payloads)
     raw_bytes: int            # pre-compression payload
     wire_bytes: int           # post-compression payload
     density: float
     compressor: str
+    # multi-query payloads: per-query-column mode choices ("dense"/"sparse"),
+    # None for classic 1-D payloads
+    query_modes: Optional[tuple] = None
 
 
 def dense_payload(values: np.ndarray, updated: np.ndarray) -> bytes:
@@ -73,6 +76,42 @@ def sparse_payload(values: np.ndarray, updated: np.ndarray) -> bytes:
     return idx.tobytes() + values[idx].tobytes()
 
 
+def multi_query_payload(
+    values: np.ndarray,          # [V, Q]
+    updated: np.ndarray,         # [V, Q] bool
+    threshold: float = DENSITY_THRESHOLD,
+    mode: str = "hybrid",
+) -> tuple[bytes, tuple]:
+    """2-D broadcast payload (DESIGN.md §9): density is measured *per query
+    column*.  Dense columns ship a ceil(V/8) bitvector + the full column;
+    sparse columns pool their updates into one packed section of
+    (vertex: uint32, query: uint32) pairs followed by the values.  Returns
+    (payload bytes, per-column mode tuple)."""
+    nv, nq = values.shape
+    parts: list[bytes] = []
+    modes: list[str] = []
+    sp_pairs: list[np.ndarray] = []
+    sp_vals: list[np.ndarray] = []
+    for q in range(nq):
+        col_upd = updated[:, q]
+        density_q = float(col_upd.mean()) if nv else 0.0
+        use_dense = mode == "dense" or (mode == "hybrid" and density_q >= threshold)
+        if use_dense:
+            parts.append(dense_payload(values[:, q], col_upd))
+            modes.append("dense")
+        else:
+            idx = np.nonzero(col_upd)[0].astype(np.uint32)
+            sp_pairs.append(np.stack(
+                [idx, np.full(idx.shape, q, dtype=np.uint32)], axis=1))
+            sp_vals.append(values[idx, q])
+            modes.append("sparse")
+    if sp_pairs:
+        pairs = np.concatenate(sp_pairs, axis=0)
+        vals = np.concatenate(sp_vals, axis=0)
+        parts.append(pairs.tobytes() + vals.tobytes())
+    return b"".join(parts), tuple(modes)
+
+
 def plan_broadcast(
     values: np.ndarray,
     updated: np.ndarray,
@@ -80,15 +119,26 @@ def plan_broadcast(
     compressor: str = "zstd-1",       # paper default: snappy
     mode: str = "hybrid",             # "dense" | "sparse" | "hybrid"
 ) -> BroadcastRecord:
+    """Measure one server's broadcast payload.  ``values``/``updated`` are
+    ``[V]`` (classic) or ``[V, Q]`` (multi-query; per-column mode choice,
+    see :func:`multi_query_payload`)."""
     comp_mode, codec = resolve_compressor(compressor)
     density = float(updated.mean()) if updated.size else 0.0
-    use_dense = mode == "dense" or (mode == "hybrid" and density >= threshold)
-    payload = dense_payload(values, updated) if use_dense else sparse_payload(values, updated)
+    if values.ndim == 2:
+        payload, qmodes = multi_query_payload(values, updated, threshold, mode)
+        uniq = set(qmodes)
+        rec_mode = "sparse" if not qmodes else (
+            qmodes[0] if len(uniq) == 1 else "mixed")
+    else:
+        use_dense = mode == "dense" or (mode == "hybrid" and density >= threshold)
+        payload = (dense_payload(values, updated) if use_dense
+                   else sparse_payload(values, updated))
+        rec_mode, qmodes = ("dense" if use_dense else "sparse"), None
     raw = len(payload)
     wire = len(formats.compress_blob(payload, comp_mode))
     return BroadcastRecord(
-        mode="dense" if use_dense else "sparse",
-        raw_bytes=raw, wire_bytes=wire, density=density, compressor=codec,
+        mode=rec_mode, raw_bytes=raw, wire_bytes=wire, density=density,
+        compressor=codec, query_modes=qmodes,
     )
 
 
@@ -139,7 +189,8 @@ def dense_broadcast(old: jax.Array, new_masked: jax.Array,
     """Dense mode: psum of masked new values + update flags.  Tiles own
     disjoint rows, so at most one server contributes per vertex.  (Masked
     values rather than additive deltas: +/-inf-valued programs like SSSP
-    would produce inf-inf=NaN under a delta formulation.)"""
+    would produce inf-inf=NaN under a delta formulation.)  Shape-
+    polymorphic: works for [V] and [V, Q] alike (elementwise + psum)."""
     vals = jax.lax.psum(new_masked, axis_names)
     cnt = jax.lax.psum(updated.astype(jnp.float32), axis_names)
     return jnp.where(cnt > 0, vals, old)
@@ -157,7 +208,16 @@ def sparse_broadcast(old: jax.Array, new_masked: jax.Array,
     per-shard update counts) so every shard takes the same branch and the
     collectives stay matched; on overflow the whole step falls back to a
     dense psum broadcast instead of dropping updates.
+
+    2-D ``[V, Q]`` inputs are flattened so the compaction packs
+    (vertex, query) cells; ``capacity`` then bounds flat cell updates.
     """
+    if old.ndim > 1:
+        shape = old.shape
+        out = sparse_broadcast(old.reshape(-1), new_masked.reshape(-1),
+                               updated.reshape(-1), capacity, axis_name,
+                               value_dtype)
+        return out.reshape(shape)
     nv = old.shape[0]
     if capacity >= nv:       # cannot truncate: skip the guard entirely
         return _sparse_broadcast_unchecked(old, new_masked, updated, capacity,
@@ -208,7 +268,18 @@ def hybrid_broadcast(
 
     mode="hybrid" follows the paper: measure the *global* density and pick
     dense (psum) vs sparse (compact+all_gather) inside lax.cond.
+
+    ``[V, Q]`` multi-query state is handled by flattening to ``V*Q`` cells
+    (density and sparse capacity are then measured over (vertex, query)
+    pairs) and reshaping the result back.
     """
+    if old.ndim > 1:
+        shape = old.shape
+        out, density = hybrid_broadcast(
+            old.reshape(-1), new_masked.reshape(-1), updated.reshape(-1),
+            axis_name, capacity=capacity, threshold=threshold, mode=mode,
+            value_dtype=value_dtype)
+        return out.reshape(shape), density
     nv = old.shape[0]
     capacity = capacity or sparse_capacity(nv, threshold)
     local_updates = jnp.sum(updated.astype(jnp.float32))
@@ -243,10 +314,16 @@ def hybrid_broadcast(
 
 
 def wire_bytes_estimate(num_vertices: int, density: float, itemsize: int = 4,
-                        threshold: float = DENSITY_THRESHOLD) -> int:
-    """Analytic per-server payload size (paper Fig. 9 model)."""
+                        threshold: float = DENSITY_THRESHOLD,
+                        index_bytes: int = 4) -> int:
+    """Analytic per-server payload size (paper Fig. 9 model).
+
+    ``index_bytes`` is the per-update index overhead on the sparse path:
+    4 for classic 1-D payloads (uint32 vertex), 8 for multi-query 2-D
+    payloads (uint32 vertex + uint32 query pair) — callers estimating a
+    flattened [V, Q] payload pass ``num_vertices=V*Q, index_bytes=8``."""
     if density >= threshold:
         # bitvector is np.packbits output: ceil(V / 8) bytes
         return (num_vertices + 7) // 8 + num_vertices * itemsize
     u = int(density * num_vertices)
-    return u * (4 + itemsize)
+    return u * (index_bytes + itemsize)

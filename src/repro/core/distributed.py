@@ -87,8 +87,12 @@ def build_superstep(
     """Returns a jit-able superstep: (values, aux, stk) -> (values', density).
 
     values/aux are replicated; stk arrays are sharded along ``tile_axes``.
+    Multi-query programs (values [V, Q]) work unchanged: the stacked step
+    is shape-polymorphic and hybrid_broadcast flattens to (vertex, query)
+    cells — sparse capacity is therefore scaled by Q.
     """
-    capacity = comm.sparse_capacity(num_vertices, cfg.threshold)
+    nq = max(getattr(prog, "num_queries", 1), 1)
+    capacity = comm.sparse_capacity(num_vertices * nq, cfg.threshold)
     axis = tile_axes if len(tile_axes) > 1 else tile_axes[0]
 
     def local_step(values, aux, src, dst_local, val, row_start, num_rows):

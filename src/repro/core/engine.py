@@ -71,6 +71,10 @@ class EngineConfig:
     prefetch_depth: int = 4                 # tiles read+decompressed ahead
     prefetch_workers: int = 2               # parallel read/decompress threads
     stack_size: int = 4                     # tiles per jitted batch dispatch
+    # record every tile-skip decision (superstep, active ids, run/skipped
+    # tile lists) into engine.skip_log — test/debug aid for the skip-filter
+    # safety property; off by default (the active-id snapshot costs memory)
+    debug_skip_log: bool = False
 
 
 @dataclasses.dataclass
@@ -87,7 +91,7 @@ class SuperstepStats:
     wire_bytes: int           # after compression
     network_bytes: int        # wire * (N-1): each server ships to N-1 peers
     cache_hit_ratio: float
-    disk_bytes_read: int
+    disk_bytes_read: int      # bytes read from the disk tier THIS superstep
     # time the compute loop spent *blocked* waiting for tile data.  Serial
     # engine: equals the full load time.  Pipelined engine: only the residual
     # wait after prefetch overlap — the disk-stall the pipeline couldn't hide.
@@ -100,6 +104,16 @@ class SuperstepStats:
     cache_demotions: int = 0
     # per-tier residency at the barrier: {tier: {tiles, bytes, hits}}
     cache_tiers: dict = dataclasses.field(default_factory=dict)
+    # --- multi-query accounting (DESIGN.md §9; all trivial for 1-D runs) ---
+    # query columns still live when this superstep started
+    active_queries: int = 1
+    # updated (vertex, query) cells; == updated_vertices for 1-D runs
+    updated_pairs: int = 0
+    # {global query id: updated-cell count} for active queries
+    updated_per_query: dict = dataclasses.field(default_factory=dict)
+    # global query ids whose columns converged (and were compacted out)
+    # at the end of this superstep
+    retired_queries: tuple = ()
 
     @property
     def stall_fraction(self) -> float:
@@ -119,6 +133,9 @@ class RunResult:
     history: list[SuperstepStats]
     supersteps: int
     converged: bool
+    # multi-query runs: supersteps each query column took to converge
+    # (index = global query id; -1 if it hit max_supersteps); None for 1-D
+    per_query_supersteps: Optional[np.ndarray] = None
 
     def total_seconds(self) -> float:
         return sum(h.seconds for h in self.history)
@@ -164,12 +181,28 @@ class OutOfCoreEngine:
         self._stacks: Optional[list] = None   # per-server device-resident tiles
         self._stack_fn = None
         self._streamed: list[list[int]] = [[] for _ in range(N)]
+        #: populated when cfg.debug_skip_log: one dict per (superstep, server)
+        #: with the active source ids and the run/skipped tile partition
+        self.skip_log: list[dict] = []
         self._wire_ratio: Optional[float] = None
         self._io_busy_cum = 0.0   # cache io_seconds at end of last superstep
         self._promo_cum = 0       # cache promotions at end of last superstep
         self._demo_cum = 0
+        self._disk_cum = 0        # cache disk_bytes_read at last superstep
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _split_updates(rows, new, upd):
+        """Per-tile (or per-server) update extraction, shape-polymorphic.
+
+        rows [R] global vertex ids; new/upd [R] or [R, Qa].  Returns
+        (vertex ids with any update, their value rows, per-query mask rows
+        or None for 1-D runs)."""
+        if upd.ndim == 2:
+            vmask = upd.any(axis=1)
+            return rows[vmask], new[vmask], upd[vmask]
+        return rows[upd], new[upd], None
+
     def run(self, prog: VertexProgram,
             max_supersteps: Optional[int] = None) -> RunResult:
         cfg = self.cfg
@@ -177,8 +210,21 @@ class OutOfCoreEngine:
         state = prog.init(nv, self.out_degree.astype(np.float64),
                           self.in_degree.astype(np.float64))
         values = np.asarray(state.pop("value"))
-        aux_dev = {k: jnp.asarray(v) for k, v in state.items()}
+        aux_np = {k: np.asarray(v) for k, v in state.items()}
+        aux_dev = {k: jnp.asarray(v) for k, v in aux_np.items()}
         row_cap = self.plan.row_cap
+
+        # --- multi-query bookkeeping (DESIGN.md §9) ---
+        # values [V, Q]: Q program instances share every tile visit.  A query
+        # column that produces zero updates in a superstep has reached its
+        # fixpoint; it is *retired* — its column is written to the result
+        # buffer and compacted out so later supersteps (compute, broadcast
+        # payloads, updated-mask accounting) no longer pay for it.
+        multi_q = values.ndim == 2
+        nq_total = values.shape[1] if multi_q else 1
+        active_q = np.arange(nq_total)          # global ids of live columns
+        final_values = values.copy() if multi_q else None
+        per_query_ss = np.full(nq_total, -1, dtype=np.int64) if multi_q else None
 
         max_ss = max_supersteps or cfg.max_supersteps
         history: list[SuperstepStats] = []
@@ -195,9 +241,11 @@ class OutOfCoreEngine:
             stall_s = 0.0
             tiles_done = 0
             tiles_skipped = 0
+            qa = len(active_q) if multi_q else 1   # live columns this superstep
             upd_idx_parts: list[np.ndarray] = []
             upd_val_parts: list[np.ndarray] = []
-            per_server_updates: list[tuple[np.ndarray, np.ndarray]] = []
+            upd_msk_parts: list[np.ndarray] = []
+            per_server_updates: list[tuple] = []
             bcast_futures: dict[int, object] = {}
             sample = not (cfg.comm_accounting == "sampled" and ss % 4 != 0
                           and self._wire_ratio is not None)
@@ -217,6 +265,7 @@ class OutOfCoreEngine:
             for s in range(cfg.num_servers):
                 s_idx: list[np.ndarray] = []
                 s_val: list[np.ndarray] = []
+                s_msk: list[np.ndarray] = []
                 server_tiles = self.assignment[s]
                 if cfg.engine_mode in ("stacked", "merged") and not skip_on:
                     if self._stacks is None:
@@ -238,11 +287,13 @@ class OutOfCoreEngine:
                                else self._stack_step)
                     new_masked, upd = step_fn(prog, values_dev, aux_dev,
                                               self._stacks[s])
-                    si = np.nonzero(np.asarray(upd))[0]
-                    sv = np.asarray(new_masked)[si]
+                    si, sv, sm = self._split_updates(
+                        np.arange(nv), np.asarray(new_masked), np.asarray(upd))
                     comp_s += time.perf_counter() - t0
                     s_idx.append(si)
                     s_val.append(sv.astype(values.dtype))
+                    if sm is not None:
+                        s_msk.append(sm)
                     tiles_done += len(self.assignment[s]) - len(self._streamed[s])
                     server_tiles = self._streamed[s]
 
@@ -262,6 +313,13 @@ class OutOfCoreEngine:
                             run_list.append(tid)
                         else:
                             tiles_skipped += 1
+                    if cfg.debug_skip_log:
+                        self.skip_log.append(dict(
+                            superstep=ss, server=s,
+                            active=np.asarray(updated_ids).copy(),
+                            run=list(run_list),
+                            skipped=[t for t in server_tiles
+                                     if t not in run_list]))
                 else:
                     run_list = list(server_tiles)
 
@@ -269,11 +327,12 @@ class OutOfCoreEngine:
                     run_list = self._order_cache_first(s, run_list)
 
                 if cfg.pipeline:
-                    p_idx, p_val, ld, cp, stl = self._run_tiles_pipelined(
+                    p_idx, p_val, p_msk, ld, cp, stl = self._run_tiles_pipelined(
                         s, run_list, prog, values_dev, aux_dev,
                         filters if building_filters else None, nv)
                     s_idx += p_idx
                     s_val += p_val
+                    s_msk += p_msk
                     load_s += ld
                     comp_s += cp
                     stall_s += stl
@@ -296,23 +355,32 @@ class OutOfCoreEngine:
                             tile.meta.row_start, tile.meta.num_rows,
                             row_cap, cfg.seg_impl,
                         )
-                        rows = np.asarray(rows)
-                        new = np.asarray(new)
-                        upd = np.asarray(upd)
+                        ri, rv, rm = self._split_updates(
+                            np.asarray(rows), np.asarray(new), np.asarray(upd))
                         comp_s += time.perf_counter() - t0
-                        s_idx.append(rows[upd])
-                        s_val.append(new[upd])
+                        s_idx.append(ri)
+                        s_val.append(rv)
+                        if rm is not None:
+                            s_msk.append(rm)
                         tiles_done += 1
                 si = np.concatenate(s_idx) if s_idx else np.zeros(0, np.int64)
-                sv = np.concatenate(s_val) if s_val else np.zeros(0, values.dtype)
-                per_server_updates.append((si, sv))
+                val_shape = (0, qa) if multi_q else (0,)
+                sv = (np.concatenate(s_val) if s_val
+                      else np.zeros(val_shape, values.dtype))
+                sm = None
+                if multi_q:
+                    sm = (np.concatenate(s_msk) if s_msk
+                          else np.zeros(val_shape, dtype=bool))
+                per_server_updates.append((si, sv, sm))
                 upd_idx_parts.append(si)
                 upd_val_parts.append(sv)
+                if multi_q:
+                    upd_msk_parts.append(sm)
                 if cfg.pipeline and sample:
                     # overlap this server's payload compression with the next
                     # server's compute; records collected at the barrier below
                     bcast_futures[s] = self._measure_broadcast(
-                        si, sv, nv, values.dtype, background=True)
+                        si, sv, sm, nv, qa, values.dtype, background=True)
 
             if building_filters and all(f is not None for f in filters):
                 self._filters = filters
@@ -321,24 +389,44 @@ class OutOfCoreEngine:
             # --- Broadcast (BSP barrier): measure payloads, apply updates ---
             raw_b = wire_b = 0
             for s in range(cfg.num_servers):
-                si, sv = per_server_updates[s]
+                si, sv, sm = per_server_updates[s]
                 if sample:
                     if s in bcast_futures:
                         rec = bcast_futures[s].result()
                     else:
-                        rec = self._measure_broadcast(si, sv, nv, values.dtype)
+                        rec = self._measure_broadcast(si, sv, sm, nv, qa,
+                                                      values.dtype)
                     raw_b += rec.raw_bytes
                     wire_b += rec.wire_bytes
                 else:
-                    est = comm.wire_bytes_estimate(nv, len(si) / max(nv, 1))
+                    pairs = int(sm.sum()) if sm is not None else len(si)
+                    n_eff = nv * qa
+                    est = comm.wire_bytes_estimate(
+                        n_eff, pairs / max(n_eff, 1),
+                        # 2-D sparse payloads pack (vertex, query) u32 pairs
+                        index_bytes=8 if sm is not None else 4)
                     raw_b += est
                     wire_b += int(est * self._wire_ratio)
             if sample and raw_b:
                 self._wire_ratio = wire_b / raw_b
 
             all_idx = np.concatenate(upd_idx_parts) if upd_idx_parts else np.zeros(0, np.int64)
-            all_val = np.concatenate(upd_val_parts) if upd_val_parts else np.zeros(0, values.dtype)
-            values[all_idx] = all_val
+            all_val = (np.concatenate(upd_val_parts) if upd_val_parts
+                       else np.zeros((0, qa) if multi_q else (0,), values.dtype))
+            if multi_q:
+                # per-cell application: a row touched by query A must not
+                # clobber query B's column with a masked zero / sub-tol value
+                all_msk = (np.concatenate(upd_msk_parts) if upd_msk_parts
+                           else np.zeros((0, qa), dtype=bool))
+                cur = values[all_idx]
+                cur[all_msk] = all_val[all_msk]
+                values[all_idx] = cur
+                upd_per_q = all_msk.sum(axis=0)
+                updated_pairs = int(all_msk.sum())
+            else:
+                values[all_idx] = all_val
+                upd_per_q = None
+                updated_pairs = int(len(all_idx))
             updated_ids = all_idx
 
             # Re-tier at the barrier: off the tile hot path, after this
@@ -354,6 +442,36 @@ class OutOfCoreEngine:
             demo = cache_stats["demotions"] - self._demo_cum
             self._promo_cum = cache_stats["promotions"]
             self._demo_cum = cache_stats["demotions"]
+            # the cache counter is cumulative over the run; the stat is the
+            # per-superstep delta (like io_busy/promotions above)
+            disk_b = cache_stats["disk_bytes_read"] - self._disk_cum
+            self._disk_cum = cache_stats["disk_bytes_read"]
+            # --- query retirement (multi-query): a column with zero updated
+            # cells this superstep is at its fixpoint — exactly the condition
+            # under which a single-query run of that column would have
+            # converged.  Freeze it into the result buffer and compact it out
+            # so subsequent supersteps (tile compute, broadcast payloads,
+            # updated-mask accounting) exclude it entirely.
+            retired: tuple = ()
+            upd_map: dict = {}
+            if multi_q:
+                upd_map = {int(g): int(n) for g, n in zip(active_q, upd_per_q)}
+                done = np.nonzero(upd_per_q == 0)[0]
+                if len(done):
+                    retired = tuple(int(active_q[c]) for c in done)
+                    for c in done:
+                        gq = int(active_q[c])
+                        final_values[:, gq] = values[:, c]
+                        per_query_ss[gq] = ss + 1
+                    keep = upd_per_q > 0
+                    values = np.ascontiguousarray(values[:, keep])
+                    active_q = active_q[keep]
+                    for k in list(aux_np):
+                        a = aux_np[k]
+                        if a.ndim == 2 and a.shape[1] == qa:   # per-query aux
+                            aux_np[k] = np.ascontiguousarray(a[:, keep])
+                            aux_dev[k] = jnp.asarray(aux_np[k])
+
             history.append(SuperstepStats(
                 superstep=ss,
                 seconds=time.perf_counter() - t_start,
@@ -367,31 +485,51 @@ class OutOfCoreEngine:
                 wire_bytes=wire_b,
                 network_bytes=wire_b * max(cfg.num_servers - 1, 0),
                 cache_hit_ratio=cache_stats["hit_ratio"],
-                disk_bytes_read=cache_stats["disk_bytes_read"],
+                disk_bytes_read=disk_b,
                 stall_seconds=stall_s,
                 io_busy_seconds=io_busy,
                 cache_promotions=promo,
                 cache_demotions=demo,
                 cache_tiers=cache_stats["tiers"],
+                active_queries=qa,
+                updated_pairs=updated_pairs,
+                updated_per_query=upd_map,
+                retired_queries=retired,
             ))
-            if len(all_idx) == 0:
+            if multi_q:
+                if len(active_q) == 0:
+                    converged = True
+                    break
+            elif len(all_idx) == 0:
                 converged = True
                 break
 
-        return RunResult(values=values, aux=state, history=history,
-                         supersteps=len(history), converged=converged)
+        if multi_q:
+            # flush columns still live at max_supersteps into the result
+            for c, gq in enumerate(active_q):
+                final_values[:, int(gq)] = values[:, c]
+            values = final_values
+        return RunResult(values=values, aux=aux_np, history=history,
+                         supersteps=len(history), converged=converged,
+                         per_query_supersteps=per_query_ss)
 
     # ------------------------------------------------------------------
-    def _measure_broadcast(self, si, sv, nv, dtype, background=False):
+    def _measure_broadcast(self, si, sv, sm, nv, qa, dtype, background=False):
         """Build one server's broadcast payload and measure its wire size —
         inline (returns a BroadcastRecord) or on the comm executor
-        (returns a Future resolving to one)."""
+        (returns a Future resolving to one).  ``sm`` is the per-query
+        updated mask for multi-query runs ([len(si), qa]) or None; the 2-D
+        payload then covers only the ``qa`` still-active query columns."""
         cfg = self.cfg
-        upd_mask = np.zeros(nv, dtype=bool)
-        upd_mask[si] = True
+        if sm is not None:
+            upd_mask = np.zeros((nv, qa), dtype=bool)
+            upd_mask[si] = sm
+        else:
+            upd_mask = np.zeros(nv, dtype=bool)
+            upd_mask[si] = True
         plan = comm.plan_broadcast_async if background else comm.plan_broadcast
         return plan(
-            _densify(sv, si, nv, dtype),
+            _densify(sv, si, nv, qa if sm is not None else None, dtype),
             upd_mask,
             threshold=cfg.comm_threshold,
             compressor=cfg.comm_compressor,
@@ -411,9 +549,10 @@ class OutOfCoreEngine:
         ``run_tile_stack`` call.  The consumer's queue-wait is the disk
         stall the pipeline failed to hide — reported per superstep.
 
-        Returns ([indices], [values], load_s, compute_s, stall_s) with
-        results identical to the serial per-tile loop: tiles own disjoint
-        row ranges and the per-tile math is the same jitted gather/apply.
+        Returns ([indices], [values], [query masks], load_s, compute_s,
+        stall_s) with results identical to the serial per-tile loop: tiles
+        own disjoint row ranges and the per-tile math is the same jitted
+        gather/apply.  The query-mask list is empty for 1-D runs.
         """
         from repro.core.distributed import pad_stack_to
         from repro.core.gab import run_tile_stack
@@ -421,7 +560,7 @@ class OutOfCoreEngine:
 
         cfg = self.cfg
         if not tids:
-            return [], [], 0.0, 0.0, 0.0
+            return [], [], [], 0.0, 0.0, 0.0
         row_cap = self.plan.row_cap
         stack_k = max(1, cfg.stack_size)
         load_s = comp_s = stall_s = 0.0
@@ -467,10 +606,10 @@ class OutOfCoreEngine:
         finally:
             it.close()
 
-        upd_np = np.asarray(upd_acc)
-        si = np.nonzero(upd_np)[0]
-        sv = np.asarray(masked_acc)[si]
-        return [si], [sv], load_s, comp_s, stall_s
+        si, sv, sm = self._split_updates(
+            np.arange(values_dev.shape[0]), np.asarray(masked_acc),
+            np.asarray(upd_acc))
+        return [si], [sv], [] if sm is None else [sm], load_s, comp_s, stall_s
 
     # ------------------------------------------------------------------
     # stacked fast path (engine_mode="stacked"): device-resident tiles
@@ -586,7 +725,8 @@ class OutOfCoreEngine:
         )
 
 
-def _densify(vals: np.ndarray, idx: np.ndarray, nv: int, dtype) -> np.ndarray:
-    out = np.zeros(nv, dtype=dtype)
+def _densify(vals: np.ndarray, idx: np.ndarray, nv: int,
+             nq: Optional[int], dtype) -> np.ndarray:
+    out = np.zeros((nv, nq) if nq is not None else nv, dtype=dtype)
     out[idx] = vals
     return out

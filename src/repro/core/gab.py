@@ -13,6 +13,15 @@ values (All-in-All policy), processes its assigned tiles one at a time
 This module contains the jit-friendly single-tile and stacked-tile step
 functions; orchestration lives in engine.py (out-of-core) and
 distributed.py (shard_map).
+
+Multi-query axis (DESIGN.md §9): vertex values may be ``[V]`` (classic,
+one program instance) or ``[V, Q]`` (Q program instances evaluated in the
+same tile visit — personalized PageRank seeds, multi-source BFS, landmark
+distances).  Every step function here is shape-polymorphic over that
+trailing query axis; per-vertex aux arrays may likewise be ``[V]``
+(shared across queries) or ``[V, Q]`` (per-query, e.g. PPR seed mass).
+One edge pass then serves Q queries: the dominant out-of-core I/O cost is
+paid once and the Pallas one-hot contraction becomes a real GEMM.
 """
 from __future__ import annotations
 
@@ -43,15 +52,23 @@ def segment_reduce(
 ) -> Array:
     """Reduce ``data`` into ``num_segments`` buckets with the given monoid.
 
-    impl="jnp" uses XLA scatter-reduce; impl="pallas_onehot" routes the
-    sum-monoid through the MXU one-hot kernel (see kernels/gab_gather.py).
+    ``data`` may be ``[E]`` or ``[E, Q]`` (multi-query); segments always
+    run along axis 0.
+
+    impl="jnp" uses XLA scatter-reduce; impl="pallas_onehot" routes through
+    the Pallas block kernels (see kernels/gab_gather.py): the sum monoid
+    becomes an MXU one-hot contraction, min/max a masked VPU reduction.
     Tile edges are CSR-sorted by dst (build_tile invariant), so
     ``sorted_ids=True`` by default — XLA's sorted-scatter path (§Perf It4).
     """
-    if impl == "pallas_onehot" and combine == "sum":
+    if impl == "pallas_onehot":
         from repro.kernels import ops as _kops
 
-        return _kops.segment_sum(data, segment_ids, num_segments)
+        fn = {"sum": _kops.segment_sum, "min": _kops.segment_min,
+              "max": _kops.segment_max}.get(combine)
+        if fn is None:
+            raise ValueError(f"unknown combine: {combine}")
+        return fn(data, segment_ids, num_segments)
     kw = dict(num_segments=num_segments, indices_are_sorted=sorted_ids)
     if combine == "sum":
         return jax.ops.segment_sum(data, segment_ids, **kw)
@@ -65,7 +82,14 @@ def segment_reduce(
 @dataclasses.dataclass(eq=False)  # identity hash: instances are jit static args
 class VertexProgram:
     """Base class for GAB vertex programs.  Subclasses override the four
-    hooks below; all jnp code must be jit-compatible."""
+    hooks below; all jnp code must be jit-compatible.
+
+    Batched (multi-query) programs override ``num_queries`` (> 1) and
+    return a ``[V, Q]`` ``value`` from :meth:`init`; their hooks then see
+    ``[E, Q]`` / ``[R, Q]`` arrays and must broadcast 1-D shared aux
+    explicitly (e.g. ``aux[k][:, None]``).  Per-query aux arrays are
+    ``[V, Q]`` and are column-compacted alongside values when queries
+    retire (engine.py)."""
 
     combine: str = "sum"
     #: names of auxiliary per-vertex arrays gathered at the *source* side
@@ -75,6 +99,11 @@ class VertexProgram:
     #: tolerance used to decide whether a value "changed" (paper: broadcast
     #: only updated values); exact (0.0) for discrete programs.
     update_tol: float = 0.0
+
+    # number of query instances batched into one edge pass; values are
+    # [V, num_queries] when > 1 (plain class attr, not a dataclass field —
+    # batched subclasses override it with a property derived from seeds)
+    num_queries = 1
 
     # -- hooks ------------------------------------------------------------
     def init(self, num_vertices: int, out_degree: np.ndarray,
@@ -105,6 +134,29 @@ class VertexProgram:
 # jit-friendly tile step
 # ---------------------------------------------------------------------------
 
+def _bcast_rows(mask: Array, ref: Array) -> Array:
+    """Broadcast a per-row [R] mask against [R] or [R, Q] data."""
+    return mask[:, None] if ref.ndim == 2 else mask
+
+
+def _dslice(buf: Array, start, rows: int) -> Array:
+    """dynamic_slice of ``rows`` leading rows starting at ``start``,
+    covering the full trailing (query) axis if present."""
+    return jax.lax.dynamic_slice(
+        buf, (start,) + (0,) * (buf.ndim - 1), (rows,) + buf.shape[1:])
+
+
+def _dupdate(buf: Array, window: Array, start) -> Array:
+    return jax.lax.dynamic_update_slice(
+        buf, window, (start,) + (0,) * (buf.ndim - 1))
+
+
+def _row_pad(arr: Array, pad: int) -> Array:
+    """Append ``pad`` zero rows (any trailing shape) to ``arr``."""
+    z = jnp.zeros((pad,) + arr.shape[1:], arr.dtype)
+    return jnp.concatenate([arr, z])
+
+
 def tile_gather_apply(
     prog: VertexProgram,
     values: Array,                # [V] replicated vertex values
@@ -119,8 +171,9 @@ def tile_gather_apply(
 ) -> tuple[Array, Array, Array]:
     """Gather+Apply for one tile.
 
-    Returns (rows [row_cap] global ids clipped to V-1, new_values [row_cap],
-    updated [row_cap] bool).  Rows beyond num_rows are masked not-updated.
+    Returns (rows [row_cap] global ids clipped to V-1, new_values
+    [row_cap(, Q)], updated [row_cap(, Q)] bool).  Rows beyond num_rows are
+    masked not-updated.  ``values`` may be [V] or [V, Q] (multi-query).
     """
     nv = values.shape[0]
     src_vals = jnp.take(values, src, axis=0)
@@ -135,7 +188,7 @@ def tile_gather_apply(
     old = jnp.take(values, rows, axis=0)
     dst_aux = {k: jnp.take(aux[k], rows, axis=0) for k in prog.dst_aux}
     new = prog.apply(old, accum, dst_aux)
-    valid = local_rows < num_rows
+    valid = _bcast_rows(local_rows < num_rows, new)
     new = jnp.where(valid, new, old)
     updated = jnp.logical_and(valid, prog.updated_mask(old, new))
     return rows, new, updated
@@ -150,8 +203,8 @@ def stacked_tiles_step(
     seg_impl: str = "jnp",
 ) -> tuple[Array, Array]:
     """Process a stack of tiles via lax.scan (one server's local work for a
-    superstep).  Returns (new_masked [V], updated [V] bool): the updated
-    value where updated, else 0.
+    superstep).  Returns (new_masked [V(, Q)], updated [V(, Q)] bool): the
+    updated value where updated, else 0.
 
     Masked values (new where updated, else 0) + the update mask make the
     cross-server Broadcast a plain psum pair: tiles own disjoint row
@@ -165,10 +218,9 @@ def stacked_tiles_step(
     """
     nv = values.shape[0]
     pad = row_cap + 1
-    zpad = jnp.zeros((pad,), values.dtype)
-    values_p = jnp.concatenate([values, zpad])
-    aux_p = {k: jnp.concatenate([aux[k], zpad.astype(aux[k].dtype)])
-             for k in prog.dst_aux}
+    tail = values.shape[1:]            # () or (Q,) — the query axis
+    values_p = _row_pad(values, pad)
+    aux_p = {k: _row_pad(aux[k], pad) for k in prog.dst_aux}
 
     def body(carry, tile):
         out_p, upd_p = carry
@@ -182,25 +234,24 @@ def stacked_tiles_step(
         accum = segment_reduce(contrib, tile["dst_local"], row_cap + 1,
                                prog.combine, impl=seg_impl)[:row_cap]
 
-        old = jax.lax.dynamic_slice(values_p, (row_start,), (row_cap,))
-        dst_aux = {k: jax.lax.dynamic_slice(aux_p[k], (row_start,), (row_cap,))
+        old = _dslice(values_p, row_start, row_cap)
+        dst_aux = {k: _dslice(aux_p[k], row_start, row_cap)
                    for k in prog.dst_aux}
         new = prog.apply(old, accum, dst_aux)
         local = jnp.arange(row_cap, dtype=jnp.int32)
-        valid = local < num_rows
+        valid = _bcast_rows(local < num_rows, new)
         new = jnp.where(valid, new, old)
         updated = jnp.logical_and(valid, prog.updated_mask(old, new))
 
-        cur = jax.lax.dynamic_slice(out_p, (row_start,), (row_cap,))
+        cur = _dslice(out_p, row_start, row_cap)
         window = jnp.where(updated, new, cur)   # set-where-updated (overlap-safe)
-        out_p = jax.lax.dynamic_update_slice(out_p, window, (row_start,))
-        cur_u = jax.lax.dynamic_slice(upd_p, (row_start,), (row_cap,))
-        upd_p = jax.lax.dynamic_update_slice(upd_p, cur_u | updated,
-                                             (row_start,))
+        out_p = _dupdate(out_p, window, row_start)
+        cur_u = _dslice(upd_p, row_start, row_cap)
+        upd_p = _dupdate(upd_p, cur_u | updated, row_start)
         return (out_p, upd_p), None
 
-    delta0 = jnp.zeros((nv + pad,), values.dtype)
-    upd0 = jnp.zeros((nv + pad,), dtype=bool)
+    delta0 = jnp.zeros((nv + pad,) + tail, values.dtype)
+    upd0 = jnp.zeros((nv + pad,) + tail, dtype=bool)
     scan_tiles = {
         "src": stk["src"],
         "dst_local": stk["dst_local"],
@@ -237,8 +288,9 @@ def merged_server_step(
                            impl=seg_impl)[:nv]
     dst_aux = {k: aux[k] for k in prog.dst_aux}
     new = prog.apply(values, accum, dst_aux)
-    new = jnp.where(owned, new, values)
-    updated = jnp.logical_and(owned, prog.updated_mask(values, new))
+    own = _bcast_rows(owned, new)
+    new = jnp.where(own, new, values)
+    updated = jnp.logical_and(own, prog.updated_mask(values, new))
     new_masked = jnp.where(updated, new, jnp.zeros_like(values))
     return new_masked, updated
 

@@ -7,16 +7,25 @@ reduction into dense systolic work* (DESIGN.md §3/§4):
 
   sum monoid:  per (row-block j, edge-block i) grid step, build the one-hot
                matrix ``H[e, r] = (dst[e] == j*BR + r)`` in VMEM and
-               accumulate ``contrib[None, :] @ H`` on the MXU — each edge
-               block costs BE x BR MACs, turning gather-scatter into matmul.
+               accumulate ``contrib @ H`` on the MXU — each edge block
+               costs Q x BE x BR MACs, turning gather-scatter into matmul.
   min/max:     same tiling, but a masked VPU reduction over the edge axis
                (select + min), since min-plus has no MXU form.
 
+Multi-query axis (DESIGN.md §9): ``contrib`` may be ``[E]`` or ``[E, Q]``
+(Q batched program instances sharing one edge pass).  Internally the
+contrib block is laid out ``[Q, BE]`` so the sum monoid contracts
+``[Q, BE] x [BE, BR] -> [Q, BR]`` — the Q=1 rank-1 matvec becomes a real
+GEMM at Q>1 and MXU utilization rises with the batch for free (H is built
+once per block regardless of Q).
+
 Block sizes default to (BE, BR) = (512, 256): H is 512x256 f32 = 512 KB of
-VMEM, contrib block 2 KB, out block 1 KB — comfortably inside the ~16 MB
-v5e VMEM budget with double buffering.  All dims are multiples of 128 for
-MXU/lane alignment.  The edge-block axis is the innermost grid dimension so
-the output row block stays resident across the whole contraction.
+VMEM, contrib block Q x 2 KB, out block Q x 1 KB — comfortably inside the
+~16 MB v5e VMEM budget with double buffering up to Q ~ few hundred (the
+min/max select materializes [Q, BE, BR]; shrink BE/BR for very large Q).
+All dims are multiples of 128 for MXU/lane alignment.  The edge-block axis
+is the innermost grid dimension so the output row block stays resident
+across the whole contraction.
 """
 from __future__ import annotations
 
@@ -41,7 +50,7 @@ def _kernel(dst_ref, contrib_ref, out_ref, *, block_r: int, combine: str):
         out_ref[...] = jnp.full_like(out_ref, _IDENTITY[combine])
 
     dst = dst_ref[0, :]                    # [BE] int32 (global row ids)
-    c = contrib_ref[0, :]                  # [BE]
+    c = contrib_ref[...]                   # [Q, BE]
     j = pl.program_id(0)
     be = dst.shape[0]
     # rows covered by this output block: j*BR + [0, BR)
@@ -51,24 +60,27 @@ def _kernel(dst_ref, contrib_ref, out_ref, *, block_r: int, combine: str):
     if combine == "sum":
         h = hit.astype(c.dtype)
         acc = jax.lax.dot_general(
-            c[None, :], h,
+            c, h,
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
-        )                                   # [1, BR] on the MXU
+        )                                   # [Q, BR] on the MXU
         out_ref[...] += acc.astype(out_ref.dtype)
     else:
         ident = jnp.asarray(_IDENTITY[combine], dtype=c.dtype)
-        sel = jnp.where(hit, c[:, None], ident)   # [BE, BR]
-        red = jnp.min(sel, axis=0) if combine == "min" else jnp.max(sel, axis=0)
-        cur = out_ref[0, :]
-        out_ref[0, :] = jnp.minimum(cur, red) if combine == "min" else jnp.maximum(cur, red)
+        sel = jnp.where(hit[None, :, :], c[:, :, None], ident)   # [Q, BE, BR]
+        red = jnp.min(sel, axis=1) if combine == "min" else jnp.max(sel, axis=1)
+        cur = out_ref[...]
+        out_ref[...] = (jnp.minimum(cur, red) if combine == "min"
+                        else jnp.maximum(cur, red))
 
 
-def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
-    pad = size - x.shape[0]
+def _pad_axis(x: jax.Array, size: int, fill, axis: int = 0) -> jax.Array:
+    pad = size - x.shape[axis]
     if pad == 0:
         return x
-    return jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)])
+    shape = list(x.shape)
+    shape[axis] = pad
+    return jnp.concatenate([x, jnp.full(shape, fill, dtype=x.dtype)], axis=axis)
 
 
 @functools.partial(
@@ -86,16 +98,23 @@ def segment_reduce_pallas(
 ) -> jax.Array:
     """Segment-reduce ``contrib`` by ``dst`` into ``num_segments`` buckets.
 
-    Shapes are padded to block multiples; padded edges use an out-of-range
-    dst so they never hit a one-hot lane.  dtype follows ``contrib``.
+    ``contrib`` is ``[E]`` (returns ``[num_segments]``) or ``[E, Q]``
+    (returns ``[num_segments, Q]``).  Shapes are padded to block multiples;
+    padded edges use an out-of-range dst so they never hit a one-hot lane —
+    an edge block made entirely of padding contributes only identities.
+    dtype follows ``contrib``.
     """
-    assert contrib.ndim == 1 and dst.ndim == 1 and contrib.shape == dst.shape
-    e = contrib.shape[0]
+    assert contrib.ndim in (1, 2) and dst.ndim == 1
+    assert contrib.shape[0] == dst.shape[0]
+    squeeze = contrib.ndim == 1
+    cq = contrib[:, None] if squeeze else contrib     # [E, Q]
+    e, q = cq.shape
     e_pad = max(((e + block_e - 1) // block_e) * block_e, block_e)
     r_pad = max(((num_segments + block_r - 1) // block_r) * block_r, block_r)
 
-    contrib_p = _pad_to(contrib.astype(jnp.float32), e_pad, 0.0)[None, :]
-    dst_p = _pad_to(dst.astype(jnp.int32), e_pad, jnp.int32(r_pad))[None, :]
+    # [Q, E] layout: the edge axis lands on TPU lanes, Q on sublanes.
+    contrib_p = _pad_axis(cq.astype(jnp.float32).T, e_pad, 0.0, axis=1)
+    dst_p = _pad_axis(dst.astype(jnp.int32), e_pad, jnp.int32(r_pad))[None, :]
 
     grid = (r_pad // block_r, e_pad // block_e)
     out = pl.pallas_call(
@@ -103,10 +122,11 @@ def segment_reduce_pallas(
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_e), lambda j, i: (0, i)),   # dst
-            pl.BlockSpec((1, block_e), lambda j, i: (0, i)),   # contrib
+            pl.BlockSpec((q, block_e), lambda j, i: (0, i)),   # contrib
         ],
-        out_specs=pl.BlockSpec((1, block_r), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((1, r_pad), jnp.float32),
+        out_specs=pl.BlockSpec((q, block_r), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((q, r_pad), jnp.float32),
         interpret=interpret,
     )(dst_p, contrib_p)
-    return out[0, :num_segments].astype(contrib.dtype)
+    out = out[:, :num_segments].astype(contrib.dtype)
+    return out[0] if squeeze else out.T

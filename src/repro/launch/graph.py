@@ -21,12 +21,13 @@ def build_store(args) -> TileStore:
     store = TileStore(args.store or tempfile.mkdtemp(prefix="graphh_"),
                       disk_mode=args.disk_mode)
     gen = synth.rmat_edges if args.graph == "rmat" else synth.uniform_edges
+    weighted = args.app in ("sssp", "landmarks")
     t0 = time.time()
     spe.preprocess(
         lambda: gen(args.vertices, args.edges, seed=args.seed,
-                    weighted=args.app == "sssp"),
+                    weighted=weighted),
         args.vertices, store, tile_size=args.tile_size,
-        weighted=args.app == "sssp",
+        weighted=weighted,
     )
     print(f"SPE preprocessing: {time.time()-t0:.1f}s -> {store.root}")
     return store
@@ -66,6 +67,14 @@ def main(argv=None):
     ap.add_argument("--prefetch-workers", type=int, default=2)
     ap.add_argument("--stack-size", type=int, default=4,
                     help="tiles per jitted batch dispatch (pipelined mode)")
+    ap.add_argument("--queries", type=int, default=None,
+                    help="batched apps (ppr/msbfs/landmarks): number of "
+                         "query instances to run in one edge pass; seeds "
+                         "are drawn deterministically from --seed unless "
+                         "--seeds is given (DESIGN.md §9)")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated seed/source/landmark vertex ids "
+                         "for the batched apps, e.g. --seeds 0,17,42")
     args = ap.parse_args(argv)
 
     if args.reuse and args.store:
@@ -90,13 +99,36 @@ def main(argv=None):
         stack_size=args.stack_size,
     )
     eng = OutOfCoreEngine(store, cfg)
-    prog = APPS[args.app]()
+    batched = args.app in ("ppr", "msbfs", "landmarks")
+    if batched:
+        if args.seeds:
+            seeds = tuple(int(s) for s in args.seeds.split(","))
+        else:
+            q = args.queries or 8
+            rng = np.random.default_rng(args.seed)
+            seeds = tuple(int(v) for v in
+                          rng.choice(args.vertices, size=q, replace=False))
+        key = {"ppr": "seeds", "msbfs": "sources", "landmarks": "landmarks"}
+        prog = APPS[args.app](**{key[args.app]: seeds})
+    elif args.queries or args.seeds:
+        raise SystemExit(f"--queries/--seeds only apply to batched apps "
+                         f"(ppr/msbfs/landmarks), not {args.app}")
+    else:
+        prog = APPS[args.app]()
     t0 = time.time()
     res = eng.run(prog)
     dt = time.time() - t0
     print(f"{args.app}: {res.supersteps} supersteps in {dt:.1f}s "
           f"(mean {res.mean_superstep_seconds()*1000:.0f} ms/superstep, "
           f"converged={res.converged})")
+    if batched:
+        q = len(seeds)
+        io = sum(x.disk_bytes_read for x in res.history)
+        retired = [(g, int(s)) for g, s in enumerate(res.per_query_supersteps)]
+        print(f"  {q} queries in one edge pass: "
+              f"tile I/O {io/1e6:.1f} MB total = {io/q/1e6:.2f} MB/query, "
+              f"{dt/q*1000:.0f} ms/query; per-query supersteps "
+              f"{[s for _, s in retired]}")
     h = res.history[-1]
     print(f"  cache hit ratio {h.cache_hit_ratio:.2f}, "
           f"net {sum(x.network_bytes for x in res.history)/1e6:.1f} MB total, "

@@ -69,6 +69,60 @@ def test_distributed_gab_matches_oracle_all_modes():
 
 
 @pytest.mark.slow
+def test_distributed_multi_query_matches_out_of_core():
+    """[V, Q] vertex state through the shard_map superstep (DESIGN.md §9):
+    the device-mesh engine must reproduce the out-of-core engine's batched
+    results exactly for every comm mode (2-D payloads flatten to
+    (vertex, query) cells on the sparse path)."""
+    out = run_sub("""
+    import json, tempfile
+    import numpy as np, jax
+    from repro.graphio.formats import TileStore
+    from repro.graphio import spe
+    from repro.core.distributed import DistributedGABEngine, DistConfig
+    from repro.core.engine import EngineConfig, OutOfCoreEngine
+    from repro.core.apps import MultiSourceBFS, PersonalizedPageRank
+    from repro.launch.mesh import make_mesh
+
+    rng = np.random.default_rng(0)
+    nv, ne = 400, 3000
+    src = rng.integers(0, nv, ne); dst = rng.integers(0, nv, ne)
+    k = src*nv+dst; _, i = np.unique(k, return_index=True); src, dst = src[i], dst[i]
+    store = TileStore(tempfile.mkdtemp())
+    plan = spe.preprocess_arrays(src, dst, None, nv, store, tile_size=150)
+    tiles = [store.read_tile(t) for t in range(plan.num_tiles)]
+    ind, outd = store.load_degrees()
+
+    seeds = (0, 7, 113, 250)
+    ref = OutOfCoreEngine(store, EngineConfig(num_servers=2)).run(
+        MultiSourceBFS(sources=seeds))
+    ref_ppr = OutOfCoreEngine(store, EngineConfig(num_servers=2)).run(
+        PersonalizedPageRank(seeds=seeds))
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    res = {}
+    for mode in ("dense", "sparse", "hybrid"):
+        eng = DistributedGABEngine(mesh, ("data", "model"),
+                                   DistConfig(comm_mode=mode))
+        vals, hist = eng.run(MultiSourceBFS(sources=seeds), tiles, nv,
+                             outd, ind, plan.row_cap, max_supersteps=80)
+        res[mode] = bool(np.array_equal(
+            np.where(np.isinf(vals), -1, vals),
+            np.where(np.isinf(ref.values), -1, ref.values)))
+    eng = DistributedGABEngine(mesh, ("data", "model"), DistConfig())
+    vals, _ = eng.run(PersonalizedPageRank(seeds=seeds), tiles, nv,
+                      outd, ind, plan.row_cap, max_supersteps=200)
+    res["ppr_err"] = float(np.abs(vals - ref_ppr.values).max())
+    print(json.dumps(res))
+    """)
+    for mode in ("dense", "sparse", "hybrid"):
+        assert out[mode], mode
+    # PPR crosses a different superstep schedule (no retirement on the mesh
+    # engine), so allow float accumulation-order noise
+    assert out["ppr_err"] < 1e-6
+
+
+@pytest.mark.slow
 def test_mesh_train_step_compiles_and_runs():
     out = run_sub("""
     import json, numpy as np, jax, jax.numpy as jnp

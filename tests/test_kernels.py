@@ -89,6 +89,84 @@ def test_compact_block_sizes():
         assert bool(jnp.all(gi == ri)), block
 
 
+# ---------------------------------------------------------------------------
+# multi-query (contrib [E, Q]) parity — the one-hot matvec becomes a GEMM
+# ---------------------------------------------------------------------------
+
+def _per_column_ref(combine, c2, d, R):
+    rfn = getattr(ref, f"segment_{combine}")
+    return np.stack([np.asarray(rfn(c2[:, q], d, R))
+                     for q in range(c2.shape[1])], axis=1)
+
+
+@pytest.mark.parametrize("E,R,Q", [
+    (777, 130, 3),      # nothing a multiple of (BE, BR)
+    (1000, 300, 5),
+    (64, 16, 2),        # far below one block in both axes
+    (513, 257, 4),      # one past the block boundary on both axes
+    (3, 1, 7),          # degenerate row count
+])
+@pytest.mark.parametrize("combine", ["sum", "min", "max"])
+def test_segment_reduce_multi_query_parity(E, R, Q, combine):
+    """Q>1 parity vs the per-column jnp oracle for every monoid, with
+    shapes that are not multiples of the (BE, BR) kernel blocks."""
+    rng = np.random.default_rng(E * 7 + R + Q)
+    c2 = jnp.asarray(rng.normal(size=(E, Q)).astype(np.float32))
+    d = jnp.asarray(np.sort(rng.integers(0, R, E)).astype(np.int32))
+    got = np.asarray(getattr(ops, f"segment_{combine}")(c2, d, R))
+    want = _per_column_ref(combine, c2, d, R)
+    assert got.shape == (R, Q)
+    fin = np.isfinite(want)
+    assert np.array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("combine", ["sum", "min", "max"])
+@pytest.mark.parametrize("Q", [1, 4])
+def test_segment_reduce_all_padding_edge_block(combine, Q):
+    """The engine's inert-padding convention: every edge routed to the
+    sink (out-of-range) row — one-hot hits no lane, so each output row
+    must be the monoid identity.  Exercises an edge block made entirely
+    of padding (plus kernel-side padding of the partial block)."""
+    from repro.kernels.gab_gather import _IDENTITY
+
+    E, R = 200, 70
+    rng = np.random.default_rng(0)
+    shape = (E,) if Q == 1 else (E, Q)
+    c = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    d = jnp.full((E,), R, dtype=jnp.int32)       # all edges -> sink row R
+    got = np.asarray(getattr(ops, f"segment_{combine}")(c, d, R + 1))
+    # rows [0, R) saw no edge at all; row R collected everything
+    body = got[:R]
+    assert np.all(body == np.float32(_IDENTITY[combine])), combine
+
+
+@pytest.mark.parametrize("combine", ["sum", "min", "max"])
+def test_segment_reduce_empty_edge_list(combine):
+    """E=0: the kernel pads up to one full block of pure padding; output
+    must be all-identity (sum collapses to 0 everywhere)."""
+    from repro.kernels.gab_gather import _IDENTITY, segment_reduce_pallas
+
+    c = jnp.zeros((0, 3), dtype=jnp.float32)
+    d = jnp.zeros((0,), dtype=jnp.int32)
+    got = np.asarray(segment_reduce_pallas(c, d, 40, combine=combine,
+                                           interpret=True))
+    assert got.shape == (40, 3)
+    assert np.all(got == np.float32(_IDENTITY[combine]))
+
+
+def test_segment_sum_q1_column_matches_1d():
+    """A [E, 1] batch must reproduce the 1-D kernel result bit-for-bit —
+    the invariant the engine's batched-vs-solo differential relies on."""
+    rng = np.random.default_rng(5)
+    E, R = 900, 250
+    c = jnp.asarray(rng.normal(size=E).astype(np.float32))
+    d = jnp.asarray(np.sort(rng.integers(0, R, E)).astype(np.int32))
+    one = np.asarray(ops.segment_sum(c, d, R))
+    col = np.asarray(ops.segment_sum(c[:, None], d, R))[:, 0]
+    np.testing.assert_array_equal(one, col)
+
+
 def test_gab_engine_with_pallas_segsum(small_store, nx_pagerank):
     """End-to-end: PageRank through the engine using the Pallas kernel path."""
     from repro.core.apps import PageRank

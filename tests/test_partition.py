@@ -47,6 +47,66 @@ def test_plan_partition_caps(nv, ne, tile_size):
         assert plan.splitter[t] <= v < plan.splitter[t + 1]
 
 
+@given(st.integers(2, 400), st.integers(8, 256), st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_tile_of_vertex_boundary_roundtrip(nv, tile_size, seed):
+    """Property: ``tile_of_vertex`` round-trips exactly at tile boundaries —
+    the first and last vertex of every tile map back to that tile, and the
+    vertex one past the end maps to the next tile."""
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, nv, nv * 3)
+    in_deg = np.bincount(dst, minlength=nv)
+    plan = pt.plan_partition(in_deg, tile_size)
+    sp = plan.splitter
+    # tiles exactly partition [0, V): contiguous, disjoint, complete
+    assert sp[0] == 0 and sp[-1] == nv
+    assert np.all(np.diff(sp) >= 1)
+    for t in range(plan.num_tiles):
+        lo, hi = plan.tile_range(t)
+        assert plan.tile_of_vertex(lo) == t
+        assert plan.tile_of_vertex(hi - 1) == t
+        if hi < nv:
+            assert plan.tile_of_vertex(hi) == t + 1
+
+
+@pytest.mark.parametrize("name,degs", [
+    ("all_zero", np.zeros(64, dtype=np.int64)),
+    ("single_hub", np.concatenate([[10_000], np.zeros(63, dtype=np.int64)])),
+    ("hub_at_end", np.concatenate([np.zeros(63, dtype=np.int64), [10_000]])),
+    ("two_hubs", np.array([0, 5000, 0, 0, 5000, 0] * 10, dtype=np.int64)),
+    ("powerlaw", (np.random.default_rng(0).zipf(1.5, 200)
+                  .clip(0, 50_000).astype(np.int64))),
+    ("alternating", np.array([0, 300] * 50, dtype=np.int64)),
+    ("one_vertex", np.array([7], dtype=np.int64)),
+])
+def test_plan_partition_adversarial_degrees(name, degs):
+    """PartitionPlan invariants under adversarial degree distributions:
+    hub vertices whose degree dwarfs tile_size, zero-degree runs, and
+    heavy-tailed skew.  Caps must always cover the realized per-tile
+    maxima and the splitter must stay an exact partition of [0, V)."""
+    for tile_size in (8, 64, 1024):
+        plan = pt.plan_partition(degs, tile_size)
+        sp = plan.splitter
+        assert sp[0] == 0 and sp[-1] == len(degs), name
+        assert np.all(np.diff(sp) >= 1), name
+        # edge conservation
+        assert plan.num_edges == int(degs.sum()), name
+        assert plan.edges_per_tile.sum() == degs.sum(), name
+        # caps respected (a hub > tile_size forces a single-vertex tile,
+        # and edge_cap must stretch to hold it)
+        assert plan.edge_cap >= int(plan.edges_per_tile.max(initial=1)), name
+        assert plan.row_cap >= int(np.diff(sp).max(initial=1)), name
+        # per-tile edge counts consistent with the degree prefix sums
+        csum = np.concatenate([[0], np.cumsum(degs)])
+        np.testing.assert_array_equal(
+            plan.edges_per_tile, csum[sp[1:]] - csum[sp[:-1]], err_msg=name)
+        # boundary round-trips survive the skew
+        for t in range(plan.num_tiles):
+            lo, hi = plan.tile_range(t)
+            assert plan.tile_of_vertex(lo) == t, name
+            assert plan.tile_of_vertex(hi - 1) == t, name
+
+
 def test_round_robin_assignment():
     a = pt.assign_tiles(10, 3)
     assert a == [[0, 3, 6, 9], [1, 4, 7], [2, 5, 8]]
