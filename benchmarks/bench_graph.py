@@ -242,7 +242,9 @@ def bench_pipeline_overlap():
             stack_size=4))
         res = eng.run(PageRank())
         results[pipe] = res
-        hs = res.history[1:]
+        # like RunResult.mean_superstep_seconds: a 1-superstep run falls
+        # back to its only superstep instead of np.mean over an empty slice
+        hs = res.history[1:] or res.history
         stall_ms = 1e3 * np.mean([h.stall_seconds for h in hs])
         hidden_ms = 1e3 * np.mean([h.io_hidden_seconds for h in hs])
         emit(f"pipeline.pagerank.{'pipelined' if pipe else 'serial'}",
@@ -254,9 +256,9 @@ def bench_pipeline_overlap():
     # the serial engine stalls for ~all of its I/O, the pipelined engine
     # only for the residue the prefetcher couldn't hide.
     stall_red = (np.mean([h.stall_seconds / max(h.io_busy_seconds, 1e-9)
-                          for h in ser.history[1:]])
+                          for h in ser.history[1:] or ser.history])
                  - np.mean([h.stall_seconds / max(h.io_busy_seconds, 1e-9)
-                            for h in pip.history[1:]]))
+                            for h in pip.history[1:] or pip.history]))
     emit("pipeline.pagerank.speedup", 0,
          f"x{ser.mean_superstep_seconds()/max(pip.mean_superstep_seconds(),1e-9):.2f} "
          f"stall_per_io_reduced={stall_red:.2f}")
@@ -313,6 +315,66 @@ def bench_multi_query():
              f"time_amortization={t1*q/max(tq,1e-9):.1f}x")
 
 
+def bench_ooc_vstate():
+    """Memory-budget sweep for the interval-sharded out-of-core vertex
+    state (DESIGN.md §10).  A locality-structured (banded) graph makes
+    tile source-interval footprints differ, a multi-query PPR batch makes
+    the [V, Q] vertex footprint the dominant memory term, and the vertex
+    budget sweeps down to 10% of it.  At each budget, compare
+    interval-aware co-scheduling against interval-oblivious ordering:
+    faults (interval blocks decoded back from warm/cold), bytes faulted
+    in, bytes spilled to the disk tier, and wall time.  Results must be
+    (and are, tests/test_vstate.py) bit-identical to the in-memory run."""
+    from benchmarks import common
+    from repro.core.apps import PersonalizedPageRank
+    from repro.core.engine import EngineConfig, OutOfCoreEngine
+
+    if common.SMOKE:
+        nv, ne, tile, q, steps, budgets = 8_000, 60_000, 512, 8, 3, (0.25,)
+    else:
+        nv, ne, tile, q, steps, budgets = NV, NE, 4096, 32, 6, (0.5, 0.25, 0.1)
+    store = make_store(nv, ne, tile, disk_mode=3, graph="banded",
+                       num_intervals=16)
+    plan = store.load_plan()
+    # Edge cache under real pressure too: the interval-oblivious baseline
+    # (cache-hit-first, §8) then reorders resident-edge-tiles first and
+    # scrambles src-interval locality — the *joint* residency problem the
+    # co-scheduler exists for.
+    edge_total = sum(store.tile_disk_bytes(t) for t in range(plan.num_tiles))
+    cache_cap = int(edge_total * 0.25 / 2)
+    rng = np.random.default_rng(0)
+    seeds = tuple(int(v) for v in rng.choice(nv, size=q, replace=False))
+    # full vertex footprint: value [V,Q] + seed_mass [V,Q] + inv_out_degree [V]
+    vbytes = nv * 4 * (2 * q + 1)
+
+    def run(budget, order):
+        eng = OutOfCoreEngine(store, EngineConfig(
+            num_servers=2, cache_capacity_bytes=cache_cap, cache_mode="auto",
+            tile_skipping=False, max_supersteps=steps,
+            vertex_memory_budget=budget, interval_aware_order=order))
+        res = eng.run(PersonalizedPageRank(seeds=seeds))
+        faults = sum(h.vstate_faults for h in res.history)
+        spill = sum(h.vstate_spill_bytes for h in res.history)
+        load = sum(h.vstate_load_bytes for h in res.history)
+        return res, faults, spill, load
+
+    ref = OutOfCoreEngine(store, EngineConfig(
+        num_servers=2, cache_capacity_bytes=cache_cap, cache_mode="auto",
+        tile_skipping=False, max_supersteps=steps)).run(
+            PersonalizedPageRank(seeds=seeds))
+    emit("ooc_vstate.in_memory", ref.mean_superstep_seconds() * 1e6,
+         f"vertex_MB={vbytes/1e6:.1f} (fully resident baseline)")
+    for frac in budgets:
+        budget = int(vbytes * frac)
+        for order, tag in ((True, "interval"), (False, "naive")):
+            res, faults, spill, load = run(budget, order)
+            emit(f"ooc_vstate.bud{int(frac*100)}pct.{tag}",
+                 res.mean_superstep_seconds() * 1e6,
+                 f"faults={faults} load_MB={load/1e6:.1f} "
+                 f"spill_MB={spill/1e6:.1f} "
+                 f"identical={np.array_equal(res.values, ref.values)}")
+
+
 def bench_scheduler():
     """Beyond-paper: straggler mitigation makespan (DESIGN.md §5)."""
     from repro.core.partition import assign_tiles
@@ -334,4 +396,5 @@ def bench_scheduler():
 ALL = [bench_partition_fig5, bench_compression_tablev, bench_cache_fig8,
        bench_cache_tiers, bench_comm_fig9, bench_pagerank_fig10,
        bench_sssp_fig11, bench_memory_fig7, bench_costmodel_tableiii,
-       bench_pipeline_overlap, bench_scheduler, bench_multi_query]
+       bench_pipeline_overlap, bench_scheduler, bench_multi_query,
+       bench_ooc_vstate]

@@ -28,19 +28,22 @@ _STORE_CACHE = {}
 
 
 def make_store(nv: int, ne: int, tile_size: int, weighted=False, seed=0,
-               disk_mode=1):
-    """Build (and memoize) an RMAT tile store."""
+               disk_mode=1, graph="rmat", num_intervals=0):
+    """Build (and memoize) a synthetic tile store (default: RMAT)."""
     from repro.graphio import spe, synth
     from repro.graphio.formats import TileStore
 
-    key = (nv, ne, tile_size, weighted, seed, disk_mode)
+    key = (nv, ne, tile_size, weighted, seed, disk_mode, graph, num_intervals)
     if key in _STORE_CACHE:
         return _STORE_CACHE[key]
+    gen = {"rmat": synth.rmat_edges, "uniform": synth.uniform_edges,
+           "banded": synth.banded_edges}[graph]
     root = tempfile.mkdtemp(prefix="bench_store_")
     store = TileStore(root, disk_mode=disk_mode)
     spe.preprocess(
-        lambda: synth.rmat_edges(nv, ne, seed=seed, weighted=weighted),
-        nv, store, tile_size=tile_size, weighted=weighted)
+        lambda: gen(nv, ne, seed=seed, weighted=weighted),
+        nv, store, tile_size=tile_size, weighted=weighted,
+        num_intervals=num_intervals)
     _STORE_CACHE[key] = store
     return store
 

@@ -46,7 +46,10 @@ class BaselineResult:
     history: list[BaselineStats]
 
     def mean_superstep_seconds(self, skip_first: bool = True) -> float:
-        hs = self.history[1:] if skip_first and len(self.history) > 1 else self.history
+        # single-superstep runs fall back to the full history instead of
+        # averaging an empty slice (same guard as engine.RunResult)
+        hs = self.history[1:] if skip_first else self.history
+        hs = hs or self.history
         return float(np.mean([h.seconds for h in hs])) if hs else 0.0
 
 

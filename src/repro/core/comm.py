@@ -18,7 +18,9 @@ Two layers:
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
+import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Optional
 
@@ -64,6 +66,9 @@ class BroadcastRecord:
     # multi-query payloads: per-query-column mode choices ("dense"/"sparse"),
     # None for classic 1-D payloads
     query_modes: Optional[tuple] = None
+    # interval-sharded payloads (DESIGN.md §10): number of dirty intervals
+    # shipped; None for classic whole-V payloads
+    intervals: Optional[int] = None
 
 
 def dense_payload(values: np.ndarray, updated: np.ndarray) -> bytes:
@@ -142,20 +147,107 @@ def plan_broadcast(
     )
 
 
+# 8-byte header per dirty-interval section: (interval id: u32, count: u32).
+INTERVAL_HEADER_BYTES = 8
+
+
+def plan_broadcast_intervals(
+    idx: np.ndarray,              # [U] updated global vertex ids
+    vals: np.ndarray,             # [U] or [U, Q] updated values
+    mask: Optional[np.ndarray],   # [U, Q] per-query updated mask, or None
+    splitter: np.ndarray,         # int64[K + 1] interval boundaries
+    threshold: float = DENSITY_THRESHOLD,
+    compressor: str = "zstd-1",
+    mode: str = "hybrid",
+) -> BroadcastRecord:
+    """Measure one server's broadcast sharded per *dirty interval*
+    (DESIGN.md §10) instead of one whole-V payload.
+
+    Each interval that received updates ships its own section — an 8-byte
+    (interval id, count) header plus a :func:`plan_broadcast` payload built
+    over that interval's local vertex range — so receivers holding their
+    vertex state out of core apply updates block by block and clean
+    intervals cost zero bytes.  Density on the sparse/dense switch is
+    *local* to the interval, which is strictly better than the global
+    switch when updates cluster (a dense-in-one-interval frontier no
+    longer drags the whole |V| array onto the wire)."""
+    _, codec = resolve_compressor(compressor)
+    splitter = np.asarray(splitter, dtype=np.int64)
+    nv = int(splitter[-1])
+    qa = vals.shape[1] if vals.ndim == 2 else None
+    cells = nv * (qa or 1)
+    if len(idx) == 0:
+        return BroadcastRecord(mode="interval", raw_bytes=0, wire_bytes=0,
+                               density=0.0, compressor=codec, intervals=0)
+    ivs = np.searchsorted(splitter, idx, side="right") - 1
+    raw = wire = 0
+    count = 0
+    updated_cells = 0
+    for iv in np.unique(ivs):
+        lo, hi = int(splitter[iv]), int(splitter[iv + 1])
+        sel = ivs == iv
+        local = idx[sel] - lo
+        n = hi - lo
+        if qa is not None:
+            dense = np.zeros((n, qa), dtype=vals.dtype)
+            upd = np.zeros((n, qa), dtype=bool)
+            dense[local] = vals[sel]
+            upd[local] = mask[sel]
+        else:
+            dense = np.zeros(n, dtype=vals.dtype)
+            upd = np.zeros(n, dtype=bool)
+            dense[local] = vals[sel]
+            upd[local] = True
+        rec = plan_broadcast(dense, upd, threshold=threshold,
+                             compressor=compressor, mode=mode)
+        raw += rec.raw_bytes + INTERVAL_HEADER_BYTES
+        wire += rec.wire_bytes + INTERVAL_HEADER_BYTES
+        count += 1
+        updated_cells += int(upd.sum())
+    return BroadcastRecord(
+        mode="interval", raw_bytes=raw, wire_bytes=wire,
+        density=updated_cells / max(cells, 1), compressor=codec,
+        intervals=count,
+    )
+
+
+def plan_broadcast_intervals_async(*args, **kw) -> "Future[BroadcastRecord]":
+    """Submit :func:`plan_broadcast_intervals` onto the comm executor."""
+    return _comm_pool().submit(plan_broadcast_intervals, *args, **kw)
+
+
 # Payload compression is CPU-bound byte work with no dependence on the next
 # server's gather/apply, so the pipelined engine ships it to a small executor
 # and collects the BroadcastRecords at the superstep barrier (the "tile N-1
 # broadcast-compression" leg of the I/O-compute-comm overlap).  Two workers:
 # one per in-flight payload is plenty, and zlib/zstd release the GIL.
 _COMM_POOL: Optional[ThreadPoolExecutor] = None
+_COMM_POOL_LOCK = threading.Lock()
 
 
 def _comm_pool() -> ThreadPoolExecutor:
+    # Double-checked locking: concurrent first callers must share ONE
+    # executor (an unguarded None-check let two threads each create a pool
+    # and leak one of them), and the surviving pool is shut down at
+    # interpreter exit instead of leaking its worker threads.
     global _COMM_POOL
-    if _COMM_POOL is None:
-        _COMM_POOL = ThreadPoolExecutor(max_workers=2,
-                                        thread_name_prefix="graphh-comm")
-    return _COMM_POOL
+    pool = _COMM_POOL
+    if pool is None:
+        with _COMM_POOL_LOCK:
+            if _COMM_POOL is None:
+                _COMM_POOL = ThreadPoolExecutor(
+                    max_workers=2, thread_name_prefix="graphh-comm")
+                atexit.register(_shutdown_comm_pool)
+            pool = _COMM_POOL
+    return pool
+
+
+def _shutdown_comm_pool() -> None:
+    global _COMM_POOL
+    with _COMM_POOL_LOCK:
+        pool, _COMM_POOL = _COMM_POOL, None
+    if pool is not None:
+        pool.shutdown(wait=False)
 
 
 def plan_broadcast_async(

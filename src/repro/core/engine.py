@@ -12,7 +12,9 @@ the identical superstep onto a device mesh with shard_map.
 from __future__ import annotations
 
 import dataclasses
+import tempfile
 import time
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -22,9 +24,11 @@ import numpy as np
 from repro.core import comm
 from repro.core.bloom import SourceBlockBitmap, BloomFilter
 from repro.core.cache import EdgeCache, auto_select_mode, DEFAULT_GAMMAS
-from repro.core.gab import VertexProgram, run_tile
-from repro.core.partition import assign_tiles, assign_tiles_balanced
-from repro.core.tiles import tile_edge_values
+from repro.core.gab import VertexProgram, run_tile, run_tile_sharded
+from repro.core.partition import (assign_tiles, assign_tiles_balanced,
+                                  plan_intervals)
+from repro.core.tiles import compute_source_footprint, tile_edge_values
+from repro.core.vstate import VertexStateStore
 from repro.graphio.formats import TileStore
 
 
@@ -75,6 +79,21 @@ class EngineConfig:
     # tile lists) into engine.skip_log — test/debug aid for the skip-filter
     # safety property; off by default (the active-id snapshot costs memory)
     debug_skip_log: bool = False
+    # --- out-of-core vertex state (DESIGN.md §10) ---
+    # byte budget for the interval-sharded VertexStateStore's in-memory
+    # tiers (hot ndarrays + warm compressed blobs); beyond it, interval
+    # blocks spill to a disk tier.  None keeps the paper's fully-resident
+    # [V, Q] vertex arrays.  Forces engine_mode="tiled" (stacked/merged
+    # need the full value array on device).
+    vertex_memory_budget: Optional[int] = None
+    # source intervals K; 0 = auto (sized so ~4 value blocks fit the
+    # budget, or the store's preprocessed interval plan when present)
+    num_intervals: int = 0
+    # co-order tiles to maximize *joint* residency of edge tiles (edge
+    # cache) and source intervals (vertex cache); only active in ooc-vstate
+    # mode — superstep 0 falls back to cache-hit-first ordering while
+    # footprints are still unknown
+    interval_aware_order: bool = True
 
 
 @dataclasses.dataclass
@@ -114,6 +133,11 @@ class SuperstepStats:
     # global query ids whose columns converged (and were compacted out)
     # at the end of this superstep
     retired_queries: tuple = ()
+    # --- out-of-core vertex state (DESIGN.md §10; zeros when in-memory) ---
+    vstate_faults: int = 0          # interval blocks decoded (warm + cold)
+    vstate_load_bytes: int = 0      # compressed bytes faulted back in
+    vstate_spill_bytes: int = 0     # compressed bytes written to the disk tier
+    vstate_dirty_intervals: int = 0 # intervals written back (and broadcast)
 
     @property
     def stall_fraction(self) -> float:
@@ -140,13 +164,21 @@ class RunResult:
     def total_seconds(self) -> float:
         return sum(h.seconds for h in self.history)
 
+    def _steady_state(self, skip_first: bool) -> list[SuperstepStats]:
+        """History minus the warm-up superstep — unless that would leave
+        nothing to average (single-superstep runs fall back to the full
+        history, an empty history to the empty list, never an empty slice
+        fed to a mean/division)."""
+        hs = self.history[1:] if skip_first else self.history
+        return hs if hs else self.history
+
     def mean_superstep_seconds(self, skip_first: bool = True) -> float:
-        hs = self.history[1:] if skip_first and len(self.history) > 1 else self.history
+        hs = self._steady_state(skip_first)
         return float(np.mean([h.seconds for h in hs])) if hs else 0.0
 
     def disk_stall_fraction(self, skip_first: bool = True) -> float:
         """Fraction of wall time the compute loop was blocked on tile I/O."""
-        hs = self.history[1:] if skip_first and len(self.history) > 1 else self.history
+        hs = self._steady_state(skip_first)
         tot = sum(h.seconds for h in hs)
         return sum(h.stall_seconds for h in hs) / tot if tot > 0 else 0.0
 
@@ -185,10 +217,25 @@ class OutOfCoreEngine:
         #: with the active source ids and the run/skipped tile partition
         self.skip_log: list[dict] = []
         self._wire_ratio: Optional[float] = None
+        # Per-superstep deltas are computed against these cumulative-counter
+        # baselines; run() re-baselines them at its start (a stale baseline
+        # from a previous run / external cache activity would corrupt the
+        # first superstep's deltas).
         self._io_busy_cum = 0.0   # cache io_seconds at end of last superstep
         self._promo_cum = 0       # cache promotions at end of last superstep
         self._demo_cum = 0
         self._disk_cum = 0        # cache disk_bytes_read at last superstep
+        # --- out-of-core vertex state (DESIGN.md §10) ---
+        self._ooc = False
+        #: the run's interval-sharded VertexStateStore (ooc mode only)
+        self.vstate: Optional[VertexStateStore] = None
+        self._iv_splitter: Optional[np.ndarray] = None
+        self._iv_t2i: Optional[np.ndarray] = None
+        self._use_meta_fp = False
+        self._tile_iv_ids: dict[int, frozenset] = {}
+        self._vs_faults_cum = 0
+        self._vs_load_cum = 0
+        self._vs_spill_cum = 0
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -207,11 +254,19 @@ class OutOfCoreEngine:
             max_supersteps: Optional[int] = None) -> RunResult:
         cfg = self.cfg
         nv = self.plan.num_vertices
+        # Re-baseline the cumulative-counter deltas: a second run() on the
+        # same engine — or cache activity between runs (warm()/maintain()/
+        # direct get()s) — must not leak into this run's first superstep.
+        cs = self._agg_cache_stats()
+        self._io_busy_cum = cs["io_seconds"]
+        self._promo_cum = cs["promotions"]
+        self._demo_cum = cs["demotions"]
+        self._disk_cum = cs["disk_bytes_read"]
         state = prog.init(nv, self.out_degree.astype(np.float64),
                           self.in_degree.astype(np.float64))
         values = np.asarray(state.pop("value"))
         aux_np = {k: np.asarray(v) for k, v in state.items()}
-        aux_dev = {k: jnp.asarray(v) for k, v in aux_np.items()}
+        vdtype = values.dtype
         row_cap = self.plan.row_cap
 
         # --- multi-query bookkeeping (DESIGN.md §9) ---
@@ -226,6 +281,27 @@ class OutOfCoreEngine:
         final_values = values.copy() if multi_q else None
         per_query_ss = np.full(nq_total, -1, dtype=np.int64) if multi_q else None
 
+        # --- out-of-core vertex state (DESIGN.md §10) ---
+        # With a vertex memory budget, the [V(, Q)] value/aux arrays move
+        # into an interval-sharded VertexStateStore and the full arrays are
+        # dropped: gather materializes per-tile source inputs block by
+        # block, apply writes back per dirty interval, and broadcasts ship
+        # per-interval sections.  stacked/merged need the full value array
+        # on device, so ooc mode forces the tiled path.
+        ooc = self._ooc = cfg.vertex_memory_budget is not None
+        engine_mode = "tiled" if ooc else cfg.engine_mode
+        vstore: Optional[VertexStateStore] = None
+        if ooc:
+            vstore = self._build_vstate(values, aux_np)
+            self._vs_faults_cum = vstore.stats.faults
+            self._vs_load_cum = vstore.stats.load_bytes
+            self._vs_spill_cum = vstore.stats.spill_bytes
+            values = None
+            aux_np = {}
+            aux_dev = None
+        else:
+            aux_dev = {k: jnp.asarray(v) for k, v in aux_np.items()}
+
         max_ss = max_supersteps or cfg.max_supersteps
         history: list[SuperstepStats] = []
         updated_ids = np.arange(nv)   # everything "updated" before step 0
@@ -235,7 +311,7 @@ class OutOfCoreEngine:
         converged = False
         for ss in range(max_ss):
             t_start = time.perf_counter()
-            values_dev = jnp.asarray(values)
+            values_dev = None if ooc else jnp.asarray(values)
             load_s = 0.0
             comp_s = 0.0
             stall_s = 0.0
@@ -247,8 +323,13 @@ class OutOfCoreEngine:
             upd_msk_parts: list[np.ndarray] = []
             per_server_updates: list[tuple] = []
             bcast_futures: dict[int, object] = {}
-            sample = not (cfg.comm_accounting == "sampled" and ss % 4 != 0
-                          and self._wire_ratio is not None)
+            # ooc-vstate always measures: the sampled estimator models a
+            # whole-V payload (global density switch, no interval headers),
+            # which would mix incompatible models with the per-interval
+            # records the sampled supersteps learn their ratio from
+            sample = ooc or not (cfg.comm_accounting == "sampled"
+                                 and ss % 4 != 0
+                                 and self._wire_ratio is not None)
 
             skip_on = (
                 cfg.tile_skipping
@@ -267,10 +348,10 @@ class OutOfCoreEngine:
                 s_val: list[np.ndarray] = []
                 s_msk: list[np.ndarray] = []
                 server_tiles = self.assignment[s]
-                if cfg.engine_mode in ("stacked", "merged") and not skip_on:
+                if engine_mode in ("stacked", "merged") and not skip_on:
                     if self._stacks is None:
                         t0 = time.perf_counter()
-                        if cfg.engine_mode == "merged":
+                        if engine_mode == "merged":
                             self._build_merged(nv)
                         else:
                             self._build_stacks(nv)
@@ -283,7 +364,7 @@ class OutOfCoreEngine:
                                             self.caches[st].get(tid), nv)
                         load_s += time.perf_counter() - t0
                     t0 = time.perf_counter()
-                    step_fn = (self._merged_step if cfg.engine_mode == "merged"
+                    step_fn = (self._merged_step if engine_mode == "merged"
                                else self._stack_step)
                     new_masked, upd = step_fn(prog, values_dev, aux_dev,
                                               self._stacks[s])
@@ -291,7 +372,7 @@ class OutOfCoreEngine:
                         np.arange(nv), np.asarray(new_masked), np.asarray(upd))
                     comp_s += time.perf_counter() - t0
                     s_idx.append(si)
-                    s_val.append(sv.astype(values.dtype))
+                    s_val.append(sv.astype(vdtype))
                     if sm is not None:
                         s_msk.append(sm)
                     tiles_done += len(self.assignment[s]) - len(self._streamed[s])
@@ -323,7 +404,9 @@ class OutOfCoreEngine:
                 else:
                     run_list = list(server_tiles)
 
-                if cfg.cache_aware_order and len(run_list) > 1:
+                if ooc and cfg.interval_aware_order and len(run_list) > 1:
+                    run_list = self._order_joint_residency(s, run_list)
+                elif cfg.cache_aware_order and len(run_list) > 1:
                     run_list = self._order_cache_first(s, run_list)
 
                 if cfg.pipeline:
@@ -349,14 +432,19 @@ class OutOfCoreEngine:
                             filters[tid] = self._make_filter(tile, nv)
 
                         t0 = time.perf_counter()
-                        rows, new, upd = run_tile(
-                            prog, values_dev, aux_dev,
-                            (tile.src, tile.dst_local, tile_edge_values(tile)),
-                            tile.meta.row_start, tile.meta.num_rows,
-                            row_cap, cfg.seg_impl,
-                        )
-                        ri, rv, rm = self._split_updates(
-                            np.asarray(rows), np.asarray(new), np.asarray(upd))
+                        if ooc:
+                            ri, rv, rm = self._ooc_tile_step(prog, tile, nv)
+                        else:
+                            rows, new, upd = run_tile(
+                                prog, values_dev, aux_dev,
+                                (tile.src, tile.dst_local,
+                                 tile_edge_values(tile)),
+                                tile.meta.row_start, tile.meta.num_rows,
+                                row_cap, cfg.seg_impl,
+                            )
+                            ri, rv, rm = self._split_updates(
+                                np.asarray(rows), np.asarray(new),
+                                np.asarray(upd))
                         comp_s += time.perf_counter() - t0
                         s_idx.append(ri)
                         s_val.append(rv)
@@ -366,7 +454,7 @@ class OutOfCoreEngine:
                 si = np.concatenate(s_idx) if s_idx else np.zeros(0, np.int64)
                 val_shape = (0, qa) if multi_q else (0,)
                 sv = (np.concatenate(s_val) if s_val
-                      else np.zeros(val_shape, values.dtype))
+                      else np.zeros(val_shape, vdtype))
                 sm = None
                 if multi_q:
                     sm = (np.concatenate(s_msk) if s_msk
@@ -380,7 +468,7 @@ class OutOfCoreEngine:
                     # overlap this server's payload compression with the next
                     # server's compute; records collected at the barrier below
                     bcast_futures[s] = self._measure_broadcast(
-                        si, sv, sm, nv, qa, values.dtype, background=True)
+                        si, sv, sm, nv, qa, vdtype, background=True)
 
             if building_filters and all(f is not None for f in filters):
                 self._filters = filters
@@ -395,7 +483,7 @@ class OutOfCoreEngine:
                         rec = bcast_futures[s].result()
                     else:
                         rec = self._measure_broadcast(si, sv, sm, nv, qa,
-                                                      values.dtype)
+                                                      vdtype)
                     raw_b += rec.raw_bytes
                     wire_b += rec.wire_bytes
                 else:
@@ -412,21 +500,47 @@ class OutOfCoreEngine:
 
             all_idx = np.concatenate(upd_idx_parts) if upd_idx_parts else np.zeros(0, np.int64)
             all_val = (np.concatenate(upd_val_parts) if upd_val_parts
-                       else np.zeros((0, qa) if multi_q else (0,), values.dtype))
+                       else np.zeros((0, qa) if multi_q else (0,), vdtype))
+            all_msk = None
             if multi_q:
-                # per-cell application: a row touched by query A must not
-                # clobber query B's column with a masked zero / sub-tol value
                 all_msk = (np.concatenate(upd_msk_parts) if upd_msk_parts
                            else np.zeros((0, qa), dtype=bool))
-                cur = values[all_idx]
-                cur[all_msk] = all_val[all_msk]
-                values[all_idx] = cur
                 upd_per_q = all_msk.sum(axis=0)
                 updated_pairs = int(all_msk.sum())
             else:
-                values[all_idx] = all_val
                 upd_per_q = None
                 updated_pairs = int(len(all_idx))
+            dirty_ivs = 0
+            if ooc:
+                # dirty-interval writeback (DESIGN.md §10): load only the
+                # interval blocks that received updates, apply in place,
+                # write back dirty — clean intervals are never touched.
+                if len(all_idx):
+                    ivs = vstore.interval_of(all_idx)
+                    for iv in np.unique(ivs):
+                        ksel = ivs == iv
+                        lo, _hi = vstore.interval_range(int(iv))
+                        blk = vstore.get_block("value", int(iv)).copy()
+                        loc = all_idx[ksel] - lo
+                        if multi_q:
+                            # per-cell application: a row touched by query A
+                            # must not clobber query B's untouched column
+                            cur = blk[loc]
+                            msk = all_msk[ksel]
+                            cur[msk] = all_val[ksel][msk]
+                            blk[loc] = cur
+                        else:
+                            blk[loc] = all_val[ksel]
+                        vstore.write_block("value", int(iv), blk)
+                        dirty_ivs += 1
+            elif multi_q:
+                # per-cell application: a row touched by query A must not
+                # clobber query B's column with a masked zero / sub-tol value
+                cur = values[all_idx]
+                cur[all_msk] = all_val[all_msk]
+                values[all_idx] = cur
+            else:
+                values[all_idx] = all_val
             updated_ids = all_idx
 
             # Re-tier at the barrier: off the tile hot path, after this
@@ -446,6 +560,15 @@ class OutOfCoreEngine:
             # per-superstep delta (like io_busy/promotions above)
             disk_b = cache_stats["disk_bytes_read"] - self._disk_cum
             self._disk_cum = cache_stats["disk_bytes_read"]
+            vs_faults = vs_load = vs_spill = 0
+            if ooc:
+                vst = vstore.stats
+                vs_faults = vst.faults - self._vs_faults_cum
+                vs_load = vst.load_bytes - self._vs_load_cum
+                vs_spill = vst.spill_bytes - self._vs_spill_cum
+                self._vs_faults_cum = vst.faults
+                self._vs_load_cum = vst.load_bytes
+                self._vs_spill_cum = vst.spill_bytes
             # --- query retirement (multi-query): a column with zero updated
             # cells this superstep is at its fixpoint — exactly the condition
             # under which a single-query run of that column would have
@@ -459,18 +582,27 @@ class OutOfCoreEngine:
                 done = np.nonzero(upd_per_q == 0)[0]
                 if len(done):
                     retired = tuple(int(active_q[c]) for c in done)
-                    for c in done:
-                        gq = int(active_q[c])
-                        final_values[:, gq] = values[:, c]
-                        per_query_ss[gq] = ss + 1
                     keep = upd_per_q > 0
-                    values = np.ascontiguousarray(values[:, keep])
+                    if ooc:
+                        for c in done:
+                            gq = int(active_q[c])
+                            final_values[:, gq] = self._ooc_column(vstore, c)
+                            per_query_ss[gq] = ss + 1
+                        q_names = [n for n in vstore.names()
+                                   if vstore.spec(n)[1] == (qa,)]
+                        vstore.compact_columns(q_names, keep)
+                    else:
+                        for c in done:
+                            gq = int(active_q[c])
+                            final_values[:, gq] = values[:, c]
+                            per_query_ss[gq] = ss + 1
+                        values = np.ascontiguousarray(values[:, keep])
+                        for k in list(aux_np):
+                            a = aux_np[k]
+                            if a.ndim == 2 and a.shape[1] == qa:  # per-query
+                                aux_np[k] = np.ascontiguousarray(a[:, keep])
+                                aux_dev[k] = jnp.asarray(aux_np[k])
                     active_q = active_q[keep]
-                    for k in list(aux_np):
-                        a = aux_np[k]
-                        if a.ndim == 2 and a.shape[1] == qa:   # per-query aux
-                            aux_np[k] = np.ascontiguousarray(a[:, keep])
-                            aux_dev[k] = jnp.asarray(aux_np[k])
 
             history.append(SuperstepStats(
                 superstep=ss,
@@ -495,6 +627,10 @@ class OutOfCoreEngine:
                 updated_pairs=updated_pairs,
                 updated_per_query=upd_map,
                 retired_queries=retired,
+                vstate_faults=vs_faults,
+                vstate_load_bytes=vs_load,
+                vstate_spill_bytes=vs_spill,
+                vstate_dirty_intervals=dirty_ivs,
             ))
             if multi_q:
                 if len(active_q) == 0:
@@ -507,8 +643,17 @@ class OutOfCoreEngine:
         if multi_q:
             # flush columns still live at max_supersteps into the result
             for c, gq in enumerate(active_q):
-                final_values[:, int(gq)] = values[:, c]
+                final_values[:, int(gq)] = (
+                    self._ooc_column(vstore, c) if ooc else values[:, c])
             values = final_values
+        elif ooc:
+            values = vstore.materialize("value")
+        if ooc:
+            # the result materializes the final arrays; the working state
+            # and its disk spill tier are per-run scratch
+            aux_np = {n: vstore.materialize(n) for n in vstore.names()
+                      if n != "value"}
+            vstore.close()
         return RunResult(values=values, aux=aux_np, history=history,
                          supersteps=len(history), converged=converged,
                          per_query_supersteps=per_query_ss)
@@ -519,8 +664,19 @@ class OutOfCoreEngine:
         inline (returns a BroadcastRecord) or on the comm executor
         (returns a Future resolving to one).  ``sm`` is the per-query
         updated mask for multi-query runs ([len(si), qa]) or None; the 2-D
-        payload then covers only the ``qa`` still-active query columns."""
+        payload then covers only the ``qa`` still-active query columns.
+
+        Ooc-vstate mode ships per-dirty-interval sections instead of one
+        whole-V payload (DESIGN.md §10) — built straight from the sparse
+        update lists, so no [V, Q]-sized buffer is ever densified."""
         cfg = self.cfg
+        if self._ooc:
+            plan = (comm.plan_broadcast_intervals_async if background
+                    else comm.plan_broadcast_intervals)
+            return plan(si, sv, sm, self._iv_splitter,
+                        threshold=cfg.comm_threshold,
+                        compressor=cfg.comm_compressor,
+                        mode=cfg.comm_mode)
         if sm is not None:
             upd_mask = np.zeros((nv, qa), dtype=bool)
             upd_mask[si] = sm
@@ -561,6 +717,11 @@ class OutOfCoreEngine:
         cfg = self.cfg
         if not tids:
             return [], [], [], 0.0, 0.0, 0.0
+        if self._ooc:
+            # ooc-vstate: the prefetcher still overlaps edge-tile reads with
+            # compute, but tiles dispatch one at a time through the sharded
+            # step (stacking would need the full [V] array on device)
+            return self._run_tiles_pipelined_ooc(s, tids, prog, filters, nv)
         row_cap = self.plan.row_cap
         stack_k = max(1, cfg.stack_size)
         load_s = comp_s = stall_s = 0.0
@@ -703,6 +864,207 @@ class OutOfCoreEngine:
             return list(tids)
         return ([t for t in tids if t in resident]
                 + [t for t in tids if t not in resident])
+
+    # ------------------------------------------------------------------
+    # out-of-core vertex state (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _build_vstate(self, values: np.ndarray,
+                      aux_np: dict) -> VertexStateStore:
+        """Shard the freshly initialized [V(, Q)] arrays into an
+        interval-sharded store under ``cfg.vertex_memory_budget``."""
+        cfg = self.cfg
+        stored = self.store.load_interval_plan()
+        if cfg.num_intervals:
+            k = cfg.num_intervals
+        else:
+            # auto: size intervals so ~4 blocks of the full per-vertex
+            # state fit the budget — gather always has headroom to hold
+            # the dst block plus several source blocks hot
+            total = values.nbytes + sum(a.nbytes for a in aux_np.values())
+            k = max(2, int(np.ceil(total / max(cfg.vertex_memory_budget / 4,
+                                               1))))
+        if stored is not None and (cfg.num_intervals == 0
+                                   or stored.num_intervals == cfg.num_intervals):
+            iv = stored   # honor the preprocessed plan: footprint metadata
+        else:             # in the tile store refers to *its* boundaries
+            iv = plan_intervals(self.plan.splitter, k)
+        self._use_meta_fp = (stored is not None
+                             and np.array_equal(iv.splitter, stored.splitter))
+        self._iv_splitter = iv.splitter
+        self._iv_t2i = iv.tile_to_interval
+        self._tile_iv_ids = {}
+        spill_dir = tempfile.mkdtemp(prefix="_vstate_", dir=self.store.root)
+        vstore = VertexStateStore(iv.splitter, cfg.vertex_memory_budget,
+                                  spill_dir)
+        self.vstate = vstore
+        vstore.add_array("value", values)
+        for name, arr in aux_np.items():
+            vstore.add_array(name, arr)
+        return vstore
+
+    def _tile_footprint(self, tile):
+        """(interval ids, cumulative edge ptr, bucket-sort permutation) for
+        one tile — from the tile's recorded metadata when the store was
+        preprocessed with this interval plan, else computed on the fly."""
+        m = tile.meta
+        if (self._use_meta_fp and m.src_intervals is not None
+                and tile.iv_perm is not None):
+            ids, ptr, perm = m.src_intervals, m.src_interval_ptr, tile.iv_perm
+        else:
+            ids, ptr, perm = compute_source_footprint(
+                tile.src, m.num_edges, self._iv_splitter)
+        # remember the joint footprint (src intervals + dst interval) for
+        # the co-scheduler; tiny (a frozenset of ints per tile)
+        self._tile_iv_ids[m.tile_id] = (
+            frozenset(ids) | {int(self._iv_t2i[m.tile_id])})
+        return ids, ptr, perm
+
+    def _ooc_tile_step(self, prog, tile, nv):
+        """One tile's Gather+Apply against the interval-sharded vertex
+        state: materialize per-edge source inputs interval by interval,
+        slice the dst rows from the tile's own interval block, dispatch the
+        jitted sharded step.  Returns the same (ids, values, query-mask)
+        update triple as the in-memory path — bit-identical (see
+        gab.tile_gather_apply_sharded)."""
+        vstore = self.vstate
+        m = tile.meta
+        row_cap = self.plan.row_cap
+        ids, ptr, perm = self._tile_footprint(tile)
+        names = ("value",) + tuple(prog.src_aux)
+        bufs = {}
+        for name in names:
+            dt, tail = vstore.spec(name)
+            bufs[name] = np.zeros((m.edge_cap,) + tail, dt)
+        src = tile.src
+        for j, iv in enumerate(ids):
+            sl = perm[ptr[j]: ptr[j + 1]]
+            lo, _hi = vstore.interval_range(int(iv))
+            local = src[sl] - lo
+            for name in names:
+                bufs[name][sl] = vstore.get_block(name, int(iv))[local]
+        ivd = int(self._iv_t2i[m.tile_id])
+        lo_d, _hi_d = vstore.interval_range(ivd)
+        r0, r1 = m.row_start - lo_d, m.row_end - lo_d
+        vdt, vtail = vstore.spec("value")
+        old = np.zeros((row_cap,) + vtail, vdt)
+        old[: m.num_rows] = vstore.get_block("value", ivd)[r0:r1]
+        dst_aux = {}
+        for name in prog.dst_aux:
+            dt, tail = vstore.spec(name)
+            buf = np.zeros((row_cap,) + tail, dt)
+            buf[: m.num_rows] = vstore.get_block(name, ivd)[r0:r1]
+            dst_aux[name] = buf
+        new, upd = run_tile_sharded(
+            prog, bufs["value"], {k: bufs[k] for k in prog.src_aux},
+            tile_edge_values(tile), tile.dst_local, old, dst_aux,
+            m.num_rows, row_cap, self.cfg.seg_impl)
+        rows = np.minimum(m.row_start + np.arange(row_cap), nv - 1)
+        return self._split_updates(rows, np.asarray(new), np.asarray(upd))
+
+    def _ooc_column(self, vstore: VertexStateStore, c: int) -> np.ndarray:
+        """Assemble one query column of the sharded value array."""
+        return np.concatenate(
+            [vstore.get_block("value", k)[:, c]
+             for k in range(vstore.num_intervals)])
+
+    def _run_tiles_pipelined_ooc(self, s, tids, prog, filters, nv):
+        cfg = self.cfg
+        load_s = comp_s = stall_s = 0.0
+        s_idx: list = []
+        s_val: list = []
+        s_msk: list = []
+        it = self.store.prefetch_iter(tids, depth=cfg.prefetch_depth,
+                                      cache=self.caches[s],
+                                      workers=cfg.prefetch_workers)
+        try:
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    tid, tile = next(it)
+                except StopIteration:
+                    break
+                wait = time.perf_counter() - t0
+                load_s += wait
+                stall_s += wait
+                if filters is not None and filters[tid] is None:
+                    filters[tid] = self._make_filter(tile, nv)
+                t0 = time.perf_counter()
+                ri, rv, rm = self._ooc_tile_step(prog, tile, nv)
+                comp_s += time.perf_counter() - t0
+                s_idx.append(ri)
+                s_val.append(rv)
+                if rm is not None:
+                    s_msk.append(rm)
+        finally:
+            it.close()
+        return s_idx, s_val, s_msk, load_s, comp_s, stall_s
+
+    def _order_joint_residency(self, s: int, tids: list[int]) -> list[int]:
+        """Interval-aware co-scheduling (DESIGN.md §10): greedily pick the
+        tile whose joint footprint (source intervals + dst interval)
+        overlaps most with a simulated LRU set of hot vertex intervals,
+        breaking ties toward edge-cache-resident tiles — maximizing joint
+        residency of the edge cache and the vertex-state hot tier.  Order
+        never changes results (disjoint rows, BSP barrier).  Falls back to
+        cache-hit-first while footprints are unknown (superstep 0)."""
+        fps = self._tile_iv_ids
+        if any(t not in fps for t in tids):
+            return self._order_cache_first(s, tids)
+        if len(tids) > 256:
+            # the greedy below is O(T^2); past a few hundred tiles its
+            # Python cost rivals the tile compute, and its behaviour on
+            # locality-structured inputs is a contiguous sweep starting
+            # from the hot end anyway — compute that sweep directly
+            return self._order_interval_sweep(tids)
+        cache = self.caches[s]
+        cap = max(1, self.vstate.hot_block_capacity("value"))
+        sim: OrderedDict[int, None] = OrderedDict(
+            (k, None) for k in sorted(self.vstate.hot_intervals("value")))
+        edge_res = {t for t in tids if cache.contains(t)}
+        ivd = {t: int(self._iv_t2i[t]) for t in tids}
+        last: Optional[int] = None
+        remaining = list(tids)
+        order: list[int] = []
+        while remaining:
+            best, best_score = None, None
+            for t in remaining:
+                # hot-source-interval overlap first; then stay near the
+                # previous pick's dst interval so the walk sweeps
+                # contiguously instead of thrashing on overlap ties (a
+                # contiguous sweep is what keeps the fault count at
+                # ~K - cap per pass); edge-cache residency breaks what
+                # remains — ranked below the sweep because letting
+                # scattered resident edge tiles pull the walk around
+                # costs more vertex faults than it saves edge decodes
+                score = (len(fps[t] & sim.keys()),
+                         -abs(ivd[t] - last) if last is not None else 0,
+                         t in edge_res)
+                if best_score is None or score > best_score:
+                    best, best_score = t, score
+            order.append(best)
+            remaining.remove(best)
+            last = ivd[best]
+            for ivk in sorted(fps[best]):
+                sim.pop(ivk, None)
+                sim[ivk] = None
+            while len(sim) > cap:
+                sim.popitem(last=False)
+        return order
+
+    def _order_interval_sweep(self, tids: list[int]) -> list[int]:
+        """O(T log T) large-fleet fallback for the co-scheduler: sort tiles
+        by dst interval and run the sweep toward the end *away* from the
+        currently-hot intervals, so the walk starts where residency is and
+        alternating supersteps sweep boustrophedon instead of rewinding to
+        vertex 0 against the LRU."""
+        hot = self.vstate.hot_intervals("value")
+        order = sorted(tids, key=lambda t: int(self._iv_t2i[t]))
+        if not hot:
+            return order
+        mid = (self._iv_t2i[order[0]] + self._iv_t2i[order[-1]]) / 2.0
+        if np.mean(sorted(hot)) > mid:   # hot mass sits at the high end
+            order.reverse()              # -> start there, sweep downward
+        return order
 
     def _agg_cache_stats(self) -> dict:
         hits = sum(c.stats.hits for c in self.caches)

@@ -194,6 +194,44 @@ def tile_gather_apply(
     return rows, new, updated
 
 
+def tile_gather_apply_sharded(
+    prog: VertexProgram,
+    src_vals: Array,              # [E(, Q)] pre-gathered source values
+    src_aux: dict[str, Array],    # pre-gathered per-edge aux, each [E(, ...)]
+    edge_val: Array,              # [E]
+    dst_local: Array,             # [E] dst - row_start; padding routes inert
+    old: Array,                   # [row_cap(, Q)] this tile's current rows
+    dst_aux: dict[str, Array],    # dst-side aux rows, each [row_cap(, ...)]
+    num_rows: Array,              # scalar int32 (<= row_cap)
+    row_cap: int,
+    seg_impl: str = "jnp",
+) -> tuple[Array, Array]:
+    """Gather+Apply for one tile with *pre-gathered* source-side inputs —
+    the out-of-core vertex-state path (DESIGN.md §10).
+
+    The engine materializes ``src_vals``/``src_aux`` interval-by-interval
+    from the :class:`~repro.core.vstate.VertexStateStore` (so no full [V]
+    array ever exists) and slices ``old``/``dst_aux`` from the tile's own
+    dst-interval block.  Edge *order* is untouched — only the fill of the
+    pre-gathered buffers walks intervals — so contributions reduce in
+    exactly the same order as :func:`tile_gather_apply` and valid rows are
+    bit-identical to the in-memory path.  Padding slots hold zeros instead
+    of ``values[0]``; they only ever reduce into the masked-out sink row.
+
+    Returns (new_values [row_cap(, Q)], updated [row_cap(, Q)] bool).
+    """
+    contrib = prog.gather(src_vals, edge_val, src_aux)
+    accum = segment_reduce(
+        contrib, dst_local, row_cap + 1, prog.combine, impl=seg_impl
+    )[:row_cap]
+    new = prog.apply(old, accum, dst_aux)
+    local_rows = jnp.arange(row_cap, dtype=jnp.int32)
+    valid = _bcast_rows(local_rows < num_rows, new)
+    new = jnp.where(valid, new, old)
+    updated = jnp.logical_and(valid, prog.updated_mask(old, new))
+    return new, updated
+
+
 def stacked_tiles_step(
     prog: VertexProgram,
     values: Array,
@@ -317,6 +355,25 @@ def run_tile(prog, values, aux, tile_arrays, row_start, num_rows,
     return _jit_tile_step(
         prog, values, aux, src, dst_local, edge_val,
         (jnp.int32(row_start), jnp.int32(num_rows)), row_cap, seg_impl,
+    )
+
+
+@partial(jax.jit, static_argnums=(0, 8, 9))
+def _jit_tile_step_sharded(prog, src_vals, src_aux, edge_val, dst_local,
+                           old, dst_aux, num_rows, row_cap, seg_impl):
+    return tile_gather_apply_sharded(
+        prog, src_vals, src_aux, edge_val, dst_local, old, dst_aux,
+        num_rows, row_cap, seg_impl,
+    )
+
+
+def run_tile_sharded(prog, src_vals, src_aux, edge_val, dst_local, old,
+                     dst_aux, num_rows, row_cap, seg_impl="jnp"):
+    """Ooc-vstate engine entry point for one tile (host arrays ok); one
+    compile serves every tile (shapes keyed by (edge_cap, row_cap, Q))."""
+    return _jit_tile_step_sharded(
+        prog, src_vals, src_aux, edge_val, dst_local, old, dst_aux,
+        jnp.int32(num_rows), row_cap, seg_impl,
     )
 
 

@@ -113,6 +113,68 @@ def plan_partition(
     )
 
 
+@dataclasses.dataclass
+class IntervalPlan:
+    """Source-interval plan for out-of-core vertex state (DESIGN.md §10).
+
+    V is split into K contiguous intervals whose boundaries are *aligned to
+    tile row ranges* (every interval boundary is a tile splitter entry), so
+    each tile's target rows fall inside exactly one interval and a tile's
+    dst-side state is a single block.  The src side of a tile may touch any
+    subset of intervals — that subset is its *source-interval footprint*
+    (recorded in ``TileMeta.src_intervals`` / computed lazily by the
+    engine)."""
+
+    splitter: np.ndarray        # int64[K + 1]; interval k = [splitter[k], splitter[k+1])
+    tile_to_interval: np.ndarray  # int64[P]; owning interval of each tile's rows
+
+    @property
+    def num_intervals(self) -> int:
+        return len(self.splitter) - 1
+
+    def interval_range(self, k: int) -> tuple[int, int]:
+        return int(self.splitter[k]), int(self.splitter[k + 1])
+
+    def interval_of(self, vertex_ids) -> np.ndarray:
+        """Owning interval per vertex id (vectorized)."""
+        return np.searchsorted(self.splitter, vertex_ids, side="right") - 1
+
+    def to_dict(self) -> dict:
+        return dict(
+            splitter=self.splitter.tolist(),
+            tile_to_interval=self.tile_to_interval.tolist(),
+        )
+
+    @staticmethod
+    def from_dict(d: dict) -> "IntervalPlan":
+        return IntervalPlan(
+            splitter=np.asarray(d["splitter"], dtype=np.int64),
+            tile_to_interval=np.asarray(d["tile_to_interval"], dtype=np.int64),
+        )
+
+
+def plan_intervals(tile_splitter: np.ndarray, num_intervals: int) -> IntervalPlan:
+    """Group consecutive tiles into ``num_intervals`` vertex intervals of
+    roughly |V|/K vertices each.  Boundaries are chosen *from the tile
+    splitter*, so intervals always align to tile row ranges; K is clamped to
+    the tile count when there are fewer tiles than requested intervals."""
+    tile_splitter = np.asarray(tile_splitter, dtype=np.int64)
+    nv = int(tile_splitter[-1])
+    num_tiles = len(tile_splitter) - 1
+    k = max(1, min(int(num_intervals), num_tiles))
+    target = nv / k
+    cuts = [0]
+    for t in range(1, num_tiles):
+        b = int(tile_splitter[t])
+        if b >= len(cuts) * target and len(cuts) < k:
+            cuts.append(b)
+    cuts.append(nv)
+    splitter = np.asarray(cuts, dtype=np.int64)
+    t2i = np.searchsorted(splitter, tile_splitter[:-1], side="right") - 1
+    return IntervalPlan(splitter=splitter,
+                        tile_to_interval=t2i.astype(np.int64))
+
+
 def assign_tiles(num_tiles: int, num_servers: int) -> list[list[int]]:
     """Stage 2 (paper §III-C-1): tile i -> server ``i mod N``."""
     out: list[list[int]] = [[] for _ in range(num_servers)]

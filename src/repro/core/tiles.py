@@ -33,16 +33,32 @@ class TileMeta:
     edge_cap: int           # padded edge capacity (static shape)
     row_cap: int            # padded row capacity (static shape)
     weighted: bool
+    # --- source-interval footprint (DESIGN.md §10; None when the store was
+    # built without an interval plan — the engine then computes it lazily) ---
+    # interval ids this tile's real src ids touch, ascending
+    src_intervals: Optional[tuple] = None
+    # cumulative real-edge counts per footprint interval
+    # (len == len(src_intervals) + 1); together with Tile.iv_perm these let
+    # gather run interval-by-interval over contiguous slices
+    src_interval_ptr: Optional[tuple] = None
 
     @property
     def num_rows(self) -> int:
         return self.row_end - self.row_start
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.src_intervals is not None:
+            d["src_intervals"] = list(self.src_intervals)
+            d["src_interval_ptr"] = list(self.src_interval_ptr)
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "TileMeta":
+        d = dict(d)
+        for key in ("src_intervals", "src_interval_ptr"):
+            if d.get(key) is not None:
+                d[key] = tuple(int(x) for x in d[key])
         return TileMeta(**d)
 
 
@@ -55,6 +71,10 @@ class Tile:
       dst_local  int32 — target vertex id minus row_start; padding = num_rows
       val        float32 — edge value; absent (None) for unweighted graphs
       row_ptr    int32[num_rows + 1] — CSR offsets into the un-padded prefix
+      iv_perm    int32[num_edges] — edge indices bucket-sorted by source
+                 interval (stable), or None when no footprint is attached;
+                 slice j of ``meta.src_interval_ptr`` selects the edges whose
+                 src lives in ``meta.src_intervals[j]``
     """
 
     meta: TileMeta
@@ -62,6 +82,7 @@ class Tile:
     dst_local: np.ndarray
     val: Optional[np.ndarray]
     row_ptr: np.ndarray
+    iv_perm: Optional[np.ndarray] = None
 
     def nbytes(self) -> int:
         n = self.src.nbytes + self.dst_local.nbytes + self.row_ptr.nbytes
@@ -89,6 +110,45 @@ class Tile:
             assert np.all(pad == m.num_rows)
         if self.val is not None:
             assert self.val.shape == (m.edge_cap,)
+        if self.iv_perm is not None:
+            assert m.src_intervals is not None and m.src_interval_ptr is not None
+            assert self.iv_perm.shape == (m.num_edges,)
+            assert len(m.src_interval_ptr) == len(m.src_intervals) + 1
+            assert m.src_interval_ptr[0] == 0
+            assert m.src_interval_ptr[-1] == m.num_edges
+
+
+def compute_source_footprint(
+    src: np.ndarray, num_edges: int, interval_splitter: np.ndarray
+) -> tuple[tuple, tuple, np.ndarray]:
+    """Source-interval footprint of a tile's real edges.
+
+    Returns (interval ids ascending, cumulative edge counts per interval,
+    edge-index permutation bucket-sorting the real edges by interval) — the
+    layout gather needs to run interval-by-interval with one contiguous
+    block read per touched interval."""
+    real = np.asarray(src[:num_edges], dtype=np.int64)
+    if num_edges == 0:
+        return (), (0,), np.zeros(0, dtype=np.int32)
+    iv = np.searchsorted(np.asarray(interval_splitter, dtype=np.int64),
+                         real, side="right") - 1
+    perm = np.argsort(iv, kind="stable").astype(np.int32)
+    ids, counts = np.unique(iv, return_counts=True)
+    ptr = np.zeros(len(ids) + 1, dtype=np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    return (tuple(int(i) for i in ids), tuple(int(p) for p in ptr), perm)
+
+
+def attach_source_footprint(tile: Tile, interval_splitter: np.ndarray) -> Tile:
+    """Record the tile's source-interval footprint in its metadata (and the
+    bucket-sort permutation in ``iv_perm``).  In place; returns the tile."""
+    ids, ptr, perm = compute_source_footprint(
+        tile.src, tile.meta.num_edges, interval_splitter)
+    tile.meta.src_intervals = ids
+    tile.meta.src_interval_ptr = ptr
+    tile.iv_perm = perm
+    tile.validate()
+    return tile
 
 
 def build_tile(
@@ -100,9 +160,12 @@ def build_tile(
     val: Optional[np.ndarray],
     edge_cap: int,
     row_cap: int,
+    interval_splitter: Optional[np.ndarray] = None,
 ) -> Tile:
     """Build a padded tile from raw (src, dst[, val]) edges with
-    row_start <= dst < row_end.  Edges are sorted by (dst, src)."""
+    row_start <= dst < row_end.  Edges are sorted by (dst, src).  When an
+    ``interval_splitter`` is given, the source-interval footprint is
+    recorded in the tile's metadata (DESIGN.md §10)."""
     num_edges = int(src.shape[0])
     num_rows = row_end - row_start
     if num_edges > edge_cap:
@@ -140,6 +203,8 @@ def build_tile(
         weighted=val is not None,
     )
     t = Tile(meta=meta, src=src_p, dst_local=dst_p, val=val_p, row_ptr=row_ptr)
+    if interval_splitter is not None:
+        return attach_source_footprint(t, interval_splitter)
     t.validate()
     return t
 

@@ -23,10 +23,16 @@ from typing import Iterable, Iterator, Optional
 import numpy as np
 
 from repro.compat import zstd_compress, zstd_decompress
-from repro.core.partition import PartitionPlan
+from repro.core.partition import IntervalPlan, PartitionPlan
 from repro.core.tiles import Tile, TileMeta
 
+# Versioned tile format: GHT1 is the original layout; GHT2 appends the
+# source-interval bucket-sort permutation (``Tile.iv_perm``, DESIGN.md §10)
+# after the value array.  Readers accept both; writers emit GHT2 only when a
+# footprint is attached, so stores built without an interval plan stay
+# byte-identical to the v1 format.
 MAGIC = b"GHT1"
+MAGIC_V2 = b"GHT2"
 
 # The paper's cache modes: 1=raw, 2=snappy, 3=zlib-1, 4=zlib-3.  snappy/zlib
 # are not shipped in this environment; zstd levels are the stand-ins with the
@@ -56,14 +62,17 @@ def decompress_blob(blob: bytes, mode: int) -> bytes:
 
 
 def serialize_tile(tile: Tile) -> bytes:
+    v2 = tile.iv_perm is not None
     header = dict(
         meta=tile.meta.to_dict(),
         weighted=tile.val is not None,
         row_ptr_len=int(tile.row_ptr.shape[0]),
     )
+    if v2:
+        header["iv_perm_len"] = int(tile.iv_perm.shape[0])
     hb = json.dumps(header).encode()
     out = io.BytesIO()
-    out.write(MAGIC)
+    out.write(MAGIC_V2 if v2 else MAGIC)
     out.write(struct.pack("<I", len(hb)))
     out.write(hb)
     out.write(tile.src.astype("<i4").tobytes())
@@ -71,11 +80,14 @@ def serialize_tile(tile: Tile) -> bytes:
     out.write(tile.row_ptr.astype("<i4").tobytes())
     if tile.val is not None:
         out.write(tile.val.astype("<f4").tobytes())
+    if v2:
+        out.write(tile.iv_perm.astype("<i4").tobytes())
     return out.getvalue()
 
 
 def deserialize_tile(blob: bytes) -> Tile:
-    assert blob[:4] == MAGIC, "bad tile magic"
+    magic = blob[:4]
+    assert magic in (MAGIC, MAGIC_V2), "bad tile magic"
     (hlen,) = struct.unpack("<I", blob[4:8])
     header = json.loads(blob[8 : 8 + hlen].decode())
     meta = TileMeta.from_dict(header["meta"])
@@ -92,7 +104,10 @@ def deserialize_tile(blob: bytes) -> Tile:
     dst_local = take(ecap, "<i4")
     row_ptr = take(header["row_ptr_len"], "<i4")
     val = take(ecap, "<f4") if header["weighted"] else None
-    return Tile(meta=meta, src=src, dst_local=dst_local, val=val, row_ptr=row_ptr)
+    iv_perm = (take(header["iv_perm_len"], "<i4")
+               if magic == MAGIC_V2 else None)
+    return Tile(meta=meta, src=src, dst_local=dst_local, val=val,
+                row_ptr=row_ptr, iv_perm=iv_perm)
 
 
 class TileStore:
@@ -108,13 +123,16 @@ class TileStore:
 
     # -- write side (SPE) --------------------------------------------------
     def initialize(self, plan: PartitionPlan, weighted: bool,
-                   in_degree: np.ndarray, out_degree: np.ndarray) -> None:
+                   in_degree: np.ndarray, out_degree: np.ndarray,
+                   interval_plan: Optional[IntervalPlan] = None) -> None:
         os.makedirs(self.tile_dir, exist_ok=True)
         meta = dict(
             plan=plan.to_dict(),
             weighted=weighted,
             disk_mode=self.disk_mode,
         )
+        if interval_plan is not None:
+            meta["interval_plan"] = interval_plan.to_dict()
         tmp = os.path.join(self.root, "meta.json.tmp")
         with open(tmp, "w") as f:
             json.dump(meta, f)
@@ -142,6 +160,13 @@ class TileStore:
 
     def load_plan(self) -> PartitionPlan:
         return PartitionPlan.from_dict(self.load_meta()["plan"])
+
+    def load_interval_plan(self) -> Optional[IntervalPlan]:
+        """Interval plan recorded at preprocessing time (DESIGN.md §10), or
+        None for stores built without one — the engine then derives a plan
+        from the tile splitter and computes footprints lazily."""
+        d = self.load_meta().get("interval_plan")
+        return IntervalPlan.from_dict(d) if d is not None else None
 
     def load_degrees(self) -> tuple[np.ndarray, np.ndarray]:
         z = np.load(os.path.join(self.root, "degrees.npz"))
@@ -189,6 +214,11 @@ class TileStore:
         ``depth`` bounds memory: at most ``depth`` tiles are decoded-but-
         unconsumed (completed or in flight) at any moment, regardless of
         worker count.  Delivery order always matches ``tile_ids`` order.
+
+        In-flight reads are deduplicated: when two workers want the same
+        tile id concurrently (duplicate ids in ``tile_ids``), the second
+        waits for the first's read to land in the cache instead of issuing
+        a second disk read for the same bytes.
         """
         ids = list(tile_ids)
         if not ids:
@@ -200,6 +230,18 @@ class TileStore:
         results: dict[int, tuple[int, Optional[Tile], Optional[BaseException]]] = {}
         cursor = [0]          # next id index to claim (under cond)
         stop = threading.Event()
+        # tile id -> (event, [tile, exc]) for reads currently in flight: the
+        # leader loads and publishes; followers wait on the event and reuse
+        # the leader's result (which also sits in the cache by then) rather
+        # than reading the same tile from disk a second time
+        inflight: dict[int, tuple[threading.Event, list]] = {}
+        iflock = threading.Lock()
+
+        def _load(tid: int) -> Tile:
+            # cache.get consults residency (get_if_resident) before
+            # issuing any disk read: resident tiles decode straight
+            # from idle memory, only misses touch the disk tier
+            return cache.get(tid) if cache is not None else self.read_tile(tid)
 
         def produce() -> None:
             while not stop.is_set():
@@ -212,15 +254,35 @@ class TileStore:
                         return
                     cursor[0] += 1
                 tid = ids[i]
-                try:
-                    # cache.get consults residency (get_if_resident) before
-                    # issuing any disk read: resident tiles decode straight
-                    # from idle memory, only misses touch the disk tier
-                    tile = cache.get(tid) if cache is not None \
-                        else self.read_tile(tid)
-                    item = (tid, tile, None)
-                except BaseException as exc:  # surfaced on the consumer side
-                    item = (tid, None, exc)
+                with iflock:
+                    entry = inflight.get(tid)
+                    leader = entry is None
+                    if leader:
+                        entry = (threading.Event(), [None, None])
+                        inflight[tid] = entry
+                ev, slot = entry
+                if leader:
+                    try:
+                        slot[0] = _load(tid)
+                    except BaseException as exc:  # surfaced on the consumer
+                        slot[1] = exc
+                    finally:
+                        with iflock:
+                            inflight.pop(tid, None)
+                        ev.set()
+                else:
+                    while not ev.wait(timeout=0.1):
+                        if stop.is_set():
+                            budget.release()
+                            return
+                    if slot[1] is not None:
+                        # leader failed; retry independently so a transient
+                        # error doesn't poison every duplicate
+                        try:
+                            slot = [_load(tid), None]
+                        except BaseException as exc:
+                            slot = [None, exc]
+                item = (tid, slot[0], slot[1])
                 with cond:
                     results[i] = item
                     cond.notify_all()

@@ -19,7 +19,8 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
-from repro.core.partition import PartitionPlan, plan_partition
+from repro.core.partition import (IntervalPlan, PartitionPlan, plan_intervals,
+                                  plan_partition)
 from repro.core.tiles import build_tile
 from repro.graphio.formats import TileStore
 from repro.graphio.synth import EdgeChunk
@@ -94,10 +95,18 @@ def preprocess(
     dedup: bool = False,
     pad_edges_to: int = 128,
     pad_rows_to: int = 8,
+    num_intervals: int = 0,
 ) -> PartitionPlan:
-    """Run the full SPE pipeline into ``store``.  Returns the partition plan."""
+    """Run the full SPE pipeline into ``store``.  Returns the partition plan.
+
+    ``num_intervals > 0`` additionally derives a source-interval plan
+    (DESIGN.md §10), records each tile's source-interval footprint in its
+    metadata (versioned GHT2 tile format), and persists the interval plan
+    in the store's meta.json for the out-of-core vertex-state engine."""
     in_deg, out_deg = degree_pass(stream_factory(), num_vertices)
     plan = plan_partition(in_deg, tile_size, pad_edges_to, pad_rows_to)
+    iv_plan: Optional[IntervalPlan] = (
+        plan_intervals(plan.splitter, num_intervals) if num_intervals else None)
 
     spill_root = os.path.join(store.root, "_spill")
     buckets = _SpillBuckets(spill_root, plan.num_tiles, weighted)
@@ -106,7 +115,8 @@ def preprocess(
             tids = (np.searchsorted(plan.splitter, dst, side="right") - 1).astype(np.int64)
             buckets.append(tids, src, dst, val)
 
-        store.initialize(plan, weighted, in_deg, out_deg)
+        store.initialize(plan, weighted, in_deg, out_deg,
+                         interval_plan=iv_plan)
         dd_in = np.zeros_like(in_deg) if dedup else None
         dd_out = np.zeros_like(out_deg) if dedup else None
         for t in range(plan.num_tiles):
@@ -123,10 +133,12 @@ def preprocess(
             tile = build_tile(
                 t, lo, hi, src, dst, val if weighted else None,
                 plan.edge_cap, plan.row_cap,
+                interval_splitter=None if iv_plan is None else iv_plan.splitter,
             )
             store.write_tile(tile)
         if dedup:   # degrees must reflect the deduped edge set
-            store.initialize(plan, weighted, dd_in, dd_out)
+            store.initialize(plan, weighted, dd_in, dd_out,
+                             interval_plan=iv_plan)
     finally:
         buckets.close()
         if os.path.isdir(spill_root) and not os.listdir(spill_root):

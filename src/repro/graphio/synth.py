@@ -72,6 +72,33 @@ def rmat_edges(
         left -= n
 
 
+def banded_edges(
+    num_vertices: int,
+    num_edges: int,
+    bandwidth: int = 0,
+    seed: int = 0,
+    weighted: bool = False,
+    chunk: int = 1 << 20,
+) -> Iterator[EdgeChunk]:
+    """Locality-structured graph: src falls within ``bandwidth`` of dst
+    (wrapping), like meshes / road networks / time-ordered interaction
+    graphs.  Tiles of such graphs touch only a few *source intervals*, so
+    this is the workload where interval-aware co-scheduling of the
+    out-of-core vertex state shows up (DESIGN.md §10); R-MAT/uniform src
+    sets span all of V and every tile's footprint is everything."""
+    w = bandwidth or max(1, num_vertices // 16)
+    rng = np.random.default_rng(seed)
+    left = num_edges
+    while left > 0:
+        n = min(chunk, left)
+        dst = rng.integers(0, num_vertices, n, dtype=np.int64)
+        off = rng.integers(-w, w + 1, n, dtype=np.int64)
+        src = (dst + off) % num_vertices
+        val = rng.uniform(0.1, 10.0, n).astype(np.float32) if weighted else None
+        yield src, dst, val
+        left -= n
+
+
 def from_arrays(
     src: np.ndarray, dst: np.ndarray, val: Optional[np.ndarray] = None,
     chunk: int = 1 << 20,

@@ -20,7 +20,8 @@ from repro.graphio.formats import TileStore
 def build_store(args) -> TileStore:
     store = TileStore(args.store or tempfile.mkdtemp(prefix="graphh_"),
                       disk_mode=args.disk_mode)
-    gen = synth.rmat_edges if args.graph == "rmat" else synth.uniform_edges
+    gen = {"rmat": synth.rmat_edges, "uniform": synth.uniform_edges,
+           "banded": synth.banded_edges}[args.graph]
     weighted = args.app in ("sssp", "landmarks")
     t0 = time.time()
     spe.preprocess(
@@ -36,7 +37,8 @@ def build_store(args) -> TileStore:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="pagerank", choices=sorted(APPS))
-    ap.add_argument("--graph", default="rmat", choices=["rmat", "uniform"])
+    ap.add_argument("--graph", default="rmat",
+                    choices=["rmat", "uniform", "banded"])
     ap.add_argument("--vertices", type=int, default=100_000)
     ap.add_argument("--edges", type=int, default=1_000_000)
     ap.add_argument("--tile-size", type=int, default=65536)
@@ -75,6 +77,18 @@ def main(argv=None):
     ap.add_argument("--seeds", default=None,
                     help="comma-separated seed/source/landmark vertex ids "
                          "for the batched apps, e.g. --seeds 0,17,42")
+    ap.add_argument("--vertex-memory-budget", type=float, default=None,
+                    metavar="MB",
+                    help="byte budget (in MB) for the interval-sharded "
+                         "out-of-core vertex state (DESIGN.md §10); vertex "
+                         "[V,Q] arrays beyond it spill to a disk tier.  "
+                         "Default: fully resident (the paper's All-in-All)")
+    ap.add_argument("--num-intervals", type=int, default=0,
+                    help="source intervals K for the out-of-core vertex "
+                         "state (0 = auto from the budget / stored plan)")
+    ap.add_argument("--no-interval-order", action="store_true",
+                    help="disable interval-aware tile co-scheduling in "
+                         "ooc-vstate mode (falls back to cache-hit-first)")
     args = ap.parse_args(argv)
 
     if args.reuse and args.store:
@@ -97,6 +111,10 @@ def main(argv=None):
         prefetch_depth=args.prefetch_depth,
         prefetch_workers=args.prefetch_workers,
         stack_size=args.stack_size,
+        vertex_memory_budget=(None if args.vertex_memory_budget is None
+                              else int(args.vertex_memory_budget * 1e6)),
+        num_intervals=args.num_intervals,
+        interval_aware_order=not args.no_interval_order,
     )
     eng = OutOfCoreEngine(store, cfg)
     batched = args.app in ("ppr", "msbfs", "landmarks")
@@ -135,6 +153,16 @@ def main(argv=None):
           f"mode={eng.cache_mode}, "
           f"disk-stall {res.disk_stall_fraction()*100:.0f}% of wall time"
           f"{' (pipelined)' if args.pipeline else ''}")
+    if args.vertex_memory_budget is not None:
+        vs = eng.vstate.stats
+        faults = sum(x.vstate_faults for x in res.history)
+        spill = sum(x.vstate_spill_bytes for x in res.history)
+        load = sum(x.vstate_load_bytes for x in res.history)
+        print(f"  vertex state [{eng.vstate.num_intervals} intervals, "
+              f"budget {args.vertex_memory_budget:g} MB]: "
+              f"{faults} interval faults, {load/1e6:.1f} MB faulted in, "
+              f"{spill/1e6:.1f} MB spilled to disk, "
+              f"{vs.dirty_writebacks} dirty writebacks")
     if args.cache_policy != "lru":
         promo = sum(x.cache_promotions for x in res.history)
         demo = sum(x.cache_demotions for x in res.history)

@@ -198,3 +198,45 @@ def test_sparse_capacity_bound():
         k = comm.sparse_capacity(nv)
         assert k >= int(np.ceil(nv * comm.DENSITY_THRESHOLD))
         assert k <= nv or nv < 128
+
+
+def test_comm_pool_shared_under_concurrent_first_use(monkeypatch):
+    """Regression: the lazily-created broadcast executor was guarded by a
+    bare None check — two threads racing the first plan_broadcast_async
+    could each create a ThreadPoolExecutor and leak one.  Double-checked
+    locking must hand every concurrent first caller the same pool (and
+    register its atexit shutdown exactly once)."""
+    import threading
+    from concurrent.futures import ThreadPoolExecutor
+
+    created = []
+
+    class CountingPool(ThreadPoolExecutor):
+        def __init__(self, *a, **kw):
+            created.append(self)
+            super().__init__(*a, **kw)
+
+    comm._shutdown_comm_pool()     # reset any pool from earlier tests
+    monkeypatch.setattr(comm, "ThreadPoolExecutor", CountingPool)
+    vals = np.arange(64, dtype=np.float32)
+    upd = np.ones(64, bool)
+    barrier = threading.Barrier(8)
+    futures = []
+    flock = threading.Lock()
+
+    def go():
+        barrier.wait()   # maximize the race on the None check
+        f = comm.plan_broadcast_async(vals, upd)
+        with flock:
+            futures.append(f)
+
+    threads = [threading.Thread(target=go) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(created) == 1               # exactly one executor, shared
+    for f in futures:
+        assert f.result().raw_bytes > 0
+    comm._shutdown_comm_pool()             # and it can be torn down cleanly
+    assert comm._COMM_POOL is None

@@ -343,3 +343,35 @@ def test_superstep_report_carries_tier_stats(small_store):
     # have moved tiles (demotions under pressure, or promotions after)
     assert (sum(x.cache_demotions for x in res.history)
             + sum(x.cache_promotions for x in res.history)) > 0
+
+
+def test_second_run_stats_rebaselined(small_store):
+    """Regression: the cumulative-counter baselines (_io_busy_cum /
+    _promo_cum / _demo_cum / _disk_cum) were only set in __init__, so cache
+    activity between runs (warm()/maintain()/direct get()s) leaked into the
+    next run's first-superstep deltas.  run() must re-baseline: every
+    per-superstep delta of run 2 sums exactly to what run 2 itself moved."""
+    from repro.core.apps import PageRank
+    from repro.core.engine import EngineConfig, OutOfCoreEngine
+
+    store, plan, _ = small_store
+    sizes = [store.tile_disk_bytes(t) for t in range(plan.num_tiles)]
+    eng = OutOfCoreEngine(store, EngineConfig(
+        num_servers=2, cache_capacity_bytes=sum(sizes) // 3, cache_mode=2,
+        tile_skipping=False, max_supersteps=3))
+    eng.run(PageRank())
+    # external cache traffic between the runs: clear + touch tiles directly
+    for c in eng.caches:
+        c.clear()
+        c.get(eng.assignment[0][0])
+    external = sum(c.stats.disk_bytes_read for c in eng.caches)
+    res2 = eng.run(PageRank())
+    total_after = sum(c.stats.disk_bytes_read for c in eng.caches)
+    per_ss = [h.disk_bytes_read for h in res2.history]
+    assert all(b >= 0 for b in per_ss)
+    # run 2's deltas cover exactly run 2's disk traffic — the external
+    # reads between runs are excluded (pre-fix they landed in superstep 0)
+    assert sum(per_ss) == total_after - external
+    assert all(h.io_busy_seconds >= 0 for h in res2.history)
+    assert all(h.cache_promotions >= 0 and h.cache_demotions >= 0
+               for h in res2.history)

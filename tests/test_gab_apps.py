@@ -124,3 +124,30 @@ def test_bloom_filter_skipping_matches_bitmap(tmp_path, small_graph):
     res_bitmap = run(store, BFS(source=0), tile_skipping=True,
                      skip_filter="bitmap", skip_density_threshold=0.9)
     np.testing.assert_allclose(res_bloom.values, res_bitmap.values)
+
+
+def test_single_superstep_run_result_stats(small_store):
+    """Regression: RunResult.mean_superstep_seconds(skip_first=True) /
+    disk_stall_fraction on a run whose history holds a single superstep
+    must fall back to that superstep (never average / divide an empty
+    slice into nan)."""
+    import warnings
+
+    store, plan, _ = small_store
+    eng = OutOfCoreEngine(store, EngineConfig(num_servers=2,
+                                              max_supersteps=1))
+    res = eng.run(PageRank())
+    assert res.supersteps == 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # np.mean([]) would warn
+        m = res.mean_superstep_seconds(skip_first=True)
+        f = res.disk_stall_fraction(skip_first=True)
+    assert m == res.history[0].seconds
+    assert np.isfinite(m) and np.isfinite(f)
+    assert 0.0 <= f <= 1.0
+    # empty history (pathological) still returns a number, not a crash
+    from repro.core.engine import RunResult
+    empty = RunResult(values=res.values, aux={}, history=[], supersteps=0,
+                      converged=False)
+    assert empty.mean_superstep_seconds() == 0.0
+    assert empty.disk_stall_fraction() == 0.0

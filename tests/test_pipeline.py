@@ -87,6 +87,38 @@ def test_prefetch_iter_through_cache_hits(small_store):
     assert store.bytes_read == bytes0             # disk never touched
 
 
+def test_prefetch_iter_inflight_dedup_single_read_per_tile(small_store):
+    """Regression: two prefetch workers claiming the same tile id both
+    missed the cache (get_if_resident consulted, but nothing marked the
+    read in flight) and read the tile from disk twice.  With in-flight
+    deduplication the follower waits for the leader's read and serves the
+    duplicate from the cache — exactly one disk read per distinct tile."""
+    store, plan, _ = small_store
+    cache = EdgeCache(store, capacity_bytes=1 << 30, mode=2)
+    reads = []
+    lock = threading.Lock()
+    orig = store.read_tile_blob
+
+    def slow_counting_read(tid):
+        with lock:
+            reads.append(tid)
+        time.sleep(0.05)   # hold the read open so workers overlap on it
+        return orig(tid)
+
+    store.read_tile_blob = slow_counting_read
+    try:
+        # duplicate ids back to back: both workers pick up the same tile
+        ids = [t for t in range(min(4, plan.num_tiles)) for _ in range(2)]
+        got = list(store.prefetch_iter(ids, depth=4, workers=2, cache=cache))
+        assert [tid for tid, _ in got] == ids
+        for tid, tile in got:
+            assert tile.meta.tile_id == tid
+        with lock:
+            assert sorted(reads) == sorted(set(ids))   # one read per tile
+    finally:
+        store.read_tile_blob = orig
+
+
 def test_prefetch_iter_propagates_errors(small_store):
     store, plan, _ = small_store
     with pytest.raises(FileNotFoundError):

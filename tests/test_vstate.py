@@ -1,0 +1,384 @@
+"""Interval-sharded out-of-core vertex state (DESIGN.md §10).
+
+Covers the VertexStateStore tier ladder (spill/reload round-trips, the
+dirty-writeback-only invariant), the interval plan + footprint metadata
+(partition/tiles/formats), per-dirty-interval broadcast accounting
+(comm), and — the contract that matters — engine bit-identity against
+the fully-resident path across serial/pipelined x tiled/stacked on
+PageRank and MultiSourceBFS, with the vertex budget at <= 25% of the
+full [V, Q] footprint.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core.apps import SSSP, WCC, MultiSourceBFS, PageRank
+from repro.core.engine import EngineConfig, OutOfCoreEngine
+from repro.core.partition import IntervalPlan, plan_intervals
+from repro.core.tiles import attach_source_footprint, compute_source_footprint
+from repro.core.vstate import VertexStateStore
+from repro.graphio import formats, spe
+from repro.graphio.formats import TileStore
+
+
+# --------------------------- VertexStateStore ------------------------------
+
+SPLIT = np.array([0, 40, 90, 150, 200], dtype=np.int64)
+
+
+@pytest.mark.parametrize("dtype,tail", [
+    (np.float32, ()), (np.float64, ()), (np.int64, ()),
+    (np.float32, (5,)), (np.float64, (3,)),
+], ids=["f32", "f64", "i64", "f32_q5", "f64_q3"])
+def test_spill_reload_round_trip_bit_exact(tmp_path, dtype, tail):
+    """Blocks forced down to the disk tier come back bit-identical, for
+    1-D and [V, Q] arrays across dtypes."""
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal((200,) + tail)
+    arr = (arr * 1000).astype(dtype)
+    vs = VertexStateStore(SPLIT, budget_bytes=1, spill_dir=str(tmp_path / "s"))
+    vs.add_array("value", arr)
+    # budget of 1 byte: everything must have spilled to the cold tier
+    snap = vs.tier_snapshot()
+    assert snap["cold"]["blocks"] >= vs.num_intervals - 1
+    assert vs.stats.spill_bytes > 0
+    out = vs.materialize("value")
+    assert out.dtype == arr.dtype
+    np.testing.assert_array_equal(out, arr)
+    vs.close()
+    assert not os.path.exists(str(tmp_path / "s"))
+
+
+def test_unlimited_budget_stays_hot(tmp_path):
+    vs = VertexStateStore(SPLIT, budget_bytes=None,
+                          spill_dir=str(tmp_path / "s"))
+    vs.add_array("value", np.arange(200, dtype=np.float32))
+    assert vs.hot_intervals() == set(range(vs.num_intervals))
+    assert vs.stats.spills == 0 and vs.stats.faults == 0
+    vs.close()
+
+
+def test_close_without_spill_dir_is_noop():
+    """The documented no-spill mode (budget None, no spill_dir) must be
+    closeable — close() used to assert on the missing spill_dir."""
+    vs = VertexStateStore(SPLIT, budget_bytes=None, spill_dir=None)
+    vs.add_array("value", np.arange(200, dtype=np.float32))
+    vs.close()                                  # no crash, nothing to do
+    np.testing.assert_array_equal(vs.materialize("value"),
+                                  np.arange(200, dtype=np.float32))
+
+
+def test_block_get_write_and_interval_mapping(tmp_path):
+    vs = VertexStateStore(SPLIT, budget_bytes=None,
+                          spill_dir=str(tmp_path / "s"))
+    vs.add_array("value", np.arange(200, dtype=np.float32))
+    lo, hi = vs.interval_range(2)
+    np.testing.assert_array_equal(vs.get_block("value", 2),
+                                  np.arange(lo, hi, dtype=np.float32))
+    blk = vs.get_block("value", 1).copy()
+    blk[:] = -1.0
+    vs.write_block("value", 1, blk)
+    assert (vs.materialize("value")[40:90] == -1.0).all()
+    np.testing.assert_array_equal(vs.interval_of(np.array([0, 39, 40, 199])),
+                                  [0, 0, 1, 3])
+
+
+def test_dirty_writeback_only_invariant(tmp_path):
+    """Clean blocks demote for free once serialized: cycling reads under
+    pressure re-spills nothing; only a *written* (dirty) block pays a new
+    disk write on its way back down."""
+    rng = np.random.default_rng(1)
+    arr = rng.standard_normal((200, 4)).astype(np.float32)
+    blk_bytes = arr[0:40].nbytes
+    vs = VertexStateStore(SPLIT, budget_bytes=2 * blk_bytes,
+                          spill_dir=str(tmp_path / "s"))
+    vs.add_array("value", arr)
+    # settle: everything serialized at least once
+    for k in range(vs.num_intervals):
+        vs.get_block("value", k)
+    spills0 = vs.stats.spills
+    for _ in range(3):                      # read-only cycles under pressure
+        for k in range(vs.num_intervals):
+            vs.get_block("value", k)
+    assert vs.stats.spills == spills0       # clean demotions wrote nothing
+    assert vs.stats.faults > 0              # but blocks did cycle through cold
+    dirty = vs.get_block("value", 0).copy()
+    dirty += 1.0
+    vs.write_block("value", 0, dirty)
+    for k in range(vs.num_intervals):       # pressure pushes block 0 back down
+        vs.get_block("value", k)
+    assert vs.stats.spills == spills0 + 1   # exactly the dirty block re-spilled
+    np.testing.assert_array_equal(vs.materialize("value")[:40], dirty)
+    vs.close()
+
+
+def test_compact_columns(tmp_path):
+    arr = np.arange(200 * 3, dtype=np.float32).reshape(200, 3)
+    vs = VertexStateStore(SPLIT, budget_bytes=None,
+                          spill_dir=str(tmp_path / "s"))
+    vs.add_array("value", arr)
+    vs.compact_columns(["value"], np.array([True, False, True]))
+    assert vs.spec("value")[1] == (2,)
+    np.testing.assert_array_equal(vs.materialize("value"), arr[:, [0, 2]])
+    vs.close()
+
+
+# --------------------------- interval plan + footprint ----------------------
+
+def test_plan_intervals_aligned_to_tile_splitter(small_store):
+    store, plan, _ = small_store
+    iv = plan_intervals(plan.splitter, 4)
+    assert iv.splitter[0] == 0 and iv.splitter[-1] == plan.num_vertices
+    assert set(iv.splitter).issubset(set(plan.splitter.tolist()))
+    # every tile's rows live in exactly one interval
+    for t in range(plan.num_tiles):
+        lo, hi = plan.tile_range(t)
+        k = iv.tile_to_interval[t]
+        assert iv.splitter[k] <= lo and hi <= iv.splitter[k + 1]
+    # round-trip
+    iv2 = IntervalPlan.from_dict(iv.to_dict())
+    np.testing.assert_array_equal(iv.splitter, iv2.splitter)
+    np.testing.assert_array_equal(iv.tile_to_interval, iv2.tile_to_interval)
+
+
+def test_plan_intervals_clamps_k(small_store):
+    store, plan, _ = small_store
+    iv = plan_intervals(plan.splitter, 10 * plan.num_tiles)
+    assert iv.num_intervals <= plan.num_tiles
+
+
+def test_source_footprint_buckets_by_interval(small_store):
+    store, plan, _ = small_store
+    iv = plan_intervals(plan.splitter, 4)
+    tile = store.read_tile(0)
+    ids, ptr, perm = compute_source_footprint(
+        tile.src, tile.meta.num_edges, iv.splitter)
+    assert ptr[0] == 0 and ptr[-1] == tile.meta.num_edges
+    assert sorted(perm) == list(range(tile.meta.num_edges))
+    for j, k in enumerate(ids):
+        lo, hi = iv.interval_range(k)
+        bucket = tile.src[perm[ptr[j]: ptr[j + 1]]]
+        assert ((bucket >= lo) & (bucket < hi)).all()
+    # the union of buckets covers every real source id
+    real = set(tile.src[: tile.meta.num_edges].tolist())
+    assert set(np.unique(iv.interval_of(np.array(sorted(real))))) == set(ids)
+
+
+def test_tile_format_v2_round_trip_and_v1_compat(small_store):
+    store, plan, _ = small_store
+    iv = plan_intervals(plan.splitter, 3)
+    tile = store.read_tile(1)
+    # v1: no footprint attached -> GHT1 bytes, iv_perm None after round-trip
+    blob1 = formats.serialize_tile(tile)
+    assert blob1[:4] == formats.MAGIC
+    t1 = formats.deserialize_tile(blob1)
+    assert t1.iv_perm is None and t1.meta.src_intervals is None
+    # v2: footprint attached -> GHT2, metadata + permutation round-trip
+    attach_source_footprint(tile, iv.splitter)
+    blob2 = formats.serialize_tile(tile)
+    assert blob2[:4] == formats.MAGIC_V2
+    t2 = formats.deserialize_tile(blob2)
+    assert t2.meta.src_intervals == tile.meta.src_intervals
+    assert t2.meta.src_interval_ptr == tile.meta.src_interval_ptr
+    np.testing.assert_array_equal(t2.iv_perm, tile.iv_perm)
+    np.testing.assert_array_equal(t2.src, tile.src)
+    t2.validate()
+
+
+def test_spe_records_interval_plan_and_footprints(tmp_path, small_graph):
+    nv, src, dst = small_graph
+    store = TileStore(str(tmp_path / "ivstore"))
+    spe.preprocess_arrays(src, dst, None, nv, store, tile_size=100,
+                          num_intervals=3)
+    iv = store.load_interval_plan()
+    assert iv is not None and iv.num_intervals <= 3
+    plan = store.load_plan()
+    for t in range(plan.num_tiles):
+        tile = store.read_tile(t)
+        assert tile.meta.src_intervals is not None
+        assert tile.iv_perm is not None
+        tile.validate()
+
+
+def test_store_without_plan_loads_none(small_store):
+    store, _, _ = small_store
+    assert store.load_interval_plan() is None
+
+
+# --------------------------- per-interval broadcast -------------------------
+
+def test_plan_broadcast_intervals_counts_and_bytes():
+    splitter = np.array([0, 100, 200, 300], dtype=np.int64)
+    idx = np.array([5, 7, 205], dtype=np.int64)         # intervals 0 and 2
+    vals = np.array([1.0, 2.0, 3.0], dtype=np.float32)
+    rec = comm.plan_broadcast_intervals(idx, vals, None, splitter,
+                                        compressor="none")
+    assert rec.mode == "interval" and rec.intervals == 2
+    # sparse sections: 2 headers + per-update (u32 idx + f32 val)
+    assert rec.raw_bytes == 2 * comm.INTERVAL_HEADER_BYTES + 3 * 8
+    assert rec.density == pytest.approx(3 / 300)
+    # clean intervals cost nothing: same updates, whole-V dense payload is
+    # strictly bigger
+    dense = np.zeros(300, np.float32)
+    upd = np.zeros(300, bool)
+    dense[idx], upd[idx] = vals, True
+    whole = comm.plan_broadcast(dense, upd, compressor="none", mode="dense")
+    assert rec.raw_bytes < whole.raw_bytes
+
+
+def test_plan_broadcast_intervals_empty_and_multiquery():
+    splitter = np.array([0, 50, 100], dtype=np.int64)
+    rec = comm.plan_broadcast_intervals(
+        np.zeros(0, np.int64), np.zeros((0, 2), np.float32),
+        np.zeros((0, 2), bool), splitter)
+    assert rec.intervals == 0 and rec.raw_bytes == 0 and rec.wire_bytes == 0
+    idx = np.array([3, 60], dtype=np.int64)
+    vals = np.array([[1.0, 0.0], [0.0, 2.0]], dtype=np.float32)
+    mask = np.array([[True, False], [False, True]])
+    rec = comm.plan_broadcast_intervals(idx, vals, mask, splitter,
+                                        compressor="none")
+    assert rec.intervals == 2 and rec.raw_bytes > 0
+
+
+# --------------------------- engine bit-identity ----------------------------
+
+def _budget_for(prog, nv):
+    """<= 25% of the full [V, Q] vertex footprint (value + aux arrays)."""
+    state = prog.init(nv, np.ones(nv), np.ones(nv))
+    total = sum(np.asarray(a).nbytes for a in state.values())
+    return max(1, total // 4)
+
+
+def _run(store, prog, budget=None, **kw):
+    cfg = EngineConfig(num_servers=3, max_supersteps=200,
+                       vertex_memory_budget=budget, **kw)
+    return OutOfCoreEngine(store, cfg).run(prog)
+
+
+@pytest.mark.parametrize("pipeline", [False, True], ids=["serial", "pipelined"])
+@pytest.mark.parametrize("prog_factory", [
+    lambda: PageRank(update_tol=1e-10),
+    lambda: MultiSourceBFS(sources=(0, 5, 17, 200)),
+], ids=["pagerank", "msbfs"])
+def test_ooc_vstate_bit_identical(small_store, prog_factory, pipeline):
+    store, plan, _ = small_store
+    nv = plan.num_vertices
+    ref = _run(store, prog_factory(), pipeline=pipeline)
+    res = _run(store, prog_factory(), pipeline=pipeline,
+               budget=_budget_for(prog_factory(), nv))
+    assert res.supersteps == ref.supersteps
+    assert np.array_equal(ref.values, res.values)          # bit-identical
+    if ref.per_query_supersteps is not None:
+        np.testing.assert_array_equal(ref.per_query_supersteps,
+                                      res.per_query_supersteps)
+    for k in ref.aux:
+        np.testing.assert_array_equal(ref.aux[k], res.aux[k])
+    # the budget was real: state actually faulted and/or spilled
+    assert sum(h.vstate_faults for h in res.history) > 0
+
+
+@pytest.mark.parametrize("mode", ["tiled", "stacked"])
+def test_ooc_vstate_engine_modes(small_store, mode):
+    """engine_mode="stacked" needs the full value array on device, so ooc
+    mode falls back to tiled — results must still match the in-memory run
+    of the requested mode bit for bit."""
+    store, plan, _ = small_store
+    ref = _run(store, PageRank(update_tol=1e-10), engine_mode=mode)
+    res = _run(store, PageRank(update_tol=1e-10), engine_mode=mode,
+               budget=_budget_for(PageRank(), plan.num_vertices))
+    assert np.array_equal(ref.values, res.values)
+
+
+def test_ooc_vstate_sssp_wcc_and_meta_footprints(tmp_path, small_graph):
+    """Weighted SSSP + WCC, on a store preprocessed WITH an interval plan
+    (tile footprint metadata drives gather) — vs the in-memory path."""
+    nv, src, dst = small_graph
+    rng = np.random.default_rng(3)
+    val = rng.uniform(0.5, 2.0, len(src)).astype(np.float32)
+    store = TileStore(str(tmp_path / "w"))
+    spe.preprocess_arrays(src, dst, val, nv, store, tile_size=100,
+                          num_intervals=4)
+    for prog_factory in (lambda: SSSP(source=0), lambda: WCC()):
+        ref = _run(store, prog_factory())
+        res = _run(store, prog_factory(),
+                   budget=_budget_for(prog_factory(), nv))
+        assert np.array_equal(ref.values, res.values)
+    # the engine honored the stored plan (footprint metadata usable)
+    eng = OutOfCoreEngine(store, EngineConfig(
+        num_servers=2, max_supersteps=3,
+        vertex_memory_budget=_budget_for(SSSP(), nv)))
+    eng.run(SSSP(source=0))
+    assert eng._use_meta_fp
+    np.testing.assert_array_equal(eng._iv_splitter,
+                                  store.load_interval_plan().splitter)
+
+
+def test_ooc_dirty_interval_writeback_and_broadcast(tmp_path, small_graph):
+    """Late SSSP supersteps touch a shrinking frontier: some supersteps
+    must write back (and broadcast) fewer intervals than exist — clean
+    intervals are never shipped or re-serialized."""
+    nv, src, dst = small_graph
+    rng = np.random.default_rng(3)
+    val = rng.uniform(0.5, 2.0, len(src)).astype(np.float32)
+    store = TileStore(str(tmp_path / "w2"))
+    spe.preprocess_arrays(src, dst, val, nv, store, tile_size=60,
+                          num_intervals=6)
+    res = _run(store, SSSP(source=0), budget=nv)  # tight budget
+    k = store.load_interval_plan().num_intervals
+    dirty = [h.vstate_dirty_intervals for h in res.history]
+    assert any(0 < d < k for d in dirty)
+    assert dirty[-1] == 0                       # converged: nothing dirty
+    # per-superstep broadcast records were per-interval
+    assert all(h.vstate_dirty_intervals <= k for h in res.history)
+
+
+def test_ooc_interval_aware_order_is_permutation(small_store):
+    store, plan, _ = small_store
+    eng = OutOfCoreEngine(store, EngineConfig(
+        num_servers=1, max_supersteps=2,
+        vertex_memory_budget=plan.num_vertices))   # tight: forces tiering
+    eng.run(PageRank(update_tol=1e-10))
+    tids = list(eng.assignment[0])
+    order = eng._order_joint_residency(0, tids)
+    assert sorted(order) == sorted(tids)
+    # footprints were recorded for the scheduler
+    assert all(t in eng._tile_iv_ids for t in tids)
+
+
+def test_ooc_interval_sweep_fallback(small_store):
+    """The O(T log T) large-fleet ordering is a dst-interval sweep that
+    starts from the hot end."""
+    store, plan, _ = small_store
+    eng = OutOfCoreEngine(store, EngineConfig(
+        num_servers=1, max_supersteps=2,
+        vertex_memory_budget=plan.num_vertices))
+    eng.run(PageRank(update_tol=1e-10))
+    tids = list(eng.assignment[0])
+    order = eng._order_interval_sweep(tids)
+    assert sorted(order) == sorted(tids)
+    ivs = [int(eng._iv_t2i[t]) for t in order]
+    assert ivs == sorted(ivs) or ivs == sorted(ivs, reverse=True)
+
+
+def test_ooc_spill_dir_cleaned_up(small_store):
+    store, plan, _ = small_store
+    before = set(os.listdir(store.root))
+    res = _run(store, PageRank(update_tol=1e-10), budget=plan.num_vertices)
+    assert res.converged
+    after = set(os.listdir(store.root))
+    assert not any(d.startswith("_vstate_") for d in after - before)
+
+
+def test_cli_vertex_memory_budget(tmp_path):
+    from repro.launch import graph as cli
+
+    res = cli.main([
+        "--app", "pagerank", "--graph", "banded", "--vertices", "2000",
+        "--edges", "8000", "--tile-size", "512", "--servers", "2",
+        "--supersteps", "4", "--vertex-memory-budget", "0.004",
+        "--num-intervals", "4",
+        "--store", str(tmp_path / "clistore")])
+    assert sum(h.vstate_faults for h in res.history) >= 0
+    assert any(h.vstate_dirty_intervals > 0 for h in res.history)
