@@ -4,6 +4,8 @@
 #
 # Sections:
 #   bench_graph    — paper Figs 5/7/8/9/10/11, Tables III/V + scheduler
+#   bench_cluster  — multi-process cluster runtime: comm-mode wire bytes
+#                    sweep + N-server scaling (JSON artifact)
 #   bench_kernels  — Pallas kernel + GAB superstep throughput
 #   bench_train    — LM train-step throughput (CPU, reduced configs)
 import argparse
@@ -21,11 +23,13 @@ def main() -> None:
                          "not the numbers)")
     args = ap.parse_args()
 
-    from benchmarks import bench_graph, bench_kernels, bench_train, common
+    from benchmarks import (bench_cluster, bench_graph, bench_kernels,
+                            bench_train, common)
 
     common.SMOKE = args.smoke
 
-    fns = bench_graph.ALL + bench_kernels.ALL + bench_train.ALL
+    fns = (bench_graph.ALL + bench_cluster.ALL + bench_kernels.ALL
+           + bench_train.ALL)
     if args.only:
         keys = args.only.split(",")
         fns = [f for f in fns if any(k in f.__name__ for k in keys)]

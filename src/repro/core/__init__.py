@@ -1,3 +1,9 @@
+"""GraphH core: partitioning, GAB model, caches, comm, engines.
+
+Submodules are imported explicitly by users (no eager imports here, to
+keep ``import repro.core`` cheap and cycle-free) — see the module map in
+README.md and the stage-by-stage walkthrough in docs/ARCHITECTURE.md.
+"""
 # GraphH core: the paper's primary contribution in JAX.
 # - tiles/partition: two-stage graph partitioning (paper §III-B)
 # - gab/apps:        GAB computation model + vertex programs (§III-C)

@@ -36,6 +36,7 @@ class PageRank(VertexProgram):
     update_tol: float = 1e-9
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V] = 1.0 (float32) + inv_out_degree [V] src aux."""
         inv = np.zeros(num_vertices, dtype=np.float32)
         nz = out_degree > 0
         inv[nz] = 1.0 / out_degree[nz]
@@ -46,9 +47,11 @@ class PageRank(VertexProgram):
 
     def gather(self, src_value, edge_val, aux):
         # edge_val is 1.0 for real edges and 0.0 for padding -> padding inert.
+        """Per-edge message [E]: src rank / out-degree (padding inert: edge_val == 0)."""
         return src_value * aux["inv_out_degree"] * edge_val
 
     def apply(self, old_value, accum, aux):
+        """Damped update over [R] rows: (1 - d) + d * accum."""
         return (1.0 - self.damping) + self.damping * accum
 
 
@@ -62,6 +65,7 @@ class SSSP(VertexProgram):
     dst_aux: tuple[str, ...] = ()
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V] = +inf except 0.0 at ``source`` (float32)."""
         v = np.full(num_vertices, np.inf, dtype=np.float32)
         v[self.source] = 0.0
         return {"value": v}
@@ -69,9 +73,11 @@ class SSSP(VertexProgram):
     def gather(self, src_value, edge_val, aux):
         # Padding has edge_val == 0 but routes to the sink row anyway; use a
         # plain min-plus message.  inf + w == inf keeps unreached sources inert.
+        """Min-plus message [E]: src distance + edge weight (inf stays inert)."""
         return src_value + edge_val
 
     def apply(self, old_value, accum, aux):
+        """Relaxation over [R] rows: min(old distance, best incoming)."""
         return jnp.minimum(old_value, accum)
 
 
@@ -83,13 +89,16 @@ class WCC(VertexProgram):
     combine: str = "min"
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V] = own vertex id as float32 label."""
         return {"value": np.arange(num_vertices, dtype=np.float32)}
 
     def gather(self, src_value, edge_val, aux):
         # Padded edges go to the sink row; forward src label as-is.
+        """Label message [E]: forward the src label unchanged."""
         return src_value
 
     def apply(self, old_value, accum, aux):
+        """Label update over [R] rows: min(old label, smallest incoming)."""
         return jnp.minimum(old_value, accum)
 
 
@@ -101,14 +110,17 @@ class BFS(VertexProgram):
     combine: str = "min"
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V] = +inf hops except 0.0 at ``source``."""
         v = np.full(num_vertices, np.inf, dtype=np.float32)
         v[self.source] = 0.0
         return {"value": v}
 
     def gather(self, src_value, edge_val, aux):
+        """Hop message [E]: src hop count + 1."""
         return src_value + 1.0
 
     def apply(self, old_value, accum, aux):
+        """Hop update over [R] rows: min(old, best incoming)."""
         return jnp.minimum(old_value, accum)
 
 
@@ -119,12 +131,15 @@ class InDegree(VertexProgram):
     combine: str = "sum"
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V] = 0.0 counts."""
         return {"value": np.zeros(num_vertices, dtype=np.float32)}
 
     def gather(self, src_value, edge_val, aux):
+        """Count message [E]: 1.0 per real edge, 0.0 for padding."""
         return edge_val * 0.0 + jnp.where(edge_val > 0, 1.0, 0.0)
 
     def apply(self, old_value, accum, aux):
+        """Replace with the summed count over [R] rows."""
         return accum
 
 
@@ -151,9 +166,12 @@ class PersonalizedPageRank(VertexProgram):
 
     @property
     def num_queries(self) -> int:
+        """Q = number of seed vertices (one query column per seed)."""
         return len(self.seeds)
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V, Q] = seed one-hot mass; inv_out_degree [V]
+        (shared) + seed_mass [V, Q] (per-query teleport vector)."""
         q = len(self.seeds)
         inv = np.zeros(num_vertices, dtype=np.float32)
         nz = out_degree > 0
@@ -169,9 +187,12 @@ class PersonalizedPageRank(VertexProgram):
     def gather(self, src_value, edge_val, aux):
         # src_value [E, Q]; shared per-edge factor broadcast over the query
         # axis (edge_val is 1.0 real / 0.0 padding -> padding inert)
+        """Per-edge message [E, Q]: src mass scaled by the shared 1/out-degree
+        factor broadcast over the query axis."""
         return src_value * (aux["inv_out_degree"] * edge_val)[:, None]
 
     def apply(self, old_value, accum, aux):
+        """Damped update over [R, Q]: (1 - d) * seed_mass + d * accum."""
         return (1.0 - self.damping) * aux["seed_mass"] + self.damping * accum
 
 
@@ -184,18 +205,22 @@ class MultiSourceBFS(VertexProgram):
 
     @property
     def num_queries(self) -> int:
+        """Q = number of BFS sources (one query column per source)."""
         return len(self.sources)
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V, Q] = +inf hops except 0.0 at each source."""
         q = len(self.sources)
         v = np.full((num_vertices, q), np.inf, dtype=np.float32)
         v[np.asarray(self.sources, dtype=np.int64), np.arange(q)] = 0.0
         return {"value": v}
 
     def gather(self, src_value, edge_val, aux):
+        """Hop message [E, Q]: src hop count + 1, per column."""
         return src_value + 1.0
 
     def apply(self, old_value, accum, aux):
+        """Hop update over [R, Q]: min(old, best incoming) per column."""
         return jnp.minimum(old_value, accum)
 
 
@@ -209,9 +234,11 @@ class LandmarkDistances(VertexProgram):
 
     @property
     def num_queries(self) -> int:
+        """Q = number of landmarks (one query column per landmark)."""
         return len(self.landmarks)
 
     def init(self, num_vertices, out_degree, in_degree, **kw):
+        """Initial state: value [V, Q] = +inf except 0.0 at each landmark."""
         q = len(self.landmarks)
         v = np.full((num_vertices, q), np.inf, dtype=np.float32)
         v[np.asarray(self.landmarks, dtype=np.int64), np.arange(q)] = 0.0
@@ -219,9 +246,11 @@ class LandmarkDistances(VertexProgram):
 
     def gather(self, src_value, edge_val, aux):
         # min-plus message per column; inf + w == inf keeps unreached inert
+        """Min-plus message [E, Q]: src distance + edge weight per column."""
         return src_value + edge_val[:, None]
 
     def apply(self, old_value, accum, aux):
+        """Relaxation over [R, Q]: min(old, best incoming) per column."""
         return jnp.minimum(old_value, accum)
 
 

@@ -31,6 +31,8 @@ from repro.core.gab import VertexProgram
 
 @dataclasses.dataclass
 class BaselineStats:
+    """Per-superstep accounting of one baseline engine (bytes are modelled
+    network/disk traffic, not measured wire bytes)."""
     superstep: int
     seconds: float
     network_bytes: int
@@ -41,6 +43,7 @@ class BaselineStats:
 
 @dataclasses.dataclass
 class BaselineResult:
+    """Final values + per-superstep history of one baseline run."""
     name: str
     values: np.ndarray
     history: list[BaselineStats]
@@ -48,6 +51,8 @@ class BaselineResult:
     def mean_superstep_seconds(self, skip_first: bool = True) -> float:
         # single-superstep runs fall back to the full history instead of
         # averaging an empty slice (same guard as engine.RunResult)
+        """Steady-state mean seconds per superstep (warm-up dropped unless
+        that would leave nothing to average)."""
         hs = self.history[1:] if skip_first else self.history
         hs = hs or self.history
         return float(np.mean([h.seconds for h in hs])) if hs else 0.0
@@ -133,6 +138,8 @@ class PregelStyle(_Base):
         self.dst_owner = self.dst % self.ns
 
     def superstep(self, prog, values, aux, combine):
+        """One superstep: per-server gather with sender-side combining; network
+        bytes = combined messages crossing server boundaries."""
         net = 0
         accum = np.full(self.nv, prog.identity)
         cmb = combine
@@ -174,6 +181,8 @@ class GASStyle(_Base):
         self.M = total / max(self.nv, 1)
 
     def superstep(self, prog, values, aux, combine):
+        """One superstep: per-server partial aggregation (GAS mirror-style);
+        network bytes = per-(server, dst) partials shipped to masters."""
         net = 0
         accum = np.full(self.nv, prog.identity)
         for s in range(self.ns):
@@ -214,6 +223,8 @@ class GraphDStyle(PregelStyle):
             self.edge_files.append(p)
 
     def superstep(self, prog, values, aux, combine):
+        """One superstep: edges streamed from disk each pass (no edge cache) —
+        disk_read_bytes models the per-superstep re-read the paper criticizes."""
         net = dr = dw = 0
         accum = np.full(self.nv, prog.identity)
         for s in range(self.ns):
@@ -266,6 +277,8 @@ class ChaosStyle(_Base):
                 os.path.join(self.dir, f"p{p}_vals.bin"))
 
     def superstep(self, prog, values, aux, combine):
+        """One superstep: scatter messages spilled to disk partitions, then a
+        gather pass re-reads them (Chaos-style 2-phase out-of-core)."""
         net = dr = dw = 0
         # scatter phase: stream edges, write messages into target partitions
         msg_bufs = [[] for _ in range(self.np_)]

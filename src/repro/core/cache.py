@@ -53,6 +53,7 @@ POLICIES = ("lru", "tiered", "cost-aware")
 
 
 def tier_name(mode: int) -> str:
+    """Human-readable tier label for a compression mode (1/2/4 -> hot/warm/cold)."""
     return TIER_NAMES.get(mode, f"mode{mode}")
 
 
@@ -69,6 +70,8 @@ def auto_select_mode(
 
 
 class CacheStats:
+    """Cumulative cache counters (seconds are wall-clock busy time; bytes
+    are compressed blob sizes).  The engine reports per-superstep deltas."""
     def __init__(self) -> None:
         self.hits = 0
         self.misses = 0
@@ -83,10 +86,12 @@ class CacheStats:
 
     @property
     def hit_ratio(self) -> float:
+        """hits / (hits + misses); 0.0 before any lookup."""
         tot = self.hits + self.misses
         return self.hits / tot if tot else 0.0
 
     def as_dict(self) -> dict:
+        """Plain-dict snapshot (for logs/benchmark JSON)."""
         return dict(
             hits=self.hits, misses=self.misses, evictions=self.evictions,
             promotions=self.promotions, demotions=self.demotions,
@@ -157,6 +162,7 @@ class EdgeCache:
     # -- public -------------------------------------------------------------
     @property
     def tiered(self) -> bool:
+        """True for the per-tile hot/warm/cold policies ("tiered"/"cost-aware")."""
         return self.policy != "lru"
 
     def admission_mode(self) -> int:
@@ -165,6 +171,8 @@ class EdgeCache:
         return TIER_LADDER[1] if self.tiered else self.mode
 
     def get(self, tile_id: int) -> Tile:
+        """Return the deserialized Tile, reading + admitting from the TileStore
+        on a miss.  Thread-safe; codec work runs outside the lock."""
         tile = self.get_if_resident(tile_id)
         if tile is not None:
             return tile
@@ -207,14 +215,17 @@ class EdgeCache:
         return formats.deserialize_tile(raw)
 
     def resident_bytes(self) -> int:
+        """Current resident compressed bytes (<= capacity_bytes)."""
         with self._lock:
             return self._bytes
 
     def contains(self, tile_id: int) -> bool:
+        """Residency test without touching stats or LRU order."""
         with self._lock:
             return tile_id in self._entries
 
     def clear(self) -> None:
+        """Drop every entry (stats are kept; counters are cumulative)."""
         with self._lock:
             self._entries.clear()
             self._bytes = 0
@@ -337,6 +348,7 @@ class EdgeCache:
         self._bg_thread.start()
 
     def stop_background(self) -> None:
+        """Stop the background re-tier thread started by ``start_background``."""
         if self._bg_thread is None:
             return
         self._bg_stop.set()
@@ -348,6 +360,8 @@ class EdgeCache:
     def auto(store: TileStore, capacity_bytes: int, working_set_bytes: int,
              gammas: dict[int, float] = DEFAULT_GAMMAS,
              policy: str = "lru") -> "EdgeCache":
+        """Construct with the paper's auto-selected whole-cache mode for the
+        given working set (see ``auto_select_mode``)."""
         mode = auto_select_mode(working_set_bytes, capacity_bytes, gammas)
         return EdgeCache(store, capacity_bytes, mode, policy=policy)
 

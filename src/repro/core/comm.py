@@ -7,9 +7,14 @@ payloads (snappy by default).
 
 Two layers:
 
-  * host accounting (``plan_broadcast``/``measure_payload``) — used by the
-    out-of-core engine to measure real payload bytes per superstep,
-    including real zstd compression of the actual buffers (paper Fig. 9).
+  * host accounting (``plan_broadcast``/``plan_broadcast_intervals``) —
+    used by the out-of-core engine to measure real payload bytes per
+    superstep, including real zstd compression of the actual buffers
+    (paper Fig. 9).  The payload builders/decoders here
+    (``dense_payload``/``sparse_payload``/``multi_query_payload`` and
+    their ``decode_*`` inverses) are also the wire formats the cluster
+    transport ships between real server processes (core/transport.py,
+    DESIGN.md §11).
   * device collectives (``hybrid_broadcast``) — shard_map building block:
     dense = psum of the additive delta; sparse = fixed-capacity
     all_gather of compacted (idx, delta) pairs; ``lax.cond`` picks at run
@@ -58,6 +63,8 @@ def resolve_compressor(name: str) -> tuple[int, str]:
 
 @dataclasses.dataclass
 class BroadcastRecord:
+    """Measured size of one server's per-superstep broadcast payload
+    (bytes pre/post compression + the mode the planner chose)."""
     mode: str                 # "dense" | "sparse" | "mixed" (2-D payloads)
     raw_bytes: int            # pre-compression payload
     wire_bytes: int           # post-compression payload
@@ -72,13 +79,44 @@ class BroadcastRecord:
 
 
 def dense_payload(values: np.ndarray, updated: np.ndarray) -> bytes:
+    """Dense wire payload: ``ceil(V/8)``-byte update bitvector followed by
+    the full ``[V]`` value array (raw little-endian bytes).  Inverse:
+    :func:`decode_dense_payload`."""
     bitvec = np.packbits(updated.astype(np.uint8))
     return bitvec.tobytes() + values.tobytes()
 
 
 def sparse_payload(values: np.ndarray, updated: np.ndarray) -> bytes:
+    """Sparse wire payload: ``[U]`` uint32 updated vertex ids followed by
+    their ``[U]`` values (raw bytes).  Inverse:
+    :func:`decode_sparse_payload`."""
     idx = np.nonzero(updated)[0].astype(np.uint32)
     return idx.tobytes() + values[idx].tobytes()
+
+
+def decode_dense_payload(buf: bytes, nv: int,
+                         dtype) -> tuple[np.ndarray, np.ndarray]:
+    """Invert :func:`dense_payload`: returns (updated vertex ids ``[U]``,
+    their values ``[U]``) — value bytes round-trip exactly (no float
+    re-encoding), which is what keeps cluster results bit-identical."""
+    dtype = np.dtype(dtype)
+    nb = (nv + 7) // 8
+    bits = np.unpackbits(np.frombuffer(buf, np.uint8, count=nb))[:nv]
+    vals = np.frombuffer(buf, dtype, count=nv, offset=nb)
+    idx = np.nonzero(bits)[0].astype(np.int64)
+    return idx, vals[idx].copy()
+
+
+def decode_sparse_payload(buf: bytes, dtype) -> tuple[np.ndarray, np.ndarray]:
+    """Invert :func:`sparse_payload`: returns (updated vertex ids ``[U]``,
+    values ``[U]``).  The entry count is derived from the byte length
+    (each entry is 4 index bytes + one value)."""
+    dtype = np.dtype(dtype)
+    per = 4 + dtype.itemsize
+    count = len(buf) // per
+    idx = np.frombuffer(buf, np.uint32, count=count).astype(np.int64)
+    vals = np.frombuffer(buf, dtype, count=count, offset=4 * count)
+    return idx, vals.copy()
 
 
 def multi_query_payload(
@@ -115,6 +153,55 @@ def multi_query_payload(
         vals = np.concatenate(sp_vals, axis=0)
         parts.append(pairs.tobytes() + vals.tobytes())
     return b"".join(parts), tuple(modes)
+
+
+def decode_multi_query_payload(
+    buf: bytes, nv: int, qmodes: tuple, dtype,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Invert :func:`multi_query_payload` given the per-column mode tuple
+    (carried in the transport frame header).
+
+    Returns (updated vertex ids ``[U]``, values ``[U, Q]``, per-query
+    updated mask ``[U, Q]``) — the same sparse-update triple the engine's
+    barrier apply consumes.  Cells where the mask is False hold zeros; the
+    engine only applies masked cells, so this is lossless."""
+    dtype = np.dtype(dtype)
+    nq = len(qmodes)
+    off = 0
+    cell_v: list[np.ndarray] = []
+    cell_q: list[np.ndarray] = []
+    cell_val: list[np.ndarray] = []
+    for q, m in enumerate(qmodes):
+        if m != "dense":
+            continue
+        nb = (nv + 7) // 8
+        col_idx, col_vals = decode_dense_payload(
+            buf[off: off + nb + nv * dtype.itemsize], nv, dtype)
+        off += nb + nv * dtype.itemsize
+        cell_v.append(col_idx)
+        cell_q.append(np.full(col_idx.shape, q, dtype=np.int64))
+        cell_val.append(col_vals)
+    if any(m == "sparse" for m in qmodes):
+        rest = buf[off:]
+        per = 8 + dtype.itemsize
+        count = len(rest) // per
+        pairs = np.frombuffer(rest, np.uint32, count=2 * count).reshape(-1, 2)
+        vals = np.frombuffer(rest, dtype, count=count, offset=8 * count)
+        cell_v.append(pairs[:, 0].astype(np.int64))
+        cell_q.append(pairs[:, 1].astype(np.int64))
+        cell_val.append(vals.copy())
+    if not cell_v:
+        return (np.zeros(0, np.int64), np.zeros((0, nq), dtype),
+                np.zeros((0, nq), dtype=bool))
+    v = np.concatenate(cell_v)
+    qcol = np.concatenate(cell_q)
+    cval = np.concatenate(cell_val)
+    idx, inv = np.unique(v, return_inverse=True)
+    vals_out = np.zeros((len(idx), nq), dtype)
+    mask_out = np.zeros((len(idx), nq), dtype=bool)
+    vals_out[inv, qcol] = cval
+    mask_out[inv, qcol] = True
+    return idx, vals_out, mask_out
 
 
 def plan_broadcast(

@@ -1,4 +1,5 @@
-"""Distributed GAB on a device mesh via shard_map.
+"""Distributed GAB: the device-mesh path (shard_map) and the
+multi-process cluster exchange protocol (DESIGN.md §11).
 
 Mapping of the paper's cluster onto a TPU mesh (DESIGN.md §3):
 
@@ -12,10 +13,22 @@ Mapping of the paper's cluster onto a TPU mesh (DESIGN.md §3):
 
 The same superstep function serves (a) real execution on however many local
 devices exist and (b) the production-mesh dry-run via .lower()/.compile().
+
+The second half of this module is the *process* cluster: ``ClusterExchange``
+implements the per-superstep BSP barrier between N real server processes —
+encode this server's updates into a ``core.transport`` frame, broadcast it
+to the N-1 peers, merge the peers' decoded frames in rank order, and (with
+stealing enabled) rebalance tile ownership from the measured per-server
+compute times.  The out-of-core engine calls it at its barrier when built
+with ``server_rank``/``exchange`` (engine.py); ``launch.cluster`` owns the
+process spawning.
 """
 from __future__ import annotations
 
 import dataclasses
+import struct
+import threading
+import time
 from functools import partial
 from typing import Optional
 
@@ -26,13 +39,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map_unchecked
 
-from repro.core import comm
+from repro.core import comm, transport as transport_mod
 from repro.core.gab import VertexProgram, stacked_tiles_step
 from repro.core.tiles import Tile, stack_tiles
 
 
 @dataclasses.dataclass
 class DistConfig:
+    """Knobs for the device-mesh (shard_map) distributed engine."""
     comm_mode: str = "hybrid"       # dense | sparse | hybrid
     threshold: float = comm.DENSITY_THRESHOLD
     seg_impl: str = "jnp"
@@ -41,6 +55,7 @@ class DistConfig:
 
 
 def pad_tile_count(num_tiles: int, num_shards: int) -> int:
+    """Round ``num_tiles`` up to a multiple of ``num_shards``."""
     return ((num_tiles + num_shards - 1) // num_shards) * num_shards
 
 
@@ -137,6 +152,8 @@ class DistributedGABEngine:
         self.num_shards = int(np.prod([mesh.shape[a] for a in tile_axes]))
 
     def shard_tiles(self, tiles: list[Tile], row_cap: int) -> dict:
+        """Stack + pad tiles and device_put the arrays sharded along the tile
+        axes; values/aux stay replicated."""
         stk = stack_and_pad(tiles, row_cap, self.num_shards)
         sharding = NamedSharding(
             self.mesh,
@@ -152,6 +169,8 @@ class DistributedGABEngine:
     def run(self, prog: VertexProgram, tiles: list[Tile], num_vertices: int,
             out_degree: np.ndarray, in_degree: np.ndarray,
             row_cap: int, max_supersteps: Optional[int] = None):
+        """Run supersteps to convergence (global update density == 0) or the
+        cap; returns (final values [V(, Q)], per-superstep history)."""
         state = prog.init(num_vertices, out_degree.astype(np.float64),
                           in_degree.astype(np.float64))
         rep = NamedSharding(self.mesh, P())
@@ -171,3 +190,196 @@ class DistributedGABEngine:
             if d == 0.0:
                 break
         return np.asarray(values), history
+
+
+# ---------------------------------------------------------------------------
+# Multi-process cluster exchange (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+# Fixed-width exchange envelope prepended to every frame: (sequence number,
+# sender's measured compute seconds, sender's updated-cell count).  Control
+# data lives here — NOT in the frame — so frame bytes are a pure function
+# of the update set and wire measurements are reproducible.
+_ENVELOPE = struct.Struct("<IdQ")
+
+
+@dataclasses.dataclass
+class ExchangeResult:
+    """Merged cluster-wide update set for one superstep (what the engine's
+    barrier apply consumes), plus measured wire accounting and — when
+    stealing moved tiles — the next superstep's full tile assignment."""
+
+    idx: np.ndarray                 # [U] updated vertex ids, all servers
+    vals: np.ndarray                # [U] or [U, Q] update values
+    mask: Optional[np.ndarray]      # [U, Q] per-query mask; None for 1-D
+    raw_bytes: int                  # cluster total, pre-compression
+    wire_bytes: int                 # cluster total, actual frame bytes
+    assignment: Optional[list] = None   # new per-server tile lists, or None
+    peer_seconds: dict = dataclasses.field(default_factory=dict)
+
+
+class ClusterExchange:
+    """Per-superstep BSP exchange between N server processes.
+
+    Each server encodes its update set into one ``core.transport`` frame
+    (hybrid dense/sparse chosen per server per superstep from the measured
+    sizes), ships it to all peers, and blocks until every peer's frame for
+    the same sequence number has arrived.  A background receiver thread
+    drains and *decodes* inbound frames as they arrive, so a fast peer's
+    broadcast overlaps this server's remaining tile compute — the
+    cluster-level leg of the paper's I/O–compute–comm overlap.
+
+    The merge is deterministic (rank order) and every server derives the
+    same merged update set, so convergence checks and multi-query column
+    retirement in the engine come out identical on every server with no
+    extra control round — the exchange IS the global barrier.
+
+    Stealing: with ``steal=True`` every frame carries its server's
+    measured compute seconds; each server runs the same
+    ``runtime.scheduler.rebalance_assignment`` on the same inputs, so all
+    servers agree on the next superstep's tile ownership without a
+    coordinator (the thief reads stolen tiles from the shared store, the
+    victim's cache keeps its copies).
+
+    Thread-safety: ``exchange()`` must be called by one thread (the engine
+    loop); the receiver thread only touches the inbox under its lock.
+    """
+
+    def __init__(self, transport, *, comm_mode: str = "hybrid",
+                 compressor: str = "zstd-1",
+                 threshold: float = comm.DENSITY_THRESHOLD,
+                 assignment: Optional[list] = None,
+                 edges_per_tile: Optional[np.ndarray] = None,
+                 steal: bool = False, straggler_factor: float = 1.5,
+                 timeout: float = 180.0):
+        self.transport = transport
+        self.rank, self.n = transport.rank, transport.n
+        self.comm_mode = comm_mode
+        self.compressor = compressor
+        self.threshold = threshold
+        self.assignment = ([list(a) for a in assignment]
+                           if assignment is not None else None)
+        self.edges_per_tile = edges_per_tile
+        self.steal = steal and self.n > 1
+        self.straggler_factor = straggler_factor
+        self.timeout = timeout
+        self.steal_moves = 0
+        #: bytes this server actually put on the wire / their raw size
+        self.sent_wire_bytes = 0
+        self.sent_raw_bytes = 0
+        self._seq = 0
+        self._inbox: dict[int, dict[int, transport_mod.DecodedFrame]] = {}
+        self._cond = threading.Condition()
+        self._stop = threading.Event()
+        self._rx_error: Optional[BaseException] = None
+        self._rx: Optional[threading.Thread] = None
+        if self.n > 1:
+            self._rx = threading.Thread(target=self._recv_loop, daemon=True,
+                                        name=f"graphh-exchange-{self.rank}")
+            self._rx.start()
+
+    # -- receive side -----------------------------------------------------
+    def _recv_loop(self) -> None:
+        while not self._stop.is_set():
+            item = self.transport.recv(timeout=0.1)
+            if item is None:
+                continue
+            src, payload = item
+            try:
+                seq, secs, _updates = _ENVELOPE.unpack_from(payload, 0)
+                dec = transport_mod.decode_frame(payload[_ENVELOPE.size:])
+            except BaseException as exc:  # surfaced on the exchange caller
+                with self._cond:
+                    self._rx_error = exc
+                    self._cond.notify_all()
+                return
+            with self._cond:
+                self._inbox.setdefault(seq, {})[src] = (dec, secs)
+                self._cond.notify_all()
+
+    # -- exchange ---------------------------------------------------------
+    def exchange(self, *, idx: np.ndarray, vals: np.ndarray,
+                 mask: Optional[np.ndarray], nv: int,
+                 splitter: Optional[np.ndarray] = None,
+                 compute_seconds: float = 0.0) -> ExchangeResult:
+        """Broadcast this server's updates, wait for all peers, and return
+        the rank-ordered merged update set (see class docstring)."""
+        seq = self._seq
+        self._seq += 1
+        updates = int(mask.sum()) if mask is not None else len(idx)
+        frame, header = transport_mod.encode_frame(
+            idx, vals, mask, nv, splitter=splitter,
+            threshold=self.threshold, compressor=self.compressor,
+            mode=self.comm_mode)
+        raw_b = header["raw_bytes"]
+        wire_b = header["wire_bytes"]
+        if self.n > 1:
+            self.sent_raw_bytes += raw_b
+            self.sent_wire_bytes += wire_b
+        peers: dict[int, tuple] = {}
+        if self.n > 1:
+            env = _ENVELOPE.pack(seq, compute_seconds, updates) + frame
+            for dst in range(self.n):
+                if dst != self.rank:
+                    self.transport.send(dst, env, timeout=self.timeout)
+            peers = self._wait_peers(seq)
+            for dec, _secs in peers.values():
+                raw_b += dec.header["raw_bytes"]
+                wire_b += dec.header["wire_bytes"]
+
+        parts = []
+        secs = {}
+        for r in range(self.n):
+            if r == self.rank:
+                parts.append((idx, vals, mask))
+                secs[r] = compute_seconds
+            elif r in peers:
+                dec, peer_secs = peers[r]
+                parts.append((dec.idx, dec.vals, dec.mask))
+                secs[r] = peer_secs
+        m_idx = np.concatenate([p[0] for p in parts])
+        m_val = np.concatenate([p[1] for p in parts])
+        m_msk = (np.concatenate([p[2] for p in parts])
+                 if mask is not None else None)
+
+        new_assignment = None
+        if self.steal and self.assignment is not None:
+            from repro.runtime.scheduler import rebalance_assignment
+
+            moved = rebalance_assignment(
+                self.assignment, self.edges_per_tile,
+                [secs[r] for r in range(self.n)],
+                straggler_factor=self.straggler_factor)
+            if moved is not None:
+                self.assignment, nmoves = moved
+                self.steal_moves += nmoves
+                new_assignment = [list(a) for a in self.assignment]
+        return ExchangeResult(idx=m_idx, vals=m_val, mask=m_msk,
+                              raw_bytes=raw_b, wire_bytes=wire_b,
+                              assignment=new_assignment, peer_seconds=secs)
+
+    def _wait_peers(self, seq: int) -> dict:
+        deadline = time.monotonic() + self.timeout
+        with self._cond:
+            while True:
+                if self._rx_error is not None:
+                    raise RuntimeError(
+                        f"server {self.rank}: receiver thread failed"
+                    ) from self._rx_error
+                got = self._inbox.get(seq, {})
+                if len(got) == self.n - 1:
+                    return self._inbox.pop(seq)
+                if not self._cond.wait(timeout=0.1):
+                    if time.monotonic() > deadline:
+                        missing = [r for r in range(self.n)
+                                   if r != self.rank and r not in got]
+                        raise TimeoutError(
+                            f"server {self.rank} superstep seq {seq}: no "
+                            f"frame from peers {missing} within "
+                            f"{self.timeout}s")
+
+    def close(self) -> None:
+        """Stop the receiver thread (the transport is closed by its owner)."""
+        self._stop.set()
+        if self._rx is not None:
+            self._rx.join(timeout=2.0)

@@ -34,6 +34,9 @@ from repro.graphio.formats import TileStore
 
 @dataclasses.dataclass
 class EngineConfig:
+    """All engine knobs (one dataclass so cluster server processes can ship
+    it through multiprocessing spawn).  Field groups are commented below;
+    see docs/OPERATIONS.md for tuning guidance."""
     num_servers: int = 1
     num_workers: int = 1                    # paper's T (accounting only here)
     cache_capacity_bytes: int = 1 << 30     # per server
@@ -94,10 +97,20 @@ class EngineConfig:
     # mode — superstep 0 falls back to cache-hit-first ordering while
     # footprints are still unknown
     interval_aware_order: bool = True
+    # --- multi-process cluster runtime (DESIGN.md §11) ---
+    # when set, this engine instance is ONE server of an N-server cluster:
+    # it executes only rank ``server_rank`` of the stage-2 assignment and
+    # merges the other servers' per-superstep updates through the
+    # ClusterExchange passed to the constructor.  None = the classic
+    # single-process engine emulating all N servers itself.
+    server_rank: Optional[int] = None
 
 
 @dataclasses.dataclass
 class SuperstepStats:
+    """Per-superstep measurements (bytes are real payload/compressed sizes,
+    seconds wall-clock).  Cluster runs report cluster-total wire bytes,
+    rank-local cache/io counters."""
     superstep: int
     seconds: float
     load_seconds: float
@@ -141,6 +154,7 @@ class SuperstepStats:
 
     @property
     def stall_fraction(self) -> float:
+        """Fraction of this superstep's wall time blocked on tile I/O."""
         return self.stall_seconds / self.seconds if self.seconds > 0 else 0.0
 
     @property
@@ -152,6 +166,8 @@ class SuperstepStats:
 
 @dataclasses.dataclass
 class RunResult:
+    """Final vertex values [V(, Q)] + aux arrays + per-superstep history of
+    one engine run."""
     values: np.ndarray
     aux: dict
     history: list[SuperstepStats]
@@ -162,6 +178,7 @@ class RunResult:
     per_query_supersteps: Optional[np.ndarray] = None
 
     def total_seconds(self) -> float:
+        """Wall-clock sum over all supersteps."""
         return sum(h.seconds for h in self.history)
 
     def _steady_state(self, skip_first: bool) -> list[SuperstepStats]:
@@ -173,6 +190,7 @@ class RunResult:
         return hs if hs else self.history
 
     def mean_superstep_seconds(self, skip_first: bool = True) -> float:
+        """Steady-state mean seconds per superstep (see ``_steady_state``)."""
         hs = self._steady_state(skip_first)
         return float(np.mean([h.seconds for h in hs])) if hs else 0.0
 
@@ -184,9 +202,22 @@ class RunResult:
 
 
 class OutOfCoreEngine:
-    def __init__(self, store: TileStore, config: EngineConfig = EngineConfig()):
+    """The out-of-core superstep engine (see module docstring).
+
+    One instance either emulates all ``cfg.num_servers`` servers in-process
+    (the classic mode) or — with ``cfg.server_rank`` set and a
+    ``distributed.ClusterExchange`` passed as ``exchange`` — acts as one
+    real server of a multi-process cluster, merging peer updates at the
+    BSP barrier through the exchange (DESIGN.md §11).  Results are
+    bit-identical either way: tiles own disjoint dst rows, the per-tile
+    math is the same jitted gather/apply, and update value bytes
+    round-trip the wire exactly."""
+
+    def __init__(self, store: TileStore, config: EngineConfig = EngineConfig(),
+                 exchange=None):
         self.store = store
         self.cfg = config
+        self.exchange = exchange
         self.plan = store.load_plan()
         self.in_degree, self.out_degree = store.load_degrees()
         P, N = self.plan.num_tiles, config.num_servers
@@ -194,8 +225,21 @@ class OutOfCoreEngine:
             self.assignment = assign_tiles_balanced(self.plan.edges_per_tile, N)
         else:
             self.assignment = assign_tiles(P, N)
+        # cluster mode: this process executes exactly one server's share
+        if config.server_rank is not None:
+            if not 0 <= config.server_rank < N:
+                raise ValueError(
+                    f"server_rank {config.server_rank} outside 0..{N - 1}")
+            self.exec_servers = [config.server_rank]
+        else:
+            self.exec_servers = list(range(N))
+        if exchange is not None and len(self.exec_servers) != 1:
+            raise ValueError(
+                "a ClusterExchange needs exactly one executed server per "
+                "process — set cfg.server_rank (or num_servers=1)")
 
-        # Per-server edge caches (paper: idle memory on each server).
+        # Per-server edge caches (paper: idle memory on each server);
+        # only the servers this process executes get one.
         if config.cache_mode == "auto":
             # Working set per server ~ share of total on-disk tile bytes.
             total = sum(store.tile_disk_bytes(t) for t in range(P))
@@ -203,16 +247,16 @@ class OutOfCoreEngine:
         else:
             mode = int(config.cache_mode)
         self.cache_mode = mode
-        self.caches = [
-            EdgeCache(store, config.cache_capacity_bytes, mode,
-                      policy=config.cache_policy,
-                      promote_hits=config.cache_promote_hits)
-            for _ in range(N)
-        ]
+        self.caches = {
+            s: EdgeCache(store, config.cache_capacity_bytes, mode,
+                         policy=config.cache_policy,
+                         promote_hits=config.cache_promote_hits)
+            for s in self.exec_servers
+        }
         self._filters: Optional[list] = None  # built during first superstep
-        self._stacks: Optional[list] = None   # per-server device-resident tiles
+        self._stacks: Optional[dict] = None   # per-server device-resident tiles
         self._stack_fn = None
-        self._streamed: list[list[int]] = [[] for _ in range(N)]
+        self._streamed: dict[int, list[int]] = {s: [] for s in self.exec_servers}
         #: populated when cfg.debug_skip_log: one dict per (superstep, server)
         #: with the active source ids and the run/skipped tile partition
         self.skip_log: list[dict] = []
@@ -252,6 +296,9 @@ class OutOfCoreEngine:
 
     def run(self, prog: VertexProgram,
             max_supersteps: Optional[int] = None) -> RunResult:
+        """Run ``prog`` to convergence (no updated cells cluster-wide) or
+        ``max_supersteps``.  Bit-identical across engine modes, cache
+        policies, pipelining, ooc vertex state, and cluster execution."""
         cfg = self.cfg
         nv = self.plan.num_vertices
         # Re-baseline the cumulative-counter deltas: a second run() on the
@@ -343,7 +390,7 @@ class OutOfCoreEngine:
                     updated_ids, nv, cfg.block_shift
                 )
 
-            for s in range(cfg.num_servers):
+            for s in self.exec_servers:
                 s_idx: list[np.ndarray] = []
                 s_val: list[np.ndarray] = []
                 s_msk: list[np.ndarray] = []
@@ -356,7 +403,7 @@ class OutOfCoreEngine:
                         else:
                             self._build_stacks(nv)
                         if building_filters:
-                            for st in range(cfg.num_servers):
+                            for st in self.exec_servers:
                                 n_res = len(self.assignment[st]) - len(self._streamed[st])
                                 for tid in self.assignment[st][:n_res]:
                                     if filters[tid] is None:
@@ -385,7 +432,9 @@ class OutOfCoreEngine:
                     run_list = []
                     for tid in server_tiles:
                         f = self._filters[tid]
-                        hit = (
+                        # a stolen tile may not have a filter yet on this
+                        # server (cluster mode) — run it, never skip blind
+                        hit = f is None or (
                             f.intersects(active_words)
                             if cfg.skip_filter == "bitmap"
                             else f.might_contain_any(updated_ids)
@@ -464,47 +513,69 @@ class OutOfCoreEngine:
                 upd_val_parts.append(sv)
                 if multi_q:
                     upd_msk_parts.append(sm)
-                if cfg.pipeline and sample:
+                if cfg.pipeline and sample and self.exchange is None:
                     # overlap this server's payload compression with the next
                     # server's compute; records collected at the barrier below
+                    # (cluster mode measures from the real transport instead)
                     bcast_futures[s] = self._measure_broadcast(
                         si, sv, sm, nv, qa, vdtype, background=True)
 
-            if building_filters and all(f is not None for f in filters):
+            own_tiles = [t for s in self.exec_servers
+                         for t in self.assignment[s]]
+            if building_filters and all(filters[t] is not None
+                                        for t in own_tiles):
                 self._filters = filters
                 building_filters = False
 
             # --- Broadcast (BSP barrier): measure payloads, apply updates ---
             raw_b = wire_b = 0
-            for s in range(cfg.num_servers):
-                si, sv, sm = per_server_updates[s]
-                if sample:
-                    if s in bcast_futures:
-                        rec = bcast_futures[s].result()
+            if self.exchange is not None:
+                # cluster mode (DESIGN.md §11): ship this server's updates
+                # through the real transport, merge every peer's frame —
+                # the exchange IS the global barrier, and the byte counts
+                # are measured from the frames that actually travelled
+                si, sv, sm = per_server_updates[0]
+                xr = self.exchange.exchange(
+                    idx=si, vals=sv, mask=sm, nv=nv,
+                    splitter=self._iv_splitter if ooc else None,
+                    compute_seconds=comp_s)
+                all_idx, all_val, all_msk = xr.idx, xr.vals, xr.mask
+                raw_b, wire_b = xr.raw_bytes, xr.wire_bytes
+                if xr.assignment is not None:
+                    # cross-server tile stealing: every server derived the
+                    # same new ownership from the same replicated timings
+                    self.assignment = [list(a) for a in xr.assignment]
+            else:
+                for k, s in enumerate(self.exec_servers):
+                    si, sv, sm = per_server_updates[k]
+                    if sample:
+                        if s in bcast_futures:
+                            rec = bcast_futures[s].result()
+                        else:
+                            rec = self._measure_broadcast(si, sv, sm, nv, qa,
+                                                          vdtype)
+                        raw_b += rec.raw_bytes
+                        wire_b += rec.wire_bytes
                     else:
-                        rec = self._measure_broadcast(si, sv, sm, nv, qa,
-                                                      vdtype)
-                    raw_b += rec.raw_bytes
-                    wire_b += rec.wire_bytes
-                else:
-                    pairs = int(sm.sum()) if sm is not None else len(si)
-                    n_eff = nv * qa
-                    est = comm.wire_bytes_estimate(
-                        n_eff, pairs / max(n_eff, 1),
-                        # 2-D sparse payloads pack (vertex, query) u32 pairs
-                        index_bytes=8 if sm is not None else 4)
-                    raw_b += est
-                    wire_b += int(est * self._wire_ratio)
-            if sample and raw_b:
-                self._wire_ratio = wire_b / raw_b
-
-            all_idx = np.concatenate(upd_idx_parts) if upd_idx_parts else np.zeros(0, np.int64)
-            all_val = (np.concatenate(upd_val_parts) if upd_val_parts
-                       else np.zeros((0, qa) if multi_q else (0,), vdtype))
-            all_msk = None
+                        pairs = int(sm.sum()) if sm is not None else len(si)
+                        n_eff = nv * qa
+                        est = comm.wire_bytes_estimate(
+                            n_eff, pairs / max(n_eff, 1),
+                            # 2-D sparse payloads pack (vertex, query) u32 pairs
+                            index_bytes=8 if sm is not None else 4)
+                        raw_b += est
+                        wire_b += int(est * self._wire_ratio)
+                if sample and raw_b:
+                    self._wire_ratio = wire_b / raw_b
+                all_idx = (np.concatenate(upd_idx_parts) if upd_idx_parts
+                           else np.zeros(0, np.int64))
+                all_val = (np.concatenate(upd_val_parts) if upd_val_parts
+                           else np.zeros((0, qa) if multi_q else (0,), vdtype))
+                all_msk = None
+                if multi_q:
+                    all_msk = (np.concatenate(upd_msk_parts) if upd_msk_parts
+                               else np.zeros((0, qa), dtype=bool))
             if multi_q:
-                all_msk = (np.concatenate(upd_msk_parts) if upd_msk_parts
-                           else np.zeros((0, qa), dtype=bool))
                 upd_per_q = all_msk.sum(axis=0)
                 updated_pairs = int(all_msk.sum())
             else:
@@ -546,7 +617,7 @@ class OutOfCoreEngine:
             # Re-tier at the barrier: off the tile hot path, after this
             # superstep's access pattern has updated the per-tile counters.
             if cfg.cache_policy != "lru":
-                for c in self.caches:
+                for c in self.caches.values():
                     c.maintain()
 
             cache_stats = self._agg_cache_stats()
@@ -776,26 +847,29 @@ class OutOfCoreEngine:
     # stacked fast path (engine_mode="stacked"): device-resident tiles
     # ------------------------------------------------------------------
     def _build_stacks(self, nv: int) -> None:
+        """Build the per-server device-resident tile stacks for
+        ``engine_mode="stacked"`` — up to ``device_budget_bytes`` of tiles
+        per server live on device; the rest stream per superstep."""
         from repro.core.tiles import stack_tiles
 
         budget = self.cfg.device_budget_bytes
         per_tile = self.plan.edge_cap * 12  # src+dst+val
-        self._stacks = []
-        for s in range(self.cfg.num_servers):
+        self._stacks = {}
+        for s in self.exec_servers:
             fit = max(1, budget // per_tile)
             resident = self.assignment[s][:fit]
             self._streamed[s] = self.assignment[s][fit:]
             tiles = [self.caches[s].get(t) for t in resident]
             stk = stack_tiles(tiles, self.plan.row_cap)
-            self._stacks.append({
+            self._stacks[s] = {
                 k: jnp.asarray(stk[k])
                 for k in ("src", "dst_local", "val", "row_start", "num_rows")
-            })
+            }
 
     def _build_merged(self, nv: int) -> None:
         """engine_mode="merged" (§Perf It5): per-server fused edge lists."""
-        self._stacks = []
-        for s in range(self.cfg.num_servers):
+        self._stacks = {}
+        for s in self.exec_servers:
             self._streamed[s] = []
             srcs, dsts, vals = [], [], []
             owned = np.zeros(nv + 1, dtype=bool)
@@ -807,12 +881,12 @@ class OutOfCoreEngine:
                 from repro.core.tiles import tile_edge_values
                 vals.append(tile_edge_values(t)[:n])
                 owned[t.meta.row_start: t.meta.row_end] = True
-            self._stacks.append(dict(
+            self._stacks[s] = dict(
                 src=jnp.asarray(np.concatenate(srcs).astype(np.int32)),
                 dst=jnp.asarray(np.concatenate(dsts).astype(np.int32)),
                 val=jnp.asarray(np.concatenate(vals)),
                 owned=jnp.asarray(owned[:nv]),
-            ))
+            )
 
     def _merged_step(self, prog, values_dev, aux_dev, m):
         from repro.core.gab import merged_server_step
@@ -1067,10 +1141,13 @@ class OutOfCoreEngine:
         return order
 
     def _agg_cache_stats(self) -> dict:
-        hits = sum(c.stats.hits for c in self.caches)
-        misses = sum(c.stats.misses for c in self.caches)
+        """Aggregate hit/miss/tier/io counters over the edge caches this
+        process executes (all servers classically; one in cluster mode)."""
+        caches = list(self.caches.values())
+        hits = sum(c.stats.hits for c in caches)
+        misses = sum(c.stats.misses for c in caches)
         tiers: dict[str, dict] = {}
-        for c in self.caches:
+        for c in caches:
             for name, d in c.tier_snapshot().items():
                 agg = tiers.setdefault(name, dict(tiles=0, bytes=0, hits=0))
                 agg["tiles"] += d.get("tiles", 0)
@@ -1078,11 +1155,11 @@ class OutOfCoreEngine:
                 agg["hits"] += d.get("hits", 0)
         return dict(
             hit_ratio=hits / max(hits + misses, 1),
-            disk_bytes_read=sum(c.stats.disk_bytes_read for c in self.caches),
+            disk_bytes_read=sum(c.stats.disk_bytes_read for c in caches),
             io_seconds=sum(c.stats.disk_seconds + c.stats.decompress_seconds
-                           + c.stats.retier_seconds for c in self.caches),
-            promotions=sum(c.stats.promotions for c in self.caches),
-            demotions=sum(c.stats.demotions for c in self.caches),
+                           + c.stats.retier_seconds for c in caches),
+            promotions=sum(c.stats.promotions for c in caches),
+            demotions=sum(c.stats.demotions for c in caches),
             tiers=tiers,
         )
 

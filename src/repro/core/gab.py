@@ -113,18 +113,23 @@ class VertexProgram:
 
     def gather(self, src_value: Array, edge_val: Array,
                aux: dict[str, Array]) -> Array:
+        """Per-edge message: f(src values [E(, Q)], edge values [E], src aux)."""
         raise NotImplementedError
 
     def apply(self, old_value: Array, accum: Array,
               aux: dict[str, Array]) -> Array:
+        """New dst values g(old [R(, Q)], accumulated messages, dst aux)."""
         raise NotImplementedError
 
     # -- derived ----------------------------------------------------------
     @property
     def identity(self) -> float:
+        """Identity element of the combine monoid (0 / +inf / -inf)."""
         return _COMBINE_IDENTITY[self.combine]
 
     def updated_mask(self, old: Array, new: Array) -> Array:
+        """Elementwise "value changed" mask — exact (!=) or |new - old| >
+        update_tol for tolerance-based programs like PageRank."""
         if self.update_tol > 0.0:
             return jnp.abs(new - old) > self.update_tol
         return new != old

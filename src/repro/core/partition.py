@@ -29,15 +29,19 @@ class PartitionPlan:
 
     @property
     def num_tiles(self) -> int:
+        """P = number of tiles (len(splitter) - 1)."""
         return len(self.splitter) - 1
 
     def tile_range(self, t: int) -> tuple[int, int]:
+        """[row_start, row_end) target-vertex range of tile ``t``."""
         return int(self.splitter[t]), int(self.splitter[t + 1])
 
     def tile_of_vertex(self, v: int) -> int:
+        """Owning tile of target vertex ``v`` (binary search on the splitter)."""
         return int(np.searchsorted(self.splitter, v, side="right") - 1)
 
     def to_dict(self) -> dict:
+        """JSON-serializable form (stored in the tile store's meta.json)."""
         return dict(
             num_vertices=self.num_vertices,
             num_edges=self.num_edges,
@@ -49,6 +53,7 @@ class PartitionPlan:
 
     @staticmethod
     def from_dict(d: dict) -> "PartitionPlan":
+        """Inverse of ``to_dict``."""
         return PartitionPlan(
             num_vertices=d["num_vertices"],
             num_edges=d["num_edges"],
@@ -130,9 +135,11 @@ class IntervalPlan:
 
     @property
     def num_intervals(self) -> int:
+        """K = number of source intervals."""
         return len(self.splitter) - 1
 
     def interval_range(self, k: int) -> tuple[int, int]:
+        """[lo, hi) vertex range of interval ``k``."""
         return int(self.splitter[k]), int(self.splitter[k + 1])
 
     def interval_of(self, vertex_ids) -> np.ndarray:
@@ -140,6 +147,7 @@ class IntervalPlan:
         return np.searchsorted(self.splitter, vertex_ids, side="right") - 1
 
     def to_dict(self) -> dict:
+        """JSON-serializable form (stored in the tile store's meta.json)."""
         return dict(
             splitter=self.splitter.tolist(),
             tile_to_interval=self.tile_to_interval.tolist(),
@@ -147,6 +155,7 @@ class IntervalPlan:
 
     @staticmethod
     def from_dict(d: dict) -> "IntervalPlan":
+        """Inverse of ``to_dict``."""
         return IntervalPlan(
             splitter=np.asarray(d["splitter"], dtype=np.int64),
             tile_to_interval=np.asarray(d["tile_to_interval"], dtype=np.int64),
@@ -198,6 +207,30 @@ def assign_tiles_balanced(
         loads[s] += int(edges_per_tile[t])
     for lst in out:
         lst.sort()
+    return out
+
+
+def server_vertex_ranges(
+    splitter: np.ndarray, assignment: list[list[int]]
+) -> list[list[tuple[int, int]]]:
+    """Per-server owned dst-vertex ranges, merged where contiguous.
+
+    Server s owns the union of its tiles' row ranges — the vertices whose
+    new values that server (and only that server) produces each superstep.
+    The cluster runtime (DESIGN.md §11) reports these so an operator can
+    see how stage-2 ownership maps onto the vertex space; tile stealing
+    moves entries between servers but never overlaps them."""
+    out: list[list[tuple[int, int]]] = []
+    for tids in assignment:
+        ranges = sorted((int(splitter[t]), int(splitter[t + 1]))
+                        for t in tids)
+        merged: list[tuple[int, int]] = []
+        for lo, hi in ranges:
+            if merged and merged[-1][1] == lo:
+                merged[-1] = (merged[-1][0], hi)
+            else:
+                merged.append((lo, hi))
+        out.append(merged)
     return out
 
 

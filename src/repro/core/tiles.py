@@ -44,9 +44,11 @@ class TileMeta:
 
     @property
     def num_rows(self) -> int:
+        """Target rows this tile owns (row_end - row_start)."""
         return self.row_end - self.row_start
 
     def to_dict(self) -> dict:
+        """JSON-serializable form (embedded in the tile blob header)."""
         d = dataclasses.asdict(self)
         if self.src_intervals is not None:
             d["src_intervals"] = list(self.src_intervals)
@@ -55,6 +57,7 @@ class TileMeta:
 
     @staticmethod
     def from_dict(d: dict) -> "TileMeta":
+        """Inverse of ``to_dict``."""
         d = dict(d)
         for key in ("src_intervals", "src_interval_ptr"):
             if d.get(key) is not None:
@@ -85,6 +88,7 @@ class Tile:
     iv_perm: Optional[np.ndarray] = None
 
     def nbytes(self) -> int:
+        """Uncompressed in-memory array bytes (excludes metadata)."""
         n = self.src.nbytes + self.dst_local.nbytes + self.row_ptr.nbytes
         if self.val is not None:
             n += self.val.nbytes
@@ -95,6 +99,8 @@ class Tile:
         return np.unique(self.src[: self.meta.num_edges])
 
     def validate(self) -> None:
+        """Assert every structural invariant (shapes, CSR sort order, padding
+        sink rows, footprint consistency) — test/debug aid."""
         m = self.meta
         assert self.src.shape == (m.edge_cap,), (self.src.shape, m.edge_cap)
         assert self.dst_local.shape == (m.edge_cap,)

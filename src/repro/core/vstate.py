@@ -62,6 +62,7 @@ class VStateStats:
         self.disk_seconds = 0.0
 
     def as_dict(self) -> dict:
+        """Plain-dict snapshot (for logs/benchmark JSON)."""
         return dict(
             hits=self.hits, faults=self.faults,
             warm_faults=self.warm_faults, cold_faults=self.cold_faults,
@@ -127,16 +128,20 @@ class VertexStateStore:
     # -- geometry -----------------------------------------------------------
     @property
     def num_intervals(self) -> int:
+        """K = number of vertex intervals."""
         return len(self.splitter) - 1
 
     @property
     def num_vertices(self) -> int:
+        """V = total vertices covered by the splitter."""
         return int(self.splitter[-1])
 
     def interval_range(self, k: int) -> tuple[int, int]:
+        """[lo, hi) vertex range of interval ``k``."""
         return int(self.splitter[k]), int(self.splitter[k + 1])
 
     def interval_of(self, vertex_ids) -> np.ndarray:
+        """Owning interval per vertex id (vectorized searchsorted)."""
         return np.searchsorted(self.splitter, vertex_ids, side="right") - 1
 
     # -- registration / access ----------------------------------------------
@@ -162,6 +167,7 @@ class VertexStateStore:
         return self._specs[name]
 
     def names(self) -> tuple[str, ...]:
+        """Registered array names ("value" + the program's aux arrays)."""
         return tuple(self._specs)
 
     def get_block(self, name: str, k: int) -> np.ndarray:
@@ -239,6 +245,7 @@ class VertexStateStore:
 
     # -- introspection -------------------------------------------------------
     def resident_bytes(self) -> int:
+        """Current in-memory bytes across hot ndarrays + warm blobs."""
         with self._lock:
             return self._mem
 
@@ -258,6 +265,7 @@ class VertexStateStore:
         return max(1, self.budget_bytes // per)
 
     def tier_snapshot(self) -> dict:
+        """Per-tier {blocks, bytes} residency snapshot (hot/warm/cold)."""
         with self._lock:
             out = dict(hot=dict(blocks=0, bytes=0),
                        warm=dict(blocks=0, bytes=0),

@@ -1,1 +1,5 @@
+"""Graph I/O: SPE-equivalent preprocessing (``spe``), the tile store +
+wire/disk formats (``formats``), and synthetic graph generators
+(``synth``).  Submodules are imported explicitly by users.
+"""
 # SPE-equivalent preprocessing + tile storage ("DFS") + synthetic graphs.

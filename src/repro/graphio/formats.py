@@ -48,6 +48,8 @@ MODE_CODECS = {
 
 
 def compress_blob(blob: bytes, mode: int) -> bytes:
+    """Compress ``blob`` at one of the paper's four modes (1 = raw
+    passthrough); see MODE_CODECS for the ladder."""
     name, level = MODE_CODECS[mode]
     if level is None:
         return blob
@@ -55,6 +57,7 @@ def compress_blob(blob: bytes, mode: int) -> bytes:
 
 
 def decompress_blob(blob: bytes, mode: int) -> bytes:
+    """Inverse of ``compress_blob`` for the same mode."""
     name, level = MODE_CODECS[mode]
     if level is None:
         return blob
@@ -62,6 +65,8 @@ def decompress_blob(blob: bytes, mode: int) -> bytes:
 
 
 def serialize_tile(tile: Tile) -> bytes:
+    """Tile -> one binary blob: magic + JSON header + raw little-endian
+    arrays (GHT2 appends iv_perm when a footprint is attached)."""
     v2 = tile.iv_perm is not None
     header = dict(
         meta=tile.meta.to_dict(),
@@ -86,6 +91,7 @@ def serialize_tile(tile: Tile) -> bytes:
 
 
 def deserialize_tile(blob: bytes) -> Tile:
+    """Inverse of ``serialize_tile`` (accepts GHT1 and GHT2)."""
     magic = blob[:4]
     assert magic in (MAGIC, MAGIC_V2), "bad tile magic"
     (hlen,) = struct.unpack("<I", blob[4:8])
@@ -125,6 +131,8 @@ class TileStore:
     def initialize(self, plan: PartitionPlan, weighted: bool,
                    in_degree: np.ndarray, out_degree: np.ndarray,
                    interval_plan: Optional[IntervalPlan] = None) -> None:
+        """Write meta.json (partition plan + optional interval plan) and the
+        degree arrays; creates the tiles/ directory."""
         os.makedirs(self.tile_dir, exist_ok=True)
         meta = dict(
             plan=plan.to_dict(),
@@ -141,6 +149,8 @@ class TileStore:
                  in_degree=in_degree, out_degree=out_degree)
 
     def write_tile(self, tile: Tile) -> int:
+        """Serialize + disk-mode-compress + atomically write one tile; returns
+        the on-disk byte count."""
         blob = compress_blob(serialize_tile(tile), self.disk_mode)
         path = self._tile_path(tile.meta.tile_id)
         tmp = path + ".tmp"
@@ -153,12 +163,14 @@ class TileStore:
 
     # -- read side (MPE) ---------------------------------------------------
     def load_meta(self) -> dict:
+        """Read meta.json (also refreshes ``self.disk_mode``)."""
         with open(os.path.join(self.root, "meta.json")) as f:
             meta = json.load(f)
         self.disk_mode = meta["disk_mode"]
         return meta
 
     def load_plan(self) -> PartitionPlan:
+        """The stage-1 PartitionPlan recorded at preprocessing time."""
         return PartitionPlan.from_dict(self.load_meta()["plan"])
 
     def load_interval_plan(self) -> Optional[IntervalPlan]:
@@ -169,6 +181,7 @@ class TileStore:
         return IntervalPlan.from_dict(d) if d is not None else None
 
     def load_degrees(self) -> tuple[np.ndarray, np.ndarray]:
+        """(in_degree [V], out_degree [V]) int64 arrays from degrees.npz."""
         z = np.load(os.path.join(self.root, "degrees.npz"))
         return z["in_degree"], z["out_degree"]
 
@@ -181,14 +194,18 @@ class TileStore:
         return blob
 
     def read_tile(self, tile_id: int) -> Tile:
+        """Read + decompress + deserialize one tile from disk."""
         return deserialize_tile(
             decompress_blob(self.read_tile_blob(tile_id), self.disk_mode)
         )
 
     def tile_disk_bytes(self, tile_id: int) -> int:
+        """On-disk (post disk-mode compression) size of one tile, in bytes."""
         return os.path.getsize(self._tile_path(tile_id))
 
     def iter_tiles(self, tile_ids: Iterator[int]) -> Iterator[Tile]:
+        """Yield tiles in the given id order (serial reads; see
+        ``prefetch_iter`` for the overlapped path)."""
         for t in tile_ids:
             yield self.read_tile(t)
 

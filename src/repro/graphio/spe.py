@@ -150,6 +150,8 @@ def preprocess_arrays(
     src: np.ndarray, dst: np.ndarray, val: Optional[np.ndarray],
     num_vertices: int, store: TileStore, tile_size: int, **kw,
 ) -> PartitionPlan:
+    """In-memory convenience wrapper over ``preprocess`` for edge arrays
+    (src/dst int64 [E], optional float32 val [E])."""
     from repro.graphio.synth import from_arrays
 
     return preprocess(

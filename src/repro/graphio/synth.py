@@ -21,6 +21,8 @@ def uniform_edges(
     weighted: bool = False,
     chunk: int = 1 << 20,
 ) -> Iterator[EdgeChunk]:
+    """Uniform random directed edges in chunks of ``chunk`` (matches the
+    random-graph assumption behind the paper's Eq. 4/5 memory model)."""
     rng = np.random.default_rng(seed)
     left = num_edges
     while left > 0:
@@ -103,6 +105,7 @@ def from_arrays(
     src: np.ndarray, dst: np.ndarray, val: Optional[np.ndarray] = None,
     chunk: int = 1 << 20,
 ) -> Iterator[EdgeChunk]:
+    """Wrap in-memory edge arrays as a chunked stream (test/benchmark aid)."""
     for i in range(0, len(src), chunk):
         s = slice(i, i + chunk)
         yield (

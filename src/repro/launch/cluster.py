@@ -1,0 +1,352 @@
+"""Multi-process cluster driver — real N-server GraphH runs (DESIGN.md §11).
+
+    PYTHONPATH=src python -m repro.launch.cluster --app pagerank \
+        --vertices 100000 --edges 1000000 --servers 4 --transport shm
+
+Spawns N server processes (multiprocessing ``spawn`` — safe with jax),
+each running the out-of-core engine (``engine.OutOfCoreEngine`` with
+``server_rank``) over its stage-2 tile share of one shared TileStore, and
+exchanging per-superstep vertex updates through a real transport
+(``core.transport``: shared-memory ring, or TCP sockets via ``--transport
+tcp``).  Results are bit-identical to the single-process engine — the
+driver verifies this across ranks on every run.
+
+A single launch amortizes process/jit startup over many programs: pass
+several vertex programs and the same N servers execute them back to back
+(the exchange sequence numbers keep the BSP barriers aligned across runs).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import multiprocessing as mp
+import os
+import shutil
+import tempfile
+import time
+import traceback
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, OutOfCoreEngine, RunResult
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Knobs for a multi-process cluster run (engine knobs ride along in
+    ``engine`` — its ``num_servers``/``server_rank`` are overridden per
+    spawned process).  See docs/OPERATIONS.md for tuning guidance."""
+
+    num_servers: int = 2
+    #: "shm" = mmap shared-memory ring per server pair (single host);
+    #: "tcp" = sockets with file rendezvous (works across hosts sharing
+    #: only a filesystem)
+    transport: str = "shm"
+    #: per-directed-channel ring capacity in bytes (shm transport)
+    ring_capacity: int = 1 << 22
+    #: cross-server tile stealing between supersteps (scheduler.
+    #: rebalance_assignment); requires engine_mode="tiled"
+    steal: bool = False
+    straggler_factor: float = 1.5
+    #: per-superstep exchange timeout inside each server (seconds)
+    timeout_seconds: float = 180.0
+    #: parent-side timeout for the whole launch (seconds)
+    launch_timeout_seconds: float = 900.0
+    #: JAX platform forced into the server processes (None = inherit)
+    jax_platforms: Optional[str] = "cpu"
+    #: engine template; num_servers/server_rank are overridden per rank
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """Parent-side result of :func:`run_cluster`."""
+
+    results: list            # rank 0's RunResult per program
+    rank_reports: list       # one dict per rank: wire/raw bytes, steals, s
+    # final values bit-identical across all ranks; always True on a
+    # returned result (run_cluster RAISES on divergence), kept so callers
+    # can assert the invariant explicitly
+    verified: bool
+
+    def wire_bytes_per_superstep(self, app_index: int = 0) -> list:
+        """Cluster-total measured wire bytes per superstep for one app."""
+        return [h.wire_bytes for h in self.results[app_index].history]
+
+
+def _server_main(rank: int, store_root: str, cfg: ClusterConfig,
+                 progs: list, run_dir: str, conn) -> None:
+    """Entry point of one spawned server process: build transport +
+    exchange + engine for ``rank``, run every program, ship results back
+    through ``conn``.  Errors are reported (never silently dropped) so the
+    parent can tear the cluster down."""
+    from repro.core import transport as transport_mod
+    from repro.core.distributed import ClusterExchange
+    from repro.graphio.formats import TileStore
+
+    transport = None
+    exchange = None
+    try:
+        store = TileStore(store_root)
+        store.load_meta()
+        ecfg = dataclasses.replace(
+            cfg.engine, num_servers=cfg.num_servers, server_rank=rank)
+        if cfg.steal and ecfg.engine_mode != "tiled":
+            raise ValueError("tile stealing requires engine_mode='tiled' "
+                             "(stacked/merged pin tiles to devices)")
+        eng = OutOfCoreEngine(store, ecfg)
+        transport = transport_mod.make_transport(
+            cfg.transport, rank, cfg.num_servers, run_dir)
+        exchange = ClusterExchange(
+            transport, comm_mode=ecfg.comm_mode,
+            compressor=ecfg.comm_compressor, threshold=ecfg.comm_threshold,
+            assignment=eng.assignment,
+            edges_per_tile=eng.plan.edges_per_tile,
+            steal=cfg.steal, straggler_factor=cfg.straggler_factor,
+            timeout=cfg.timeout_seconds)
+        eng.exchange = exchange
+        results = []
+        t0 = time.perf_counter()
+        for prog in progs:
+            results.append(eng.run(prog))
+        report = dict(
+            rank=rank,
+            seconds=time.perf_counter() - t0,
+            # what THIS rank put on the wire (cluster totals live in the
+            # per-superstep history of every rank's RunResult)
+            wire_bytes=exchange.sent_wire_bytes,
+            raw_bytes=exchange.sent_raw_bytes,
+            steal_moves=exchange.steal_moves,
+            final_assignment=[list(a) for a in eng.assignment],
+        )
+        conn.send(("ok", results, report))
+    except BaseException:
+        try:
+            conn.send(("error", traceback.format_exc(), None))
+        except (OSError, ValueError):
+            pass
+        raise SystemExit(1)
+    finally:
+        if exchange is not None:
+            exchange.close()
+        if transport is not None:
+            transport.close()
+        conn.close()
+
+
+def run_cluster(store_root: str, progs: list,
+                cfg: ClusterConfig = ClusterConfig(),
+                run_dir: Optional[str] = None,
+                keep_run_dir: bool = False) -> ClusterResult:
+    """Run ``progs`` (VertexProgram instances) on an N-server cluster over
+    the tile store at ``store_root``.
+
+    The parent creates the rendezvous directory (+ shared-memory ring
+    files for the shm transport), spawns the N server processes, collects
+    each rank's results, verifies the final value arrays are bit-identical
+    across ranks (divergence RAISES — a divergent cluster run is a wrong
+    answer, never a degraded one), and returns rank 0's results with
+    per-rank wire/steal reports.  Any rank failure tears down the whole
+    cluster with that rank's traceback."""
+    from repro.core import transport as transport_mod
+
+    n = cfg.num_servers
+    own_dir = run_dir is None
+    run_dir = run_dir or tempfile.mkdtemp(prefix="graphh_cluster_")
+    if cfg.transport == "shm":
+        transport_mod.create_ring_files(run_dir, n, cfg.ring_capacity)
+
+    ctx = mp.get_context("spawn")
+    saved_env = {k: os.environ.get(k) for k in ("JAX_PLATFORMS",)}
+    if cfg.jax_platforms is not None:
+        # children inherit the parent env at spawn time; restored below
+        os.environ["JAX_PLATFORMS"] = cfg.jax_platforms
+    procs, conns = [], []
+    try:
+        for rank in range(n):
+            parent_conn, child_conn = ctx.Pipe(duplex=False)
+            p = ctx.Process(
+                target=_server_main,
+                args=(rank, store_root, cfg, progs, run_dir, child_conn),
+                name=f"graphh-server-{rank}", daemon=True)
+            p.start()
+            child_conn.close()
+            procs.append(p)
+            conns.append(parent_conn)
+        for k, v in saved_env.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+        deadline = time.monotonic() + cfg.launch_timeout_seconds
+        payloads: list = [None] * n
+        pending = set(range(n))
+        while pending:
+            for r in list(pending):
+                if conns[r].poll(0.1):
+                    try:
+                        payloads[r] = conns[r].recv()
+                    except EOFError:
+                        raise RuntimeError(
+                            f"cluster server {r} died (exit code "
+                            f"{procs[r].exitcode}) without reporting")
+                    pending.discard(r)
+                    if payloads[r][0] == "error":
+                        # fail fast: peers are now blocked on this rank's
+                        # missing frames; the finally below reaps them
+                        raise RuntimeError(
+                            f"cluster server {r} failed:\n{payloads[r][1]}")
+                elif not procs[r].is_alive() and not conns[r].poll(0.1):
+                    raise RuntimeError(
+                        f"cluster server {r} died (exit code "
+                        f"{procs[r].exitcode}) without reporting")
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"cluster launch timed out; pending ranks {sorted(pending)}")
+        for p in procs:
+            p.join(timeout=30.0)
+    finally:
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+        if own_dir and not keep_run_dir:
+            shutil.rmtree(run_dir, ignore_errors=True)
+
+    all_results = [payloads[r][1] for r in range(n)]
+    reports = [payloads[r][2] for r in range(n)]
+    diverged = [(a, r) for a in range(len(progs)) for r in range(1, n)
+                if not np.array_equal(all_results[0][a].values,
+                                      all_results[r][a].values)]
+    if diverged:
+        raise RuntimeError(
+            "cluster ranks diverged — final values not bit-identical for "
+            f"(app index, rank): {diverged}; this is a wrong answer, not "
+            "a degraded one (transport/decode bug or broken hardware)")
+    return ClusterResult(results=all_results[0], rank_reports=reports,
+                         verified=True)
+
+
+def _build_progs(args) -> list:
+    """Vertex program list for the CLI (mirrors launch.graph seeding)."""
+    from repro.core.apps import APPS
+
+    batched = args.app in ("ppr", "msbfs", "landmarks")
+    if batched:
+        if args.seeds:
+            seeds = tuple(int(s) for s in args.seeds.split(","))
+        else:
+            q = args.queries or 8
+            rng = np.random.default_rng(args.seed)
+            seeds = tuple(int(v) for v in
+                          rng.choice(args.vertices, size=q, replace=False))
+        key = {"ppr": "seeds", "msbfs": "sources", "landmarks": "landmarks"}
+        return [APPS[args.app](**{key[args.app]: seeds})]
+    if args.queries or args.seeds:
+        raise SystemExit(f"--queries/--seeds only apply to batched apps "
+                         f"(ppr/msbfs/landmarks), not {args.app}")
+    return [APPS[args.app]()]
+
+
+def main(argv=None) -> ClusterResult:
+    """CLI: build (or reuse) a tile store, run one app on an N-server
+    cluster, print per-superstep wire bytes and per-rank reports."""
+    from repro.core.apps import APPS
+    from repro.launch.graph import build_store
+    from repro.graphio.formats import TileStore
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="pagerank", choices=sorted(APPS))
+    ap.add_argument("--graph", default="rmat",
+                    choices=["rmat", "uniform", "banded"])
+    ap.add_argument("--vertices", type=int, default=100_000)
+    ap.add_argument("--edges", type=int, default=1_000_000)
+    ap.add_argument("--tile-size", type=int, default=65536)
+    ap.add_argument("--servers", type=int, default=2)
+    ap.add_argument("--transport", default="shm", choices=["shm", "tcp"])
+    ap.add_argument("--steal", action="store_true",
+                    help="cross-server tile stealing between supersteps")
+    ap.add_argument("--supersteps", type=int, default=30)
+    ap.add_argument("--comm-mode", default="hybrid",
+                    choices=["dense", "sparse", "hybrid"])
+    ap.add_argument("--cache-mb", type=float, default=1024)
+    ap.add_argument("--cache-mode", default="auto")
+    ap.add_argument("--cache-policy", default="lru",
+                    choices=["lru", "tiered", "cost-aware"])
+    ap.add_argument("--cache-promote-hits", type=int, default=2)
+    ap.add_argument("--static-order", action="store_true")
+    ap.add_argument("--pipeline", action="store_true")
+    ap.add_argument("--prefetch-depth", type=int, default=4)
+    ap.add_argument("--prefetch-workers", type=int, default=2)
+    ap.add_argument("--stack-size", type=int, default=4)
+    ap.add_argument("--num-intervals", type=int, default=0)
+    ap.add_argument("--no-interval-order", action="store_true")
+    ap.add_argument("--disk-mode", type=int, default=1)
+    ap.add_argument("--store", default=None)
+    ap.add_argument("--reuse", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--seeds", default=None)
+    ap.add_argument("--vertex-memory-budget", type=float, default=None,
+                    metavar="MB")
+    args = ap.parse_args(argv)
+
+    if args.reuse and args.store:
+        store = TileStore(args.store)
+        store.load_meta()
+    else:
+        store = build_store(args)
+
+    ecfg = EngineConfig(
+        comm_mode=args.comm_mode,
+        cache_capacity_bytes=int(args.cache_mb * 1e6),
+        cache_mode=args.cache_mode if args.cache_mode == "auto"
+        else int(args.cache_mode),
+        cache_policy=args.cache_policy,
+        cache_promote_hits=args.cache_promote_hits,
+        cache_aware_order=not args.static_order,
+        max_supersteps=args.supersteps,
+        pipeline=args.pipeline,
+        prefetch_depth=args.prefetch_depth,
+        prefetch_workers=args.prefetch_workers,
+        stack_size=args.stack_size,
+        vertex_memory_budget=(None if args.vertex_memory_budget is None
+                              else int(args.vertex_memory_budget * 1e6)),
+        num_intervals=args.num_intervals,
+        interval_aware_order=not args.no_interval_order,
+    )
+    cfg = ClusterConfig(num_servers=args.servers, transport=args.transport,
+                        steal=args.steal, engine=ecfg)
+    progs = _build_progs(args)
+    t0 = time.time()
+    out = run_cluster(store.root, progs, cfg)
+    dt = time.time() - t0
+    res = out.results[0]
+    wire = sum(h.wire_bytes for h in res.history)
+    net = sum(h.network_bytes for h in res.history)
+    print(f"{args.app} x{args.servers} servers [{args.transport}"
+          f"{', steal' if args.steal else ''}]: {res.supersteps} supersteps "
+          f"in {dt:.1f}s (converged={res.converged}, "
+          f"bit-identical across ranks={out.verified})")
+    print(f"  wire {wire / 1e6:.2f} MB total ({net / 1e6:.2f} MB on the "
+          f"network at N-1 peers/server); per-superstep "
+          f"{[h.wire_bytes for h in res.history[:8]]}{'...' if res.supersteps > 8 else ''}")
+    from repro.core.partition import server_vertex_ranges
+
+    plan = store.load_plan()
+    for rep in out.rank_reports:
+        ranges = server_vertex_ranges(plan.splitter,
+                                      [rep["final_assignment"][rep["rank"]]])[0]
+        owned = sum(hi - lo for lo, hi in ranges)
+        print(f"  rank {rep['rank']}: {rep['seconds']:.1f}s, "
+              f"sent {rep['wire_bytes'] / 1e6:.2f} MB, "
+              f"{len(rep['final_assignment'][rep['rank']])} tiles / "
+              f"{owned} rows owned"
+              + (f", {rep['steal_moves']} tiles stolen" if args.steal else ""))
+    return out
+
+
+if __name__ == "__main__":
+    main()

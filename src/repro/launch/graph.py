@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.graph --app pagerank \
         --vertices 100000 --edges 1000000 --servers 4 --supersteps 20
+
+``--servers N`` emulates the paper's N servers inside one process (the
+measurable reference).  ``--cluster`` upgrades the same run to N *real*
+server processes exchanging updates over a shared-memory ring or TCP
+(``--transport``, DESIGN.md §11) via ``repro.launch.cluster`` — results
+are bit-identical either way.
 """
 from __future__ import annotations
 
@@ -18,6 +24,9 @@ from repro.graphio.formats import TileStore
 
 
 def build_store(args) -> TileStore:
+    """SPE-preprocess the synthetic graph selected by the CLI namespace
+    into a (new or ``--store``-named) TileStore; weighted edges are
+    generated iff the app consumes them (sssp/landmarks)."""
     store = TileStore(args.store or tempfile.mkdtemp(prefix="graphh_"),
                       disk_mode=args.disk_mode)
     gen = {"rmat": synth.rmat_edges, "uniform": synth.uniform_edges,
@@ -35,6 +44,9 @@ def build_store(args) -> TileStore:
 
 
 def main(argv=None):
+    """Parse CLI flags, build/reuse a tile store, and run the selected app
+    through the out-of-core engine (or hand off to the multi-process
+    cluster driver when ``--cluster`` is set)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="pagerank", choices=sorted(APPS))
     ap.add_argument("--graph", default="rmat",
@@ -89,7 +101,57 @@ def main(argv=None):
     ap.add_argument("--no-interval-order", action="store_true",
                     help="disable interval-aware tile co-scheduling in "
                          "ooc-vstate mode (falls back to cache-hit-first)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="run --servers as N real server processes "
+                         "exchanging updates over --transport instead of "
+                         "emulating them in-process (DESIGN.md §11)")
+    ap.add_argument("--transport", default="shm", choices=["shm", "tcp"],
+                    help="cluster transport: shared-memory ring (one "
+                         "host) or TCP sockets (rendezvous via a shared "
+                         "filesystem)")
+    ap.add_argument("--steal", action="store_true",
+                    help="cluster mode: cross-server tile stealing "
+                         "between supersteps (runtime.scheduler)")
     args = ap.parse_args(argv)
+
+    if args.cluster:
+        from repro.launch import cluster as cluster_mod
+
+        cl_argv = ["--app", args.app, "--graph", args.graph,
+                   "--vertices", str(args.vertices),
+                   "--edges", str(args.edges),
+                   "--tile-size", str(args.tile_size),
+                   "--servers", str(args.servers),
+                   "--transport", args.transport,
+                   "--supersteps", str(args.supersteps),
+                   "--comm-mode", args.comm_mode,
+                   "--cache-mb", str(args.cache_mb),
+                   "--cache-mode", str(args.cache_mode),
+                   "--cache-policy", args.cache_policy,
+                   "--cache-promote-hits", str(args.cache_promote_hits),
+                   "--prefetch-depth", str(args.prefetch_depth),
+                   "--prefetch-workers", str(args.prefetch_workers),
+                   "--stack-size", str(args.stack_size),
+                   "--num-intervals", str(args.num_intervals),
+                   "--disk-mode", str(args.disk_mode),
+                   "--seed", str(args.seed)]
+        for flag, on in (("--steal", args.steal),
+                         ("--pipeline", args.pipeline),
+                         ("--static-order", args.static_order),
+                         ("--no-interval-order", args.no_interval_order),
+                         ("--reuse", args.reuse)):
+            if on:
+                cl_argv.append(flag)
+        if args.store:
+            cl_argv += ["--store", args.store]
+        if args.queries:
+            cl_argv += ["--queries", str(args.queries)]
+        if args.seeds:
+            cl_argv += ["--seeds", args.seeds]
+        if args.vertex_memory_budget is not None:
+            cl_argv += ["--vertex-memory-budget",
+                        str(args.vertex_memory_budget)]
+        return cluster_mod.main(cl_argv)
 
     if args.reuse and args.store:
         store = TileStore(args.store)

@@ -42,3 +42,19 @@ def graph_engine_axes(mesh: Mesh) -> tuple[str, ...]:
     """GraphH tile-shard axes: servers = pod x data, workers = model —
     tiles shard over all of them (DESIGN.md §5)."""
     return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def make_cluster_mesh(num_servers: int) -> Mesh:
+    """1-D ("server",) mesh modelling the multi-process cluster runtime
+    (DESIGN.md §11) for the shard_map dry-run path: one mesh slot per
+    server process, so ``distributed.build_superstep`` over this mesh
+    lowers the same per-server tile shard + hybrid broadcast the real
+    cluster executes.  Requires >= ``num_servers`` local (or
+    ``--xla_force_host_platform_device_count``-emulated) devices."""
+    if jax.device_count() < num_servers:
+        raise ValueError(
+            f"need {num_servers} devices for a {num_servers}-server mesh; "
+            f"have {jax.device_count()} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_servers} "
+            "before importing jax to emulate them)")
+    return _mesh((num_servers,), ("server",))

@@ -10,11 +10,17 @@ recipe used by launch/train.py when the world size changes:
     state = reshard(state, new_shardings)
 
 The graph engine rescales by re-running stage-2 tile assignment
-(partition.assign_tiles) for the new N — tiles are mesh-agnostic.
+(partition.assign_tiles) for the new N — tiles are mesh-agnostic.  The
+multi-process cluster runtime (DESIGN.md §11) adds a warmth-preserving
+variant: ``remap_assignment`` resizes an existing per-server tile
+assignment to a new server count while keeping every tile that can stay on
+its current server there, so surviving servers keep their edge caches hot
+across the resize.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def reshard(tree, new_shardings):
@@ -29,3 +35,45 @@ def rescale_via_checkpoint(ckpt_mgr, step, state, new_shardings):
     """Disk-mediated rescale (what a real job restart does)."""
     ckpt_mgr.save(step, state)
     return ckpt_mgr.restore(step, shardings=new_shardings)
+
+
+def remap_assignment(old: list[list[int]], new_n: int,
+                     edges_per_tile) -> list[list[int]]:
+    """Resize a per-server tile assignment to ``new_n`` servers,
+    maximizing cache warmth (DESIGN.md §11).
+
+    Tiles owned by a surviving server (old rank < ``new_n``) stay put —
+    their compressed blobs are already in that server's edge cache.  Tiles
+    orphaned by removed servers are placed greedily (largest edge count
+    first) onto the least-edge-loaded survivor; only when the cluster
+    *grows* do the new empty servers absorb work from the most-loaded
+    survivors until no move improves the edge balance (on shrink the
+    survivors' own tiles are never touched — that cold-rereading churn is
+    exactly what this function exists to avoid).  Deterministic: ties
+    break toward lower server rank and lower tile id.
+    """
+    if new_n < 1:
+        raise ValueError("new_n must be >= 1")
+    edges = np.asarray(edges_per_tile, dtype=np.int64)
+    new = [list(old[s]) if s < len(old) else [] for s in range(new_n)]
+    orphans = sorted((t for s in range(new_n, len(old)) for t in old[s]),
+                     key=lambda t: (-edges[t], t))
+    load = np.array([sum(int(edges[t]) for t in ts) for ts in new])
+    for t in orphans:
+        d = int(np.argmin(load))
+        new[d].append(t)
+        load[d] += int(edges[t])
+    # growth only: drain the most-loaded survivors into the new empty
+    # servers while a move strictly improves the max load
+    while new_n > len(old):
+        hi, lo = int(np.argmax(load)), int(np.argmin(load))
+        movable = sorted(new[hi], key=lambda t: (-edges[t], t))
+        best = next((t for t in movable
+                     if load[lo] + edges[t] < load[hi]), None)
+        if best is None:
+            break
+        new[hi].remove(best)
+        new[lo].append(best)
+        load[hi] -= int(edges[best])
+        load[lo] += int(edges[best])
+    return [sorted(ts) for ts in new]

@@ -12,6 +12,12 @@ superstep.  This module adds, beyond the paper:
     ``straggler_factor x`` the median tile time are duplicated onto idle
     servers; BSP tile idempotence (disjoint dst ranges, pure gather/apply)
     makes duplicate completion safe: first writer wins, results identical.
+  * rebalance_assignment — the *cluster-runtime* variant (DESIGN.md §11):
+    between BSP supersteps, every server process runs this same pure
+    function on the same replicated inputs (per-server measured compute
+    seconds, shipped in the exchange frame headers) and deterministically
+    moves tiles off stragglers, so all servers agree on the next
+    superstep's ownership with no coordinator.
 
 Scheduling is host-side (like the paper's MPE main loop); the engine uses
 it to order cache fetches + device dispatches.
@@ -125,6 +131,75 @@ class WorkStealingScheduler:
     def stats(self) -> dict:
         return dict(steals=self.steals, speculative=self.speculative,
                     tiles=len(self.tasks))
+
+
+def rebalance_assignment(
+    assignment: list[list[int]],
+    edges_per_tile,
+    server_seconds: list[float],
+    straggler_factor: float = 1.5,
+    max_move_fraction: float = 0.5,
+) -> Optional[tuple[list[list[int]], int]]:
+    """Cross-server tile stealing at BSP-superstep granularity.
+
+    A server whose measured compute time exceeded ``straggler_factor`` x
+    the median is a straggler; its tiles are moved — largest pending cost
+    first, matching :class:`WorkStealingScheduler`'s steal order — onto
+    the servers with the lowest *projected* next-superstep time, until the
+    straggler's projection drops under the threshold or
+    ``max_move_fraction`` of its tiles have moved.  Projections use each
+    server's measured per-edge rate (seconds / currently assigned edges),
+    so a server that is slow because its *hardware* is slow keeps
+    shedding work rather than reabsorbing it.
+
+    Pure and deterministic: every cluster server calls this with identical
+    replicated inputs and derives the identical new assignment (ties break
+    toward lower server rank).  Tile movement never changes results —
+    tiles own disjoint dst rows and gather/apply is pure.
+
+    Returns (new assignment, tiles moved), or None when no server
+    straggled (callers keep the old assignment and skip the churn).
+    """
+    n = len(assignment)
+    if n < 2:
+        return None
+    secs = np.asarray(server_seconds, dtype=np.float64)
+    med = float(np.median(secs))
+    if med <= 0.0:
+        return None
+    threshold = straggler_factor * med
+    stragglers = [s for s in range(n) if secs[s] > threshold]
+    if not stragglers:
+        return None
+    new = [list(a) for a in assignment]
+    edges = np.asarray(edges_per_tile, dtype=np.float64)
+    load = np.array([sum(edges[t] for t in ts) for ts in new])
+    # measured per-edge seconds; a server with no tiles inherits the
+    # cluster-best rate (it is free capacity, not infinitely fast)
+    rate = np.where(load > 0, secs / np.maximum(load, 1.0), np.inf)
+    rate = np.where(np.isfinite(rate), rate, rate[np.isfinite(rate)].min())
+    moved = 0
+    for s in sorted(stragglers):
+        budget = max(1, int(len(new[s]) * max_move_fraction))
+        moved_s = 0
+        order = sorted(new[s], key=lambda t: (-edges[t], t))
+        for t in order:
+            if load[s] * rate[s] <= threshold or moved_s >= budget:
+                break
+            proj = load * rate
+            proj[s] = np.inf   # never "move" a tile onto the straggler
+            d = int(np.argmin(proj))   # argmin ties break to lower rank
+            if (load[d] + edges[t]) * rate[d] >= load[s] * rate[s]:
+                break          # the move would just create a new straggler
+            new[s].remove(t)
+            new[d].append(t)
+            load[s] -= edges[t]
+            load[d] += edges[t]
+            moved += 1
+            moved_s += 1
+    if moved == 0:
+        return None
+    return new, moved
 
 
 def simulate_superstep(scheduler: WorkStealingScheduler,

@@ -361,12 +361,12 @@ def test_second_run_stats_rebaselined(small_store):
         tile_skipping=False, max_supersteps=3))
     eng.run(PageRank())
     # external cache traffic between the runs: clear + touch tiles directly
-    for c in eng.caches:
+    for c in eng.caches.values():
         c.clear()
         c.get(eng.assignment[0][0])
-    external = sum(c.stats.disk_bytes_read for c in eng.caches)
+    external = sum(c.stats.disk_bytes_read for c in eng.caches.values())
     res2 = eng.run(PageRank())
-    total_after = sum(c.stats.disk_bytes_read for c in eng.caches)
+    total_after = sum(c.stats.disk_bytes_read for c in eng.caches.values())
     per_ss = [h.disk_bytes_read for h in res2.history]
     assert all(b >= 0 for b in per_ss)
     # run 2's deltas cover exactly run 2's disk traffic — the external

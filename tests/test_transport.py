@@ -1,0 +1,249 @@
+"""Transport round-trip property tests (DESIGN.md §11).
+
+Every BroadcastRecord mode — dense bitvec, sparse pairs, per-interval
+sections, multi-query column modes — must cross both transports
+byte-identically (value bytes round-trip exactly; that is what keeps
+cluster results bit-identical), including the zlib-fallback codec when
+zstandard is absent.
+"""
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import comm
+from repro.core import transport as T
+
+
+def _rand_updates(rng, nv, density, qa=None):
+    """Random sparse update triple at the given per-cell density."""
+    if qa is None:
+        upd = rng.random(nv) < density
+        idx = np.nonzero(upd)[0].astype(np.int64)
+        vals = rng.normal(size=len(idx)).astype(np.float32)
+        return idx, vals, None
+    mask = rng.random((nv, qa)) < density
+    vmask = mask.any(axis=1)
+    idx = np.nonzero(vmask)[0].astype(np.int64)
+    m = mask[idx]
+    vals = np.where(m, rng.normal(size=m.shape), 0.0).astype(np.float32)
+    return idx, vals, m
+
+
+def _assert_roundtrip(idx, vals, mask, dec):
+    order = np.argsort(dec.idx)
+    assert np.array_equal(dec.idx[order], idx)
+    if mask is None:
+        assert dec.mask is None
+        assert np.array_equal(dec.vals[order], vals)
+    else:
+        assert np.array_equal(dec.mask[order], mask)
+        got = np.where(dec.mask[order], dec.vals[order], 0.0)
+        assert np.array_equal(got, np.where(mask, vals, 0.0))
+
+
+@pytest.mark.parametrize("mode", ["dense", "sparse", "hybrid"])
+@pytest.mark.parametrize("density", [0.0, 0.02, 0.4, 0.9, 1.0])
+def test_flat_1d_roundtrip(mode, density):
+    rng = np.random.default_rng(int(density * 100) + len(mode))
+    idx, vals, _ = _rand_updates(rng, 700, density)
+    frame, header = T.encode_frame(idx, vals, None, 700, mode=mode)
+    dec = T.decode_frame(frame)
+    _assert_roundtrip(idx, vals, None, dec)
+    assert dec.header["mode"] in ("dense", "sparse")
+    assert header["wire_bytes"] == len(frame)
+    if mode != "hybrid" and density > 0:
+        assert dec.header["mode"] == mode
+
+
+@pytest.mark.parametrize("compressor", ["none", "zstd-1", "zstd-3"])
+def test_codec_label_reflects_fallback(compressor):
+    # zlib-fallback-when-zstd-absent: the recorded codec must be what ran
+    rng = np.random.default_rng(3)
+    idx, vals, _ = _rand_updates(rng, 300, 0.3)
+    frame, header = T.encode_frame(idx, vals, None, 300,
+                                   compressor=compressor)
+    dec = T.decode_frame(frame)
+    _assert_roundtrip(idx, vals, None, dec)
+    if compressor == "none":
+        assert header["codec"] == "none"
+    else:
+        want = "zstd" if compat.HAVE_ZSTD else "zlib"
+        assert header["codec"].startswith(want)
+
+
+@pytest.mark.parametrize("mode", ["dense", "sparse", "hybrid"])
+def test_multi_query_column_modes_roundtrip(mode):
+    rng = np.random.default_rng(11)
+    nv, qa = 400, 5
+    # per-column densities spanning the threshold -> mixed column modes
+    mask = rng.random((nv, qa)) < np.array([0.9, 0.01, 0.5, 0.0, 0.2])
+    vmask = mask.any(axis=1)
+    idx = np.nonzero(vmask)[0].astype(np.int64)
+    m = mask[idx]
+    vals = np.where(m, rng.normal(size=m.shape), 0.0).astype(np.float32)
+    frame, header = T.encode_frame(idx, vals, m, nv, mode=mode)
+    dec = T.decode_frame(frame)
+    _assert_roundtrip(idx, vals, m, dec)
+    if mode == "dense":
+        assert all(q == "dense" for q in dec.header["qmodes"])
+    if mode == "sparse":
+        assert all(q == "sparse" for q in dec.header["qmodes"])
+
+
+@pytest.mark.parametrize("qa", [None, 3])
+def test_interval_sections_roundtrip(qa):
+    rng = np.random.default_rng(5)
+    nv = 600
+    splitter = np.array([0, 100, 250, 280, 500, 600], np.int64)
+    # cluster the updates so some intervals stay clean
+    idx, vals, mask = _rand_updates(rng, nv, 0.15, qa)
+    keep = (idx < 250) | (idx >= 500)
+    idx = idx[keep]
+    vals = vals[keep]
+    mask = mask[keep] if mask is not None else None
+    frame, header = T.encode_frame(idx, vals if qa is None else vals,
+                                   mask, nv, splitter=splitter)
+    dec = T.decode_frame(frame)
+    _assert_roundtrip(idx, vals, mask, dec)
+    assert dec.header["kind"] == "intervals"
+    touched = set(np.searchsorted(splitter, idx, side="right") - 1)
+    assert {s["iv"] for s in dec.header["sections"]} == touched
+    # clean intervals ship zero sections
+    assert len(dec.header["sections"]) == len(touched)
+
+
+def test_empty_updates_roundtrip():
+    for splitter in (None, np.array([0, 50, 100], np.int64)):
+        frame, _ = T.encode_frame(np.zeros(0, np.int64),
+                                  np.zeros(0, np.float32), None, 100,
+                                  splitter=splitter)
+        dec = T.decode_frame(frame)
+        assert len(dec.idx) == 0 and len(dec.vals) == 0
+
+
+@pytest.mark.parametrize("qa,splitter", [
+    (None, None), (4, None),
+    (None, "iv"), (4, "iv"),
+])
+def test_hybrid_never_larger_than_pure_modes(qa, splitter):
+    """The measured-size hybrid ships the smallest complete frame."""
+    rng = np.random.default_rng(17)
+    nv = 512
+    sp = np.linspace(0, nv, 5).astype(np.int64) if splitter else None
+    for density in (0.01, 0.2, 0.39, 0.41, 0.8):
+        idx, vals, mask = _rand_updates(rng, nv, density, qa)
+        sizes = {}
+        for mode in ("dense", "sparse", "hybrid"):
+            frame, _ = T.encode_frame(idx, vals, mask, nv,
+                                      splitter=sp, mode=mode)
+            sizes[mode] = len(frame)
+        assert sizes["hybrid"] <= min(sizes["dense"], sizes["sparse"])
+
+
+def test_frame_bytes_deterministic():
+    """Frames are a pure function of the update set (control stats live in
+    the exchange envelope) — same updates, same bytes."""
+    rng = np.random.default_rng(23)
+    idx, vals, _ = _rand_updates(rng, 300, 0.3)
+    f1, _ = T.encode_frame(idx, vals, None, 300)
+    f2, _ = T.encode_frame(idx.copy(), vals.copy(), None, 300)
+    assert f1 == f2
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+def _transport_pair(kind, tmp):
+    if kind == "shm":
+        T.create_ring_files(tmp, 2, capacity=1 << 12)
+    a = T.make_transport(kind, 0, 2, tmp)
+    b = T.make_transport(kind, 1, 2, tmp)
+    return a, b
+
+
+@pytest.mark.parametrize("kind", ["shm", "tcp"])
+def test_transport_ordered_delivery_and_large_messages(kind):
+    tmp = tempfile.mkdtemp(prefix=f"transport_{kind}_")
+    a, b = _transport_pair(kind, tmp)
+    try:
+        # includes messages larger than the shm ring capacity (chunked)
+        msgs = [os.urandom(n) for n in (1, 3, 5000, 20000, 7)]
+        done = threading.Event()
+
+        def send():
+            for m in msgs:
+                a.send(1, m)
+            done.set()
+
+        t = threading.Thread(target=send)
+        t.start()
+        got = []
+        while len(got) < len(msgs):
+            item = b.recv(timeout=10.0)
+            assert item is not None, "transport recv timed out"
+            src, payload = item
+            assert src == 0
+            got.append(payload)
+        t.join(timeout=10.0)
+        assert done.is_set()
+        assert got == msgs
+        assert b.recv(timeout=0.05) is None
+    finally:
+        a.close()
+        b.close()
+
+
+@pytest.mark.parametrize("kind", ["shm", "tcp"])
+def test_frames_cross_transport_byte_identically(kind):
+    tmp = tempfile.mkdtemp(prefix=f"frames_{kind}_")
+    a, b = _transport_pair(kind, tmp)
+    try:
+        rng = np.random.default_rng(29)
+        cases = [
+            _rand_updates(rng, 300, 0.9),            # dense
+            _rand_updates(rng, 300, 0.01),           # sparse
+            _rand_updates(rng, 300, 0.3, qa=3),      # multi-query mixed
+        ]
+        splitter = np.array([0, 100, 200, 300], np.int64)
+        frames = []
+        for k, (idx, vals, mask) in enumerate(cases):
+            sp = splitter if k == 1 else None        # one interval frame
+            frame, _ = T.encode_frame(idx, vals, mask, 300, splitter=sp)
+            frames.append(frame)
+            a.send(1, frame)
+        for k, (idx, vals, mask) in enumerate(cases):
+            src, payload = b.recv(timeout=10.0)
+            assert payload == frames[k]              # byte-identical wire
+            dec = T.decode_frame(payload)
+            _assert_roundtrip(idx, vals, mask, dec)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_ring_channel_wraparound():
+    tmp = tempfile.mkdtemp(prefix="ring_wrap_")
+    path = os.path.join(tmp, "ch.buf")
+    T.RingChannel.create(path, capacity=64)
+    w = T.RingChannel(path, writer=True)
+    r = T.RingChannel(path, writer=False)
+    rng = np.random.default_rng(31)
+    try:
+        for trial in range(50):   # cursors wrap the 64-byte ring many times
+            msg = rng.bytes(int(rng.integers(1, 50)))
+            w.send_msg(msg, timeout=5.0)
+            assert r.recv_msg(timeout=5.0) == msg
+        assert r.recv_msg(timeout=0.01) is None
+    finally:
+        w.close()
+        r.close()
+
+
+def test_make_transport_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown transport"):
+        T.make_transport("carrier-pigeon", 0, 2, "/tmp")

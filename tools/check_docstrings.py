@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""pydocstyle-lite: fail CI when a public API lacks a docstring.
+
+Usage:
+    python tools/check_docstrings.py src/repro/core src/repro/graphio
+
+Walks the given directories and reports every public module, class,
+function, and method (names not starting with "_", excluding nested
+defs) that has no docstring.  This enforces the repo convention that
+public ``core/`` and ``graphio/`` APIs document their array shapes
+(``[V,Q]``, ``[Q,BE]``), units (bytes vs elements), and thread-safety
+(docs/ARCHITECTURE.md).  Exit code 1 on any finding.
+
+Deliberately tiny (stdlib ``ast`` only) so it runs anywhere the repo
+runs — the container has no pydocstyle.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _check_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    missing: list[str] = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{path}:1 module docstring")
+
+    def walk(node: ast.AST, scope: str, top: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                name = child.name
+                qual = f"{scope}{name}"
+                is_cls = isinstance(child, ast.ClassDef)
+                if _is_public(name) and ast.get_docstring(child) is None:
+                    kind = "class" if is_cls else "def"
+                    missing.append(f"{path}:{child.lineno} {kind} {qual}")
+                # descend into PUBLIC classes for their methods — private
+                # classes and function bodies are implementation detail
+                if is_cls and _is_public(name):
+                    walk(child, f"{qual}.", top=False)
+
+    walk(tree, "", top=True)
+    return missing
+
+
+def main(argv: list[str]) -> int:
+    """Scan every ``*.py`` under the given roots; print findings and
+    return 1 if any public API is undocumented."""
+    roots = argv or ["src/repro/core", "src/repro/graphio"]
+    findings: list[str] = []
+    for root in roots:
+        for dirpath, _dirs, files in os.walk(root):
+            for fn in sorted(files):
+                if fn.endswith(".py"):
+                    findings += _check_file(os.path.join(dirpath, fn))
+    for line in findings:
+        print(line)
+    if findings:
+        print(f"\n{len(findings)} public APIs without docstrings "
+              f"(shapes/units/thread-safety belong there — see "
+              f"docs/ARCHITECTURE.md)", file=sys.stderr)
+        return 1
+    print(f"docstring check OK: {', '.join(roots)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
