@@ -24,12 +24,16 @@ import numpy as np
 from repro.core import comm
 from repro.core.bloom import SourceBlockBitmap, BloomFilter
 from repro.core.cache import EdgeCache, auto_select_mode, DEFAULT_GAMMAS
+from repro.core.checkpoint import GraphCheckpointer
 from repro.core.gab import VertexProgram, run_tile, run_tile_sharded
 from repro.core.partition import (assign_tiles, assign_tiles_balanced,
                                   plan_intervals)
 from repro.core.tiles import compute_source_footprint, tile_edge_values
 from repro.core.vstate import VertexStateStore
 from repro.graphio.formats import TileStore
+from repro.runtime.elastic import remap_assignment
+from repro.runtime.faults import FaultPlan
+from repro.runtime.ft import Preempted, PreemptionGuard
 
 
 @dataclasses.dataclass
@@ -104,6 +108,27 @@ class EngineConfig:
     # ClusterExchange passed to the constructor.  None = the classic
     # single-process engine emulating all N servers itself.
     server_rank: Optional[int] = None
+    # --- superstep checkpointing + fault tolerance (DESIGN.md §12) ---
+    # directory for superstep-boundary checkpoints (core.checkpoint); None
+    # disables checkpointing entirely
+    checkpoint_dir: Optional[str] = None
+    # save every K superstep boundaries (rank 0 / classic engine only);
+    # 0 = no periodic saves (still saves on preemption + run completion)
+    checkpoint_every: int = 0
+    checkpoint_keep: int = 2
+    # resume from the latest checkpoint in checkpoint_dir: adopt its tile
+    # assignment (remapped via elastic.remap_assignment when num_servers
+    # changed — the mid-run N->M resize path) and continue from the saved
+    # superstep boundary; bit-identical to the uninterrupted run
+    resume: bool = False
+    # latch SIGTERM/SIGINT at the BSP barrier: save a checkpoint and raise
+    # runtime.ft.Preempted instead of dying mid-superstep (spot reclaim);
+    # requires checkpoint_dir
+    preemptible: bool = False
+    # deterministic fault injection (runtime.faults.FaultPlan) — test-only;
+    # arms engine sites "superstep"/"barrier", the ckpt.* save sites, and
+    # (in cluster launches) "transport.send"
+    fault_plan: Optional[FaultPlan] = None
 
 
 @dataclasses.dataclass
@@ -238,6 +263,15 @@ class OutOfCoreEngine:
                 "a ClusterExchange needs exactly one executed server per "
                 "process — set cfg.server_rank (or num_servers=1)")
 
+        # --- checkpointing + fault injection (DESIGN.md §12) ---
+        #: per-process arm of cfg.fault_plan (None = no injection)
+        self.fault = (config.fault_plan.injector(rank=config.server_rank)
+                      if config.fault_plan is not None else None)
+        #: the run's GraphCheckpointer (None = checkpointing disabled)
+        self.ckpt: Optional[GraphCheckpointer] = None
+        self._guard: Optional[PreemptionGuard] = None
+        self.configure_checkpoint(config.checkpoint_dir)
+
         # Per-server edge caches (paper: idle memory on each server);
         # only the servers this process executes get one.
         if config.cache_mode == "auto":
@@ -282,6 +316,104 @@ class OutOfCoreEngine:
         self._vs_spill_cum = 0
 
     # ------------------------------------------------------------------
+    # superstep checkpointing + crash-consistent resume (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def configure_checkpoint(self, directory: Optional[str]) -> None:
+        """(Re)point the engine at a checkpoint directory — called from
+        ``__init__`` and per program by the cluster server (multi-program
+        launches use per-program subdirectories).
+
+        With ``cfg.resume`` and an existing checkpoint, adopts the saved
+        per-server tile assignment *now* (engine construction order needs
+        the assignment before the ClusterExchange exists): verbatim when
+        the saved server count matches ``cfg.num_servers``, else remapped
+        through ``elastic.remap_assignment`` — the mid-run N->M elastic
+        resize.  All ranks derive the identical assignment from the same
+        replicated manifest."""
+        if directory is None:
+            self.ckpt = None
+            return
+        self.ckpt = GraphCheckpointer(directory, keep=self.cfg.checkpoint_keep,
+                                      fault=self.fault)
+        if not self.cfg.resume:
+            return
+        peek = self.ckpt.peek_manifest()
+        if peek is None:
+            return
+        saved = peek[1].get("assignment")
+        if not saved:
+            return
+        n = self.cfg.num_servers
+        if len(saved) == n:
+            self.assignment = [list(map(int, a)) for a in saved]
+        else:
+            self.assignment = remap_assignment(
+                [list(map(int, a)) for a in saved], n,
+                self.plan.edges_per_tile)
+
+    def _save_boundary(self, ss: int, *, values, aux_np, vstore, active_q,
+                       final_values, per_query_ss, updated_ids, multi_q,
+                       nq_total) -> None:
+        """Write the superstep-``ss+1`` boundary checkpoint: manifest
+        (resume point, live queries, replicated assignment) + state leaves;
+        ooc runs flush vertex state as interval blocks instead of leaves
+        (dirty blocks only — clean ones hardlink, see core.checkpoint)."""
+        cfg = self.cfg
+        manifest = dict(
+            superstep=ss + 1,
+            final=False,
+            converged=False,
+            multi_q=bool(multi_q),
+            nq_total=int(nq_total),
+            num_servers=int(cfg.num_servers),
+            assignment=[[int(t) for t in a] for a in self.assignment],
+            active_q=([int(g) for g in active_q] if multi_q else None),
+        )
+        state: dict = {"updated_ids": np.asarray(updated_ids, np.int64)}
+        if multi_q:
+            state["final_values"] = final_values
+            state["per_query_ss"] = per_query_ss
+        if vstore is None:
+            state["values"] = values
+            state["aux"] = aux_np
+        self.ckpt.save_graph(ss + 1, state, manifest, vstore=vstore)
+
+    def _save_final(self, values, aux_np, per_query_ss, converged,
+                    supersteps: int) -> None:
+        """Publish the run's result as a ``final`` checkpoint (step =
+        supersteps + 1, strictly after every boundary save, so LATEST
+        lands on it): a supervised restart then skips this program
+        entirely instead of recomputing it."""
+        manifest = dict(
+            superstep=int(supersteps),
+            final=True,
+            converged=bool(converged),
+            supersteps=int(supersteps),
+            multi_q=per_query_ss is not None,
+            num_servers=int(self.cfg.num_servers),
+            assignment=[[int(t) for t in a] for a in self.assignment],
+        )
+        state: dict = {"values": values, "aux": aux_np}
+        if per_query_ss is not None:
+            state["per_query_ss"] = per_query_ss
+        self.ckpt.save_graph(int(supersteps) + 1, state, manifest)
+
+    @staticmethod
+    def _result_from_final(loaded) -> RunResult:
+        """RunResult reconstructed from a ``final`` checkpoint (resumed
+        after the run already completed; history is gone — only the
+        answers and convergence metadata persist)."""
+        m, st = loaded.manifest, loaded.state
+        pq = (np.asarray(st["per_query_ss"]) if "per_query_ss" in st
+              else None)
+        return RunResult(
+            values=np.asarray(st["values"]),
+            aux={k: np.asarray(v) for k, v in st.get("aux", {}).items()},
+            history=[], supersteps=int(m.get("supersteps", m["superstep"])),
+            converged=bool(m.get("converged", False)),
+            per_query_supersteps=pq)
+
+    # ------------------------------------------------------------------
     @staticmethod
     def _split_updates(rows, new, upd):
         """Per-tile (or per-server) update extraction, shape-polymorphic.
@@ -298,7 +430,27 @@ class OutOfCoreEngine:
             max_supersteps: Optional[int] = None) -> RunResult:
         """Run ``prog`` to convergence (no updated cells cluster-wide) or
         ``max_supersteps``.  Bit-identical across engine modes, cache
-        policies, pipelining, ooc vertex state, and cluster execution."""
+        policies, pipelining, ooc vertex state, cluster execution, and
+        crash/resume (DESIGN.md §12: resuming a checkpoint replays the
+        remaining supersteps to byte-identical values).
+
+        With ``cfg.preemptible`` + checkpointing, SIGTERM/SIGINT during
+        the run latch a flag; at the next BSP barrier the engine saves a
+        checkpoint and raises ``runtime.ft.Preempted``.  The prior signal
+        handlers are always restored, even on exceptions."""
+        guard = None
+        if self.cfg.preemptible and self.ckpt is not None:
+            guard = PreemptionGuard().install()
+        self._guard = guard
+        try:
+            return self._run_inner(prog, max_supersteps)
+        finally:
+            if guard is not None:
+                guard.restore()
+            self._guard = None
+
+    def _run_inner(self, prog: VertexProgram,
+                   max_supersteps: Optional[int] = None) -> RunResult:
         cfg = self.cfg
         nv = self.plan.num_vertices
         # Re-baseline the cumulative-counter deltas: a second run() on the
@@ -328,6 +480,33 @@ class OutOfCoreEngine:
         final_values = values.copy() if multi_q else None
         per_query_ss = np.full(nq_total, -1, dtype=np.int64) if multi_q else None
 
+        # --- crash-consistent resume (DESIGN.md §12): overwrite the fresh
+        # init with the latest checkpoint's state and continue from its
+        # superstep boundary.  A "final" checkpoint short-circuits: the run
+        # already completed, return its stored result (supervised restarts
+        # skip finished programs this way).
+        start_ss = 0
+        loaded = None
+        if self.ckpt is not None and cfg.resume:
+            loaded = self.ckpt.load_graph()
+        if loaded is not None and loaded.manifest.get("final"):
+            return self._result_from_final(loaded)
+        if loaded is not None:
+            m, st = loaded.manifest, loaded.state
+            start_ss = int(m["superstep"])
+            if loaded.vstate:
+                values = np.asarray(loaded.vstate["value"])
+                aux_np = {k: np.asarray(v)
+                          for k, v in loaded.vstate.items() if k != "value"}
+            else:
+                values = np.asarray(st["values"])
+                aux_np = {k: np.asarray(v)
+                          for k, v in st.get("aux", {}).items()}
+            if multi_q:
+                active_q = np.asarray(m["active_q"], dtype=np.int64)
+                final_values = np.asarray(st["final_values"])
+                per_query_ss = np.asarray(st["per_query_ss"], dtype=np.int64)
+
         # --- out-of-core vertex state (DESIGN.md §10) ---
         # With a vertex memory budget, the [V(, Q)] value/aux arrays move
         # into an interval-sharded VertexStateStore and the full arrays are
@@ -352,11 +531,18 @@ class OutOfCoreEngine:
         max_ss = max_supersteps or cfg.max_supersteps
         history: list[SuperstepStats] = []
         updated_ids = np.arange(nv)   # everything "updated" before step 0
+        if loaded is not None:
+            # the skip pre-pass keys off the last superstep's update set —
+            # part of the boundary state (filters are rebuilt lazily; they
+            # have no false negatives, so a missing filter only costs work)
+            updated_ids = np.asarray(loaded.state["updated_ids"], np.int64)
         building_filters = cfg.tile_skipping
         filters: list = [None] * self.plan.num_tiles if building_filters else []
 
         converged = False
-        for ss in range(max_ss):
+        for ss in range(start_ss, max_ss):
+            if self.fault is not None:
+                self.fault.check("superstep", ss)
             t_start = time.perf_counter()
             values_dev = None if ooc else jnp.asarray(values)
             load_s = 0.0
@@ -528,6 +714,8 @@ class OutOfCoreEngine:
                 building_filters = False
 
             # --- Broadcast (BSP barrier): measure payloads, apply updates ---
+            if self.fault is not None:
+                self.fault.check("barrier", ss)
             raw_b = wire_b = 0
             if self.exchange is not None:
                 # cluster mode (DESIGN.md §11): ship this server's updates
@@ -703,12 +891,29 @@ class OutOfCoreEngine:
                 vstate_spill_bytes=vs_spill,
                 vstate_dirty_intervals=dirty_ivs,
             ))
-            if multi_q:
-                if len(active_q) == 0:
-                    converged = True
-                    break
-            elif len(all_idx) == 0:
-                converged = True
+            converged = (len(active_q) == 0 if multi_q else len(all_idx) == 0)
+
+            # --- superstep-boundary checkpoint + preemption (DESIGN.md §12)
+            # Written AFTER update apply + retirement — this boundary's
+            # state is exactly what superstep ss+1 starts from.  State is
+            # fully replicated, so rank 0 is the single periodic writer; a
+            # preempted rank may also save (collision-safe publish).
+            if self.ckpt is not None and not converged:
+                due = (cfg.checkpoint_every > 0
+                       and (ss + 1) % cfg.checkpoint_every == 0
+                       and cfg.server_rank in (None, 0))
+                preempt = self._guard is not None and self._guard.triggered
+                if due or preempt:
+                    self._save_boundary(
+                        ss, values=values, aux_np=aux_np, vstore=vstore,
+                        active_q=active_q, final_values=final_values,
+                        per_query_ss=per_query_ss, updated_ids=updated_ids,
+                        multi_q=multi_q, nq_total=nq_total)
+                if preempt:
+                    if ooc:
+                        vstore.close()
+                    raise Preempted(ss + 1)
+            if converged:
                 break
 
         if multi_q:
@@ -725,8 +930,15 @@ class OutOfCoreEngine:
             aux_np = {n: vstore.materialize(n) for n in vstore.names()
                       if n != "value"}
             vstore.close()
+        # supersteps counts GLOBALLY (resume continues the numbering, so a
+        # resumed run reports the same count as the uninterrupted one even
+        # though its history holds only the post-resume entries)
+        supersteps = start_ss + len(history)
+        if self.ckpt is not None and cfg.server_rank in (None, 0):
+            self._save_final(values, aux_np, per_query_ss, converged,
+                             supersteps)
         return RunResult(values=values, aux=aux_np, history=history,
-                         supersteps=len(history), converged=converged,
+                         supersteps=supersteps, converged=converged,
                          per_query_supersteps=per_query_ss)
 
     # ------------------------------------------------------------------

@@ -89,6 +89,10 @@ class _Block:
     arr: Optional[np.ndarray] = None
     blob: Optional[bytes] = None
     file_ok: bool = False
+    #: content version — bumped on every mutation (write_block /
+    #: compact_columns).  The graph checkpointer keys its incremental
+    #: "unchanged block -> hardlink" decision on this counter.
+    version: int = 0
 
     @property
     def raw_bytes(self) -> int:
@@ -213,6 +217,7 @@ class VertexStateStore:
             b.arr = np.ascontiguousarray(arr)
             b.blob = None
             b.file_ok = False
+            b.version += 1
             self._mem += b.mem_bytes()
             self._blocks.move_to_end((name, k))
             self.stats.dirty_writebacks += 1
@@ -240,8 +245,33 @@ class VertexStateStore:
                     b.shape = b.arr.shape
                     b.blob = None
                     b.file_ok = False
+                    b.version += 1
                     self._mem += b.mem_bytes()
             self._enforce_budget()
+
+    # -- checkpoint support (DESIGN.md §12) ----------------------------------
+    def block_version(self, name: str, k: int) -> int:
+        """Content version of one block — bumped on every mutation, so an
+        unchanged version between two checkpoints means identical bytes
+        (the checkpointer then hardlinks instead of re-serializing)."""
+        with self._lock:
+            return self._blocks[(name, k)].version
+
+    def export_block(self, name: str, k: int) -> tuple[int, bytes]:
+        """(compression mode, blob) for one block, reusing the *coldest
+        already-current* representation — a clean spilled block's file
+        bytes ship as-is (no recompression), a warm blob ships as-is,
+        and only a dirty hot block pays one warm-mode compression.  Pure
+        read: block state, tiers and budget accounting are untouched."""
+        with self._lock:
+            b = self._blocks[(name, k)]
+            if b.file_ok:
+                with open(self._path(b), "rb") as f:
+                    return COLD_MODE, f.read()
+            if b.blob is not None:
+                return WARM_MODE, b.blob
+            assert b.arr is not None, f"block {(name, k)} has no representation"
+            return WARM_MODE, formats.compress_blob(b.arr.tobytes(), WARM_MODE)
 
     # -- introspection -------------------------------------------------------
     def resident_bytes(self) -> int:

@@ -55,8 +55,30 @@ class ClusterConfig:
     launch_timeout_seconds: float = 900.0
     #: JAX platform forced into the server processes (None = inherit)
     jax_platforms: Optional[str] = "cpu"
+    #: what to do when a rank dies or is preempted mid-run (DESIGN.md §12):
+    #: "fail" = raise ClusterFailure; "restart" = tear down, respawn the
+    #: same N resuming from the latest checkpoint; "shrink" = respawn with
+    #: N - dead servers (elastic resize at the superstep boundary)
+    on_failure: str = "fail"
+    #: supervised restart budget before giving up and re-raising
+    max_restarts: int = 2
     #: engine template; num_servers/server_rank are overridden per rank
     engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+
+
+class ClusterFailure(RuntimeError):
+    """A cluster attempt died: one or more ranks failed, were killed, or
+    were preempted.  Carries enough forensics for supervision (and tests):
+    ``dead_ranks``, ``pids`` (of every spawned rank, dead or reaped), and
+    ``preempted`` (True when the rank saved a checkpoint and exited
+    cleanly on SIGTERM rather than crashing)."""
+
+    def __init__(self, message: str, dead_ranks=(), pids=(),
+                 preempted: bool = False):
+        super().__init__(message)
+        self.dead_ranks = list(dead_ranks)
+        self.pids = list(pids)
+        self.preempted = preempted
 
 
 @dataclasses.dataclass
@@ -69,6 +91,11 @@ class ClusterResult:
     # returned result (run_cluster RAISES on divergence), kept so callers
     # can assert the invariant explicitly
     verified: bool
+    #: supervised restarts consumed before this result was produced
+    restarts: int = 0
+    #: server count of the attempt that finished (< num_servers after a
+    #: shrink resize)
+    final_servers: int = 0
 
     def wire_bytes_per_superstep(self, app_index: int = 0) -> list:
         """Cluster-total measured wire bytes per superstep for one app."""
@@ -84,20 +111,30 @@ def _server_main(rank: int, store_root: str, cfg: ClusterConfig,
     from repro.core import transport as transport_mod
     from repro.core.distributed import ClusterExchange
     from repro.graphio.formats import TileStore
+    from repro.runtime.ft import Preempted
 
     transport = None
     exchange = None
     try:
         store = TileStore(store_root)
         store.load_meta()
+        # checkpoints go to per-program subdirectories (configured below,
+        # after resume can remap the assignment but before the exchange
+        # snapshot), so the engine ctor must not claim the shared root
         ecfg = dataclasses.replace(
-            cfg.engine, num_servers=cfg.num_servers, server_rank=rank)
+            cfg.engine, num_servers=cfg.num_servers, server_rank=rank,
+            checkpoint_dir=None)
         if cfg.steal and ecfg.engine_mode != "tiled":
             raise ValueError("tile stealing requires engine_mode='tiled' "
                              "(stacked/merged pin tiles to devices)")
         eng = OutOfCoreEngine(store, ecfg)
         transport = transport_mod.make_transport(
             cfg.transport, rank, cfg.num_servers, run_dir)
+        if eng.fault is not None:
+            # same injector instance as the engine's sites, so once-specs
+            # share one claim namespace per rank
+            transport = transport_mod.FaultInjectingTransport(
+                transport, eng.fault)
         exchange = ClusterExchange(
             transport, comm_mode=ecfg.comm_mode,
             compressor=ecfg.comm_compressor, threshold=ecfg.comm_threshold,
@@ -108,7 +145,13 @@ def _server_main(rank: int, store_root: str, cfg: ClusterConfig,
         eng.exchange = exchange
         results = []
         t0 = time.perf_counter()
-        for prog in progs:
+        for i, prog in enumerate(progs):
+            if cfg.engine.checkpoint_dir:
+                eng.configure_checkpoint(
+                    os.path.join(cfg.engine.checkpoint_dir, f"prog_{i:02d}"))
+                # resume may have adopted a remapped assignment (elastic
+                # N->M resize); refresh the exchange's snapshot
+                exchange.assignment = [list(a) for a in eng.assignment]
             results.append(eng.run(prog))
         report = dict(
             rank=rank,
@@ -121,6 +164,14 @@ def _server_main(rank: int, store_root: str, cfg: ClusterConfig,
             final_assignment=[list(a) for a in eng.assignment],
         )
         conn.send(("ok", results, report))
+    except Preempted as e:
+        # state is saved (the engine checkpointed before raising): report
+        # the resume boundary and exit cleanly so supervision can resume
+        try:
+            conn.send(("preempted", e.superstep, dict(rank=rank)))
+        except (OSError, ValueError):
+            pass
+        raise SystemExit(0)
     except BaseException:
         try:
             conn.send(("error", traceback.format_exc(), None))
@@ -135,25 +186,31 @@ def _server_main(rank: int, store_root: str, cfg: ClusterConfig,
         conn.close()
 
 
-def run_cluster(store_root: str, progs: list,
-                cfg: ClusterConfig = ClusterConfig(),
-                run_dir: Optional[str] = None,
-                keep_run_dir: bool = False) -> ClusterResult:
-    """Run ``progs`` (VertexProgram instances) on an N-server cluster over
-    the tile store at ``store_root``.
+def _teardown(procs) -> None:
+    """Bounded-time teardown: terminate, then escalate to SIGKILL.
 
-    The parent creates the rendezvous directory (+ shared-memory ring
-    files for the shm transport), spawns the N server processes, collects
-    each rank's results, verifies the final value arrays are bit-identical
-    across ranks (divergence RAISES — a divergent cluster run is a wrong
-    answer, never a degraded one), and returns rank 0's results with
-    per-rank wire/steal reports.  Any rank failure tears down the whole
-    cluster with that rank's traceback."""
+    A rank blocked inside a transport recv can ignore SIGTERM for the
+    socket timeout; the kill escalation guarantees no child outlives the
+    parent by more than ~10s and none leaks."""
+    for p in procs:
+        if p.is_alive():
+            p.terminate()
+    for p in procs:
+        p.join(timeout=5.0)
+    for p in procs:
+        if p.is_alive():
+            p.kill()
+            p.join(timeout=5.0)
+
+
+def _run_attempt(store_root: str, progs: list, cfg: ClusterConfig,
+                 run_dir: str) -> ClusterResult:
+    """One supervised attempt: spawn N ranks, collect results, raise
+    ClusterFailure (after bounded teardown) when any rank dies, errors,
+    or reports preemption."""
     from repro.core import transport as transport_mod
 
     n = cfg.num_servers
-    own_dir = run_dir is None
-    run_dir = run_dir or tempfile.mkdtemp(prefix="graphh_cluster_")
     if cfg.transport == "shm":
         transport_mod.create_ring_files(run_dir, n, cfg.ring_capacity)
 
@@ -180,6 +237,7 @@ def run_cluster(store_root: str, progs: list,
             else:
                 os.environ[k] = v
 
+        pids = [p.pid for p in procs]
         deadline = time.monotonic() + cfg.launch_timeout_seconds
         payloads: list = [None] * n
         pending = set(range(n))
@@ -189,31 +247,34 @@ def run_cluster(store_root: str, progs: list,
                     try:
                         payloads[r] = conns[r].recv()
                     except EOFError:
-                        raise RuntimeError(
+                        raise ClusterFailure(
                             f"cluster server {r} died (exit code "
-                            f"{procs[r].exitcode}) without reporting")
+                            f"{procs[r].exitcode}) without reporting",
+                            dead_ranks=[r], pids=pids)
                     pending.discard(r)
                     if payloads[r][0] == "error":
                         # fail fast: peers are now blocked on this rank's
                         # missing frames; the finally below reaps them
-                        raise RuntimeError(
-                            f"cluster server {r} failed:\n{payloads[r][1]}")
+                        raise ClusterFailure(
+                            f"cluster server {r} failed:\n{payloads[r][1]}",
+                            dead_ranks=[r], pids=pids)
+                    if payloads[r][0] == "preempted":
+                        raise ClusterFailure(
+                            f"cluster server {r} preempted; checkpoint "
+                            f"saved at superstep boundary {payloads[r][1]}",
+                            dead_ranks=[r], pids=pids, preempted=True)
                 elif not procs[r].is_alive() and not conns[r].poll(0.1):
-                    raise RuntimeError(
+                    raise ClusterFailure(
                         f"cluster server {r} died (exit code "
-                        f"{procs[r].exitcode}) without reporting")
+                        f"{procs[r].exitcode}) without reporting",
+                        dead_ranks=[r], pids=pids)
             if time.monotonic() > deadline:
                 raise TimeoutError(
                     f"cluster launch timed out; pending ranks {sorted(pending)}")
         for p in procs:
             p.join(timeout=30.0)
     finally:
-        for p in procs:
-            if p.is_alive():
-                p.terminate()
-                p.join(timeout=5.0)
-        if own_dir and not keep_run_dir:
-            shutil.rmtree(run_dir, ignore_errors=True)
+        _teardown(procs)
 
     all_results = [payloads[r][1] for r in range(n)]
     reports = [payloads[r][2] for r in range(n)]
@@ -226,7 +287,63 @@ def run_cluster(store_root: str, progs: list,
             f"(app index, rank): {diverged}; this is a wrong answer, not "
             "a degraded one (transport/decode bug or broken hardware)")
     return ClusterResult(results=all_results[0], rank_reports=reports,
-                         verified=True)
+                         verified=True, final_servers=n)
+
+
+def run_cluster(store_root: str, progs: list,
+                cfg: ClusterConfig = ClusterConfig(),
+                run_dir: Optional[str] = None,
+                keep_run_dir: bool = False) -> ClusterResult:
+    """Run ``progs`` (VertexProgram instances) on an N-server cluster over
+    the tile store at ``store_root``.
+
+    The parent creates the rendezvous directory (+ shared-memory ring
+    files for the shm transport), spawns the N server processes, collects
+    each rank's results, verifies the final value arrays are bit-identical
+    across ranks (divergence RAISES — a divergent cluster run is a wrong
+    answer, never a degraded one), and returns rank 0's results with
+    per-rank wire/steal reports.
+
+    Failure handling follows ``cfg.on_failure`` (DESIGN.md §12): with
+    ``"fail"`` any rank failure tears the cluster down and raises
+    ClusterFailure with that rank's traceback; ``"restart"`` respawns the
+    same N (resuming from the latest checkpoint when
+    ``cfg.engine.checkpoint_dir`` is set — otherwise a clean rerun, which
+    is equally bit-identical, just slower); ``"shrink"`` respawns with
+    ``N - dead`` servers, remapping the checkpointed assignment at the
+    superstep boundary (elastic resize).  Each attempt gets a fresh
+    rendezvous subdirectory — stale ring frames from a killed attempt
+    must never be replayed into the next."""
+    base_dir = run_dir or tempfile.mkdtemp(prefix="graphh_cluster_")
+    own_dir = run_dir is None
+    acfg = cfg
+    restarts = 0
+    try:
+        while True:
+            attempt_dir = os.path.join(base_dir, f"attempt_{restarts:02d}")
+            os.makedirs(attempt_dir, exist_ok=True)
+            try:
+                res = _run_attempt(store_root, progs, acfg, attempt_dir)
+                res.restarts = restarts
+                return res
+            except ClusterFailure as e:
+                if (cfg.on_failure not in ("restart", "shrink")
+                        or restarts >= cfg.max_restarts):
+                    raise
+                restarts += 1
+                new_n = acfg.num_servers
+                if cfg.on_failure == "shrink":
+                    new_n = max(1, acfg.num_servers -
+                                len(set(e.dead_ranks)))
+                # resume only works with a checkpoint directory; without
+                # one the restart is a clean rerun from superstep 0
+                resume = bool(acfg.engine.checkpoint_dir)
+                acfg = dataclasses.replace(
+                    acfg, num_servers=new_n,
+                    engine=dataclasses.replace(acfg.engine, resume=resume))
+    finally:
+        if own_dir and not keep_run_dir:
+            shutil.rmtree(base_dir, ignore_errors=True)
 
 
 def _build_progs(args) -> list:
@@ -291,6 +408,38 @@ def main(argv=None) -> ClusterResult:
     ap.add_argument("--seeds", default=None)
     ap.add_argument("--vertex-memory-budget", type=float, default=None,
                     metavar="MB")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for superstep checkpoints (shared by "
+                         "all ranks; enables --resume and supervised "
+                         "restart, DESIGN.md §12)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="write a checkpoint every K superstep boundaries "
+                         "(0 = final checkpoint only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir (bit-identical to the "
+                         "uninterrupted run; N may differ from the saved "
+                         "run — the assignment is remapped)")
+    ap.add_argument("--preemptible", action="store_true",
+                    help="SIGTERM => checkpoint at the next superstep "
+                         "boundary and exit cleanly for later --resume")
+    ap.add_argument("--on-failure", default="fail",
+                    choices=["fail", "restart", "shrink"],
+                    help="rank-death policy: fail fast, restart same N "
+                         "from the latest checkpoint, or shrink to the "
+                         "survivors (elastic resize)")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    ap.add_argument("--inject", action="append", default=None,
+                    metavar="SPEC",
+                    help="fault-injection spec, repeatable: e.g. "
+                         "'rank=1,superstep=2,site=superstep,kind=kill' "
+                         "(runtime.faults.parse_spec); once-markers "
+                         "persist under --checkpoint-dir so a fault does "
+                         "not re-fire after a supervised restart")
+    ap.add_argument("--verify-clean", action="store_true",
+                    help="after the (possibly faulted/restarted) cluster "
+                         "run, re-run uninterrupted in-process and fail "
+                         "unless the answers are byte-for-byte identical")
     args = ap.parse_args(argv)
 
     if args.reuse and args.store:
@@ -298,6 +447,16 @@ def main(argv=None) -> ClusterResult:
         store.load_meta()
     else:
         store = build_store(args)
+
+    fault_plan = None
+    if args.inject:
+        from repro.runtime import faults
+
+        marker_dir = None
+        if args.checkpoint_dir:
+            marker_dir = os.path.join(args.checkpoint_dir, "fault_markers")
+            os.makedirs(marker_dir, exist_ok=True)
+        fault_plan = faults.parse_plan(args.inject, marker_dir=marker_dir)
 
     ecfg = EngineConfig(
         comm_mode=args.comm_mode,
@@ -316,9 +475,15 @@ def main(argv=None) -> ClusterResult:
                               else int(args.vertex_memory_budget * 1e6)),
         num_intervals=args.num_intervals,
         interval_aware_order=not args.no_interval_order,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
+        preemptible=args.preemptible,
+        fault_plan=fault_plan,
     )
     cfg = ClusterConfig(num_servers=args.servers, transport=args.transport,
-                        steal=args.steal, engine=ecfg)
+                        steal=args.steal, on_failure=args.on_failure,
+                        max_restarts=args.max_restarts, engine=ecfg)
     progs = _build_progs(args)
     t0 = time.time()
     out = run_cluster(store.root, progs, cfg)
@@ -329,7 +494,22 @@ def main(argv=None) -> ClusterResult:
     print(f"{args.app} x{args.servers} servers [{args.transport}"
           f"{', steal' if args.steal else ''}]: {res.supersteps} supersteps "
           f"in {dt:.1f}s (converged={res.converged}, "
-          f"bit-identical across ranks={out.verified})")
+          f"bit-identical across ranks={out.verified}"
+          + (f", {out.restarts} restarts -> {out.final_servers} servers"
+             if out.restarts else "") + ")")
+    if args.verify_clean:
+        clean_cfg = dataclasses.replace(
+            ecfg, num_servers=args.servers, server_rank=None,
+            checkpoint_dir=None, checkpoint_every=0, resume=False,
+            preemptible=False, fault_plan=None)
+        clean_eng = OutOfCoreEngine(store, clean_cfg)
+        for i, prog in enumerate(_build_progs(args)):
+            clean = clean_eng.run(prog)
+            if not np.array_equal(clean.values, out.results[i].values):
+                raise SystemExit(
+                    f"verify-clean FAILED: app index {i} differs from the "
+                    "uninterrupted run")
+        print("  verify-clean: byte-identical to the uninterrupted run")
     print(f"  wire {wire / 1e6:.2f} MB total ({net / 1e6:.2f} MB on the "
           f"network at N-1 peers/server); per-superstep "
           f"{[h.wire_bytes for h in res.history[:8]]}{'...' if res.supersteps > 8 else ''}")

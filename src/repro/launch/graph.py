@@ -12,6 +12,7 @@ are bit-identical either way.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import tempfile
 import time
 
@@ -112,6 +113,31 @@ def main(argv=None):
     ap.add_argument("--steal", action="store_true",
                     help="cluster mode: cross-server tile stealing "
                          "between supersteps (runtime.scheduler)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="superstep-boundary checkpoints here "
+                         "(DESIGN.md §12); enables --resume")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint every K superstep boundaries "
+                         "(0 = final checkpoint only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint "
+                         "(bit-identical; --servers may differ from the "
+                         "saved run)")
+    ap.add_argument("--preemptible", action="store_true",
+                    help="SIGTERM => save at the next superstep boundary "
+                         "and exit for later --resume")
+    ap.add_argument("--on-failure", default="fail",
+                    choices=["fail", "restart", "shrink"],
+                    help="cluster mode: rank-death policy (restart/shrink "
+                         "resume from --checkpoint-dir)")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    ap.add_argument("--inject", action="append", default=None,
+                    metavar="SPEC",
+                    help="fault-injection spec (runtime.faults), "
+                         "repeatable — fault drills only")
+    ap.add_argument("--verify-clean", action="store_true",
+                    help="cluster mode: diff the run against an "
+                         "uninterrupted in-process rerun")
     args = ap.parse_args(argv)
 
     if args.cluster:
@@ -134,14 +160,24 @@ def main(argv=None):
                    "--stack-size", str(args.stack_size),
                    "--num-intervals", str(args.num_intervals),
                    "--disk-mode", str(args.disk_mode),
-                   "--seed", str(args.seed)]
+                   "--seed", str(args.seed),
+                   "--checkpoint-every", str(args.checkpoint_every),
+                   "--on-failure", args.on_failure,
+                   "--max-restarts", str(args.max_restarts)]
         for flag, on in (("--steal", args.steal),
                          ("--pipeline", args.pipeline),
                          ("--static-order", args.static_order),
                          ("--no-interval-order", args.no_interval_order),
-                         ("--reuse", args.reuse)):
+                         ("--reuse", args.reuse),
+                         ("--resume", args.resume),
+                         ("--preemptible", args.preemptible),
+                         ("--verify-clean", args.verify_clean)):
             if on:
                 cl_argv.append(flag)
+        if args.checkpoint_dir:
+            cl_argv += ["--checkpoint-dir", args.checkpoint_dir]
+        for spec in args.inject or ():
+            cl_argv += ["--inject", spec]
         if args.store:
             cl_argv += ["--store", args.store]
         if args.queries:
@@ -177,7 +213,16 @@ def main(argv=None):
                               else int(args.vertex_memory_budget * 1e6)),
         num_intervals=args.num_intervals,
         interval_aware_order=not args.no_interval_order,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
+        preemptible=args.preemptible,
     )
+    if args.inject:
+        from repro.runtime import faults
+
+        cfg = dataclasses.replace(cfg, fault_plan=faults.parse_plan(
+            args.inject))
     eng = OutOfCoreEngine(store, cfg)
     batched = args.app in ("ppr", "msbfs", "landmarks")
     if batched:
@@ -209,6 +254,13 @@ def main(argv=None):
               f"tile I/O {io/1e6:.1f} MB total = {io/q/1e6:.2f} MB/query, "
               f"{dt/q*1000:.0f} ms/query; per-query supersteps "
               f"{[s for _, s in retired]}")
+    if not res.history:
+        # --resume against a FINAL checkpoint short-circuits: the stored
+        # result is returned without executing a superstep, so there are
+        # no per-superstep stats to report.
+        print("  resumed a finished run from its final checkpoint "
+              "(no supersteps executed)")
+        return res
     h = res.history[-1]
     print(f"  cache hit ratio {h.cache_hit_ratio:.2f}, "
           f"net {sum(x.network_bytes for x in res.history)/1e6:.1f} MB total, "

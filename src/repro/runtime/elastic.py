@@ -77,3 +77,30 @@ def remap_assignment(old: list[list[int]], new_n: int,
         load[hi] -= int(edges[best])
         load[lo] += int(edges[best])
     return [sorted(ts) for ts in new]
+
+
+def handoff_plan(old: list[list[int]], new: list[list[int]],
+                 tile_bytes) -> dict:
+    """Account the data movement a resize implies (DESIGN.md §12).
+
+    For assignments ``old`` -> ``new`` over the same tile universe,
+    returns ``{"moves": [(tile, src_rank, dst_rank)], "bytes": total,
+    "per_dst_bytes": {dst_rank: bytes}}`` — one entry per tile whose
+    owner changed, costed by ``tile_bytes[tile]`` (on-disk tile bytes:
+    the new owner must fault the tile cold while survivors' unchanged
+    tiles ride their warm caches; vertex state is replicated, so tiles
+    are the only warmth that moves).  Tiles present only in ``new``
+    (never owned before) count as moves from src ``-1``."""
+    tile_bytes = np.asarray(tile_bytes, dtype=np.int64)
+    src = {t: s for s, ts in enumerate(old) for t in ts}
+    moves = []
+    per_dst: dict[int, int] = {}
+    for d, ts in enumerate(new):
+        for t in ts:
+            s = src.get(t, -1)
+            if s != d:
+                moves.append((int(t), s, d))
+                per_dst[d] = per_dst.get(d, 0) + int(tile_bytes[t])
+    return {"moves": moves,
+            "bytes": int(sum(int(tile_bytes[t]) for t, _s, _d in moves)),
+            "per_dst_bytes": per_dst}

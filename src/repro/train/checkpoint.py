@@ -18,6 +18,7 @@ case of that protocol (noted, not stubbed: the API takes shardings).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import re
@@ -64,45 +65,104 @@ def _unflatten(flat: dict):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, compress: bool = False):
+    """Atomic keep-last-k checkpoints (see module docstring).
+
+    ``fault`` optionally arms a ``runtime.faults.FaultInjector`` at the
+    named crash points inside the save path (``ckpt.mid_write`` between
+    leaves, ``ckpt.leaf`` on each leaf's bytes, ``ckpt.pre_rename``
+    before the publish rename, ``ckpt.latest`` on the LATEST tmp write,
+    ``ckpt.pre_latest`` before the LATEST replace) — the crash-atomicity
+    tests drive every one of them and assert a reader never observes a
+    torn checkpoint."""
+
+    def __init__(self, directory: str, keep: int = 3, compress: bool = False,
+                 fault=None):
         self.dir = directory
         self.keep = keep
         self.compress = compress
+        self.fault = fault
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, state, extra_meta: Optional[dict] = None) -> str:
+    def _check(self, site: str, step: int) -> None:
+        if self.fault is not None:
+            self.fault.check(site, step)
+
+    def _write_bytes(self, path: str, data: bytes, site: str,
+                     step: int) -> None:
+        """One file write, routed through the fault injector so a spec can
+        tear it (persist a prefix, then die) at a named point."""
+        if self.fault is not None:
+            self.fault.write(path, data, site, step)
+        else:
+            with open(path, "wb") as f:
+                f.write(data)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def _tmp_dir(self, step: int) -> str:
+        """Staging dir name.  ``.tmp`` never matches the ``step_(\\d+)``
+        reader regex, so a crash mid-stage leaves garbage, never a
+        half-readable checkpoint."""
+        return self._step_dir(step) + ".tmp"
+
+    def _stage(self, step: int, state, extra_meta: Optional[dict]
+               ) -> tuple[str, dict]:
+        """Write every leaf into a fresh staging dir; returns (tmp, meta).
+        Nothing is visible to readers until :meth:`_finalize` renames."""
         flat = _flatten(state)
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        tmp = final + ".tmp"
+        tmp = self._tmp_dir(step)
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         meta = {"step": step, "leaves": {}, "extra": extra_meta or {}}
         for path, leaf in flat.items():
+            self._check("ckpt.mid_write", step)
             arr = np.asarray(jax.device_get(leaf))
             meta["leaves"][path] = {"shape": list(arr.shape),
                                     "dtype": str(arr.dtype)}
             fn = os.path.join(tmp, path.replace("/", "_") + ".npy")
             if self.compress:
                 blob = zstd_compress(arr.tobytes(order="C"), level=3)
-                with open(fn + ".zst", "wb") as f:
-                    f.write(blob)
+                self._write_bytes(fn + ".zst", blob, "ckpt.leaf", step)
             else:
-                np.save(fn, arr)
+                bio = io.BytesIO()
+                np.save(bio, arr)
+                self._write_bytes(fn, bio.getvalue(), "ckpt.leaf", step)
+        return tmp, meta
+
+    def _finalize(self, step: int, tmp: str, meta: dict) -> str:
+        """Write meta.json, atomically publish the staged dir, repoint
+        LATEST, garbage-collect old checkpoints."""
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)                       # atomic publish
+        self._check("ckpt.pre_rename", step)
+        final = self._publish(step, tmp)
         self._write_latest(step)
         self._gc()
         return final
 
+    def _publish(self, step: int, tmp: str) -> str:
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                       # atomic publish
+        return final
+
+    def save(self, step: int, state, extra_meta: Optional[dict] = None) -> str:
+        """Write one checkpoint: stage every leaf, then atomically publish
+        (tmp-dir rename) and repoint LATEST.  Crash-safe at every point —
+        a reader sees either the previous checkpoint or this one, whole."""
+        tmp, meta = self._stage(step, state, extra_meta)
+        return self._finalize(step, tmp, meta)
+
     def _write_latest(self, step: int) -> None:
-        tmp = os.path.join(self.dir, "LATEST.tmp")
-        with open(tmp, "w") as f:
-            f.write(str(step))
+        # pid-suffixed tmp: concurrent writers (multi-rank graph saves)
+        # must not truncate each other's staging file mid-replace
+        tmp = os.path.join(self.dir, f"LATEST.tmp.{os.getpid()}")
+        self._write_bytes(tmp, str(step).encode(), "ckpt.latest", step)
+        self._check("ckpt.pre_latest", step)
         os.replace(tmp, os.path.join(self.dir, "LATEST"))
 
     def _gc(self) -> None:
@@ -123,9 +183,13 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         p = os.path.join(self.dir, "LATEST")
         if os.path.exists(p):
-            with open(p) as f:
-                s = int(f.read().strip())
-            if os.path.isdir(os.path.join(self.dir, f"step_{s:08d}")):
+            try:
+                with open(p) as f:
+                    s = int(f.read().strip())
+            except ValueError:
+                s = None    # unreadable pointer: fall back to the dir scan
+            if s is not None and os.path.isdir(
+                    os.path.join(self.dir, f"step_{s:08d}")):
                 return s
         steps = self.all_steps()
         return steps[-1] if steps else None

@@ -9,8 +9,10 @@ single-process engine for every app at N in {1, 2, 4}.  Covered two ways:
   * real spawned clusters through launch.cluster.run_cluster (slower; one
     launch per (N, store) amortizes process startup over all apps).
 """
+import os
 import tempfile
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -22,7 +24,8 @@ from repro.core.distributed import ClusterExchange
 from repro.core.engine import EngineConfig, OutOfCoreEngine
 from repro.graphio import spe
 from repro.graphio.formats import TileStore
-from repro.launch.cluster import ClusterConfig, run_cluster
+from repro.launch.cluster import ClusterConfig, ClusterFailure, run_cluster
+from repro.runtime.faults import FaultPlan, FaultSpec
 
 SS = 12   # superstep cap: keep runs cheap; parity must hold at any cap
 
@@ -218,6 +221,145 @@ def test_spawned_cluster_tcp_and_steal(stores):
         engine=EngineConfig(max_supersteps=SS)))
     assert out.verified
     assert np.array_equal(out.results[0].values, ref.values)
+
+
+# ---------------------------------------------------------------------------
+# Fault drills on real spawned clusters (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _assert_no_live_children(pids, grace=10.0):
+    """Every pid must be gone (teardown neither hangs nor leaks)."""
+    deadline = time.monotonic() + grace
+    for pid in pids:
+        while True:
+            try:
+                os.kill(pid, 0)
+            except (ProcessLookupError, PermissionError):
+                break       # dead (or reaped); PermissionError = not ours
+            assert time.monotonic() < deadline, f"child {pid} leaked"
+            time.sleep(0.1)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n", [2, 4])
+def test_spawned_cluster_sigkill_fail_fast(stores, n):
+    """SIGKILL a rank mid-superstep: the parent must notice within the
+    poll loop (not the transport timeout), raise ClusterFailure, and
+    reap every child in bounded time."""
+    unweighted, _ = stores
+    plan = FaultPlan(specs=(FaultSpec(site="superstep", superstep=2,
+                                      rank=1, kind="sigkill"),))
+    cfg = ClusterConfig(
+        num_servers=n, on_failure="fail",
+        engine=EngineConfig(max_supersteps=SS, fault_plan=plan),
+        timeout_seconds=60, launch_timeout_seconds=240)
+    t0 = time.monotonic()
+    with pytest.raises(ClusterFailure) as ei:
+        run_cluster(unweighted, [PageRank()], cfg)
+    assert time.monotonic() - t0 < 120          # bounded, not a hang
+    assert ei.value.dead_ranks == [1]
+    assert not ei.value.preempted
+    assert len(ei.value.pids) == n
+    _assert_no_live_children(ei.value.pids)
+
+
+@pytest.mark.slow
+def test_spawned_cluster_kill_restart_resume_bit_identical(stores, tmp_path):
+    """The tentpole acceptance drill: hard-kill rank 1 at superstep 4,
+    supervised restart resumes from the boundary checkpoint, and all six
+    apps still answer byte-for-byte like the uninterrupted run."""
+    for root, weighted in zip(stores, (False, True)):
+        progs = _apps_for(weighted)
+        refs = [_reference(root, p, 2) for p in progs]
+        ck = str(tmp_path / f"ck_{int(weighted)}")
+        # killing at superstep 4 guarantees the step-2 boundary published:
+        # rank 1 only reaches 4 after rank 0's superstep-3 frames, which
+        # are sent strictly after rank 0's boundary-2 save
+        plan = FaultPlan(
+            specs=(FaultSpec(site="superstep", superstep=4, rank=1,
+                             kind="kill"),),
+            marker_dir=str(tmp_path / f"mk_{int(weighted)}"))
+        cfg = ClusterConfig(
+            num_servers=2, on_failure="restart", max_restarts=2,
+            engine=EngineConfig(max_supersteps=SS, checkpoint_dir=ck,
+                                checkpoint_every=2, fault_plan=plan),
+            timeout_seconds=60, launch_timeout_seconds=600)
+        out = run_cluster(root, progs, cfg)
+        assert out.restarts == 1
+        assert out.final_servers == 2
+        assert out.verified
+        # prog 0 resumed mid-stream (its post-restart history is shorter
+        # than the global superstep count)
+        assert len(out.results[0].history) < out.results[0].supersteps
+        for a, p in enumerate(progs):
+            assert np.array_equal(out.results[a].values, refs[a].values), p
+            assert out.results[a].supersteps == refs[a].supersteps
+            assert out.results[a].converged == refs[a].converged
+
+
+@pytest.mark.slow
+def test_spawned_cluster_shrink_resize(stores, tmp_path):
+    """Elastic mid-run resize: kill a rank at N=4, supervision resumes
+    with the 3 survivors (remapped assignment), same answers."""
+    unweighted, _ = stores
+    ref = _reference(unweighted, PageRank(), 4)
+    plan = FaultPlan(
+        specs=(FaultSpec(site="superstep", superstep=4, rank=2,
+                         kind="kill"),),
+        marker_dir=str(tmp_path / "mk"))
+    cfg = ClusterConfig(
+        num_servers=4, on_failure="shrink", max_restarts=2,
+        engine=EngineConfig(max_supersteps=SS,
+                            checkpoint_dir=str(tmp_path / "ck"),
+                            checkpoint_every=2, fault_plan=plan),
+        timeout_seconds=60, launch_timeout_seconds=600)
+    out = run_cluster(unweighted, [PageRank()], cfg)
+    assert out.restarts == 1
+    assert out.final_servers == 3
+    assert np.array_equal(out.results[0].values, ref.values)
+    assert out.results[0].supersteps == ref.supersteps
+
+
+@pytest.mark.slow
+def test_spawned_cluster_preemption_saves_and_resumes(stores, tmp_path):
+    """Spot-reclaim drill: a SIGTERM'd (preemptible) rank checkpoints at
+    the barrier and exits cleanly; the restart resumes bit-identically —
+    no periodic checkpoints needed, the preemption save is the resume
+    point."""
+    unweighted, _ = stores
+    ref = _reference(unweighted, PageRank(), 2)
+    plan = FaultPlan(
+        specs=(FaultSpec(site="superstep", superstep=4, rank=0,
+                         kind="preempt"),),
+        marker_dir=str(tmp_path / "mk"))
+    cfg = ClusterConfig(
+        num_servers=2, on_failure="restart", max_restarts=2,
+        engine=EngineConfig(max_supersteps=SS,
+                            checkpoint_dir=str(tmp_path / "ck"),
+                            checkpoint_every=0, preemptible=True,
+                            fault_plan=plan),
+        timeout_seconds=60, launch_timeout_seconds=600)
+    out = run_cluster(unweighted, [PageRank()], cfg)
+    assert out.restarts == 1
+    # resumed exactly at the preemption boundary (superstep 5)
+    assert len(out.results[0].history) == out.results[0].supersteps - 5
+    assert np.array_equal(out.results[0].values, ref.values)
+    assert out.results[0].supersteps == ref.supersteps
+
+
+@pytest.mark.slow
+def test_spawned_cluster_fail_fast_exceeding_restart_budget(stores):
+    """A not-once fault that kills every attempt must exhaust
+    max_restarts and surface the ClusterFailure (never loop forever)."""
+    unweighted, _ = stores
+    plan = FaultPlan(specs=(FaultSpec(site="superstep", superstep=1,
+                                      rank=0, kind="kill", once=False),))
+    cfg = ClusterConfig(
+        num_servers=2, on_failure="restart", max_restarts=1,
+        engine=EngineConfig(max_supersteps=SS, fault_plan=plan),
+        timeout_seconds=60, launch_timeout_seconds=240)
+    with pytest.raises(ClusterFailure):
+        run_cluster(unweighted, [PageRank()], cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,523 @@
+"""Fault injection + crash-consistent superstep checkpointing (DESIGN.md §12).
+
+The acceptance property of the whole subsystem: **crash anywhere, resume,
+and get byte-for-byte the same answers as the uninterrupted run** — for
+every app, in-memory and ooc vertex state, single- and multi-rank, with
+hard kills and clean preemptions.  Cluster-process drills live in
+tests/test_cluster.py; everything here is in-process (fast, debuggable).
+"""
+import glob
+import os
+import signal
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see _hypothesis_compat
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.apps import (LandmarkDistances, MultiSourceBFS, PageRank,
+                             PersonalizedPageRank, SSSP, WCC)
+from repro.core.checkpoint import GraphCheckpointer
+from repro.core.engine import EngineConfig, OutOfCoreEngine
+from repro.core.vstate import VertexStateStore
+from repro.graphio import spe
+from repro.graphio.formats import TileStore
+from repro.runtime import faults
+from repro.runtime.elastic import handoff_plan, remap_assignment
+from repro.runtime.faults import FaultPlan, FaultSpec, InjectedFault
+from repro.runtime.ft import FaultTolerantLoop, Preempted
+
+SS = 12
+
+
+def _make_store(weighted, seed=7, nv=220, ne=1400, tile_size=96):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, nv, ne)
+    dst = rng.integers(0, nv, ne)
+    key = src * nv + dst
+    _, i = np.unique(key, return_index=True)
+    src, dst = src[i], dst[i]
+    val = (rng.uniform(0.1, 10.0, len(src)).astype(np.float32)
+           if weighted else None)
+    root = tempfile.mkdtemp(prefix=f"faults_store_{int(weighted)}_")
+    spe.preprocess_arrays(src, dst, val, nv, TileStore(root), tile_size)
+    return root
+
+
+@pytest.fixture(scope="module")
+def stores():
+    """(unweighted root, weighted root) shared by every test here."""
+    return _make_store(False), _make_store(True)
+
+
+def _run(root, prog, *, n=2, **cfg_kw):
+    eng = OutOfCoreEngine(TileStore(root), EngineConfig(
+        num_servers=n, max_supersteps=SS, **cfg_kw))
+    return eng.run(prog)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultInjector units
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_roundtrip():
+    s = faults.parse_spec("rank=1, superstep=2, site=superstep, kind=sigkill")
+    assert s == FaultSpec(site="superstep", superstep=2, rank=1,
+                          kind="sigkill")
+    s = faults.parse_spec("site=ckpt.leaf,kind=torn_write,keep_bytes=3,"
+                          "then=kill,once=false")
+    assert s.keep_bytes == 3 and s.then == "kill" and not s.once
+    with pytest.raises(ValueError, match="needs site"):
+        faults.parse_spec("kind=raise")
+    with pytest.raises(ValueError, match="unknown --inject key"):
+        faults.parse_spec("site=x,bogus=1")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.parse_spec("site=x,kind=meteor")
+    assert faults.parse_plan([]) is None
+    plan = faults.parse_plan(["site=a", "site=b,superstep=4"])
+    assert len(plan.specs) == 2
+
+
+def test_injector_matching_and_once():
+    plan = FaultPlan(specs=(FaultSpec(site="superstep", superstep=3, rank=1),))
+    inj = plan.injector(rank=0)
+    inj.check("superstep", 3)           # wrong rank: no fire
+    inj = plan.injector(rank=1)
+    inj.check("superstep", 2)           # wrong step: no fire
+    inj.check("barrier", 3)             # wrong site: no fire
+    with pytest.raises(InjectedFault):
+        inj.check("superstep", 3)
+    inj.check("superstep", 3)           # once=True: second pass is a no-op
+    assert inj.fired == [plan.specs[0].spec_id()]
+    # rank=None (classic engine) matches any rank spec
+    with pytest.raises(InjectedFault):
+        plan.injector().check("superstep", 3)
+
+
+def test_injector_once_marker_survives_restart(tmp_path):
+    """The marker claim must outlive the process: a respawned rank sharing
+    the marker_dir does not re-fire the same once-spec."""
+    plan = FaultPlan(specs=(FaultSpec(site="superstep", superstep=2),),
+                     marker_dir=str(tmp_path))
+    with pytest.raises(InjectedFault):
+        plan.injector(rank=0).check("superstep", 2)
+    # "restart": a fresh injector (fresh process in real life)
+    plan.injector(rank=0).check("superstep", 2)
+    assert glob.glob(str(tmp_path) + "/*.fired")
+
+
+def test_injector_torn_write_and_drop(tmp_path):
+    plan = FaultPlan(specs=(
+        FaultSpec(site="ckpt.leaf", kind="torn_write", keep_bytes=3),
+        FaultSpec(site="transport.send", superstep=5, kind="drop_frame"),
+    ))
+    inj = plan.injector()
+    # torn_write only fires through write(); check() must ignore it
+    inj.check("ckpt.leaf", 1)
+    p = str(tmp_path / "leaf.npy")
+    with pytest.raises(InjectedFault, match="torn write"):
+        inj.write(p, b"ABCDEFGH", "ckpt.leaf", 1)
+    with open(p, "rb") as f:
+        assert f.read() == b"ABC"       # the torn prefix really hit disk
+    # a clean write after the once-spec burned
+    inj.write(p, b"ABCDEFGH", "ckpt.leaf", 2)
+    with open(p, "rb") as f:
+        assert f.read() == b"ABCDEFGH"
+    assert inj.drop("transport.send", 4) is False
+    assert inj.drop("transport.send", 5) is True
+    assert inj.drop("transport.send", 5) is False   # once
+
+
+def test_injector_delay_and_preempt_kinds():
+    plan = FaultPlan(specs=(
+        FaultSpec(site="superstep", superstep=1, kind="delay",
+                  delay_seconds=0.01),
+    ))
+    plan.injector().check("superstep", 1)   # returns after the sleep
+    from repro.runtime.ft import PreemptionGuard
+
+    with PreemptionGuard() as g:
+        FaultPlan(specs=(FaultSpec(site="barrier", kind="preempt"),)) \
+            .injector().check("barrier", 0)
+        assert g.triggered
+
+
+def test_fault_injecting_transport_drop_and_kill():
+    from repro.core.transport import FaultInjectingTransport, _U32
+
+    sent = []
+
+    class Fake:
+        rank, n = 0, 2
+
+        def send(self, dst, payload, timeout=None):
+            sent.append((dst, payload))
+
+        def recv(self, timeout=0.1):
+            return (1, b"pong")
+
+        def close(self):
+            pass
+
+    plan = FaultPlan(specs=(
+        FaultSpec(site="transport.send", superstep=2, kind="drop_frame"),))
+    tr = FaultInjectingTransport(Fake(), plan.injector(rank=0))
+    tr.send(1, _U32.pack(1) + b"payload")       # seq 1 passes
+    tr.send(1, _U32.pack(2) + b"payload")       # seq 2 dropped on the wire
+    tr.send(1, _U32.pack(2) + b"payload")       # once => passes again
+    assert [p[:4] for _, p in sent] == [_U32.pack(1), _U32.pack(2)]
+    assert tr.recv() == (1, b"pong")
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# Crash + resume bit-identity (the tentpole acceptance bar)
+# ---------------------------------------------------------------------------
+
+def _factories(weighted):
+    if weighted:
+        return [lambda: SSSP(source=0),
+                lambda: LandmarkDistances(landmarks=(0, 9, 33))]
+    return [PageRank, WCC,
+            lambda: PersonalizedPageRank(seeds=(1, 7, 50)),
+            lambda: MultiSourceBFS(sources=(2, 11, 60))]
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_crash_resume_bit_identical_all_apps(stores, weighted, tmp_path):
+    """Inject a crash mid-run, resume from the boundary checkpoint, and
+    require byte-for-byte the answers of the uninterrupted run — every
+    app, emulated N=2."""
+    root = stores[int(weighted)]
+    for i, mk in enumerate(_factories(weighted)):
+        ref = _run(root, mk())
+        ck = str(tmp_path / f"ck_{int(weighted)}_{i}")
+        plan = FaultPlan(specs=(FaultSpec(site="superstep", superstep=3),))
+        with pytest.raises(InjectedFault):
+            _run(root, mk(), checkpoint_dir=ck, checkpoint_every=2,
+                 fault_plan=plan)
+        out = _run(root, mk(), checkpoint_dir=ck, resume=True)
+        assert np.array_equal(out.values, ref.values), mk()
+        assert out.supersteps == ref.supersteps
+        assert out.converged == ref.converged
+        if ref.per_query_supersteps is not None:
+            assert np.array_equal(out.per_query_supersteps,
+                                  ref.per_query_supersteps)
+        # the resumed run really continued mid-stream, not from scratch
+        assert len(out.history) < out.supersteps
+
+
+def test_crash_resume_ooc_vstate_and_final_skip(stores, tmp_path):
+    """Ooc vertex state round-trips through interval-block checkpoints
+    (budget-portable: resume uses a different budget), and resuming a
+    *finished* run short-circuits to the stored result."""
+    root = stores[0]
+    prog = lambda: PersonalizedPageRank(seeds=(1, 7, 50))  # noqa: E731
+    ref = _run(root, prog(), vertex_memory_budget=2000)
+    ck = str(tmp_path / "ooc")
+    plan = FaultPlan(specs=(FaultSpec(site="barrier", superstep=5),))
+    with pytest.raises(InjectedFault):
+        _run(root, prog(), vertex_memory_budget=2000, checkpoint_dir=ck,
+             checkpoint_every=2, fault_plan=plan)
+    # blocks/ payloads exist in the boundary checkpoint
+    steps = sorted(glob.glob(ck + "/step_*"))
+    assert steps and os.path.isdir(os.path.join(steps[0], "blocks"))
+    out = _run(root, prog(), vertex_memory_budget=4000, checkpoint_dir=ck,
+               resume=True)
+    assert np.array_equal(out.values, ref.values)
+    assert np.array_equal(out.per_query_supersteps, ref.per_query_supersteps)
+    # final checkpoint: a second resume returns the stored result directly
+    again = _run(root, prog(), vertex_memory_budget=2000, checkpoint_dir=ck,
+                 resume=True)
+    assert np.array_equal(again.values, ref.values)
+    assert again.supersteps == ref.supersteps
+    assert again.history == []
+
+
+def test_preemption_saves_and_resumes(stores, tmp_path):
+    """SIGTERM (via the preempt fault kind) => checkpoint at the next
+    barrier + Preempted; the handlers are restored and the resumed run is
+    bit-identical."""
+    root = stores[0]
+    ref = _run(root, PageRank(), n=1)
+    ck = str(tmp_path / "preempt")
+    plan = FaultPlan(specs=(FaultSpec(site="superstep", superstep=4,
+                                      kind="preempt"),))
+    before = signal.getsignal(signal.SIGTERM)
+    with pytest.raises(Preempted) as ei:
+        _run(root, PageRank(), n=1, checkpoint_dir=ck, preemptible=True,
+             fault_plan=plan)
+    assert ei.value.superstep == 5
+    assert signal.getsignal(signal.SIGTERM) is before
+    out = _run(root, PageRank(), n=1, checkpoint_dir=ck, resume=True)
+    assert np.array_equal(out.values, ref.values)
+    assert out.supersteps == ref.supersteps
+
+
+def test_resume_with_different_server_count(stores, tmp_path):
+    """Elastic N->M at the superstep boundary: checkpoint under emulated
+    N=4, resume under N=3 and N=5 — both bit-identical (replication means
+    no data handoff, only an assignment remap)."""
+    root = stores[1]
+    ref = _run(root, SSSP(source=0), n=4)
+    ck = str(tmp_path / "resize")
+    plan = FaultPlan(specs=(FaultSpec(site="superstep", superstep=4),))
+    with pytest.raises(InjectedFault):
+        _run(root, SSSP(source=0), n=4, checkpoint_dir=ck,
+             checkpoint_every=2, fault_plan=plan)
+    import shutil
+
+    for m in (3, 5):
+        # fresh copy per resize: the resumed run writes its own final
+        # checkpoint, which would short-circuit the next resume
+        ck_m = str(tmp_path / f"resize_{m}")
+        shutil.copytree(ck, ck_m)
+        res = OutOfCoreEngine(TileStore(root), EngineConfig(
+            num_servers=m, max_supersteps=SS, checkpoint_dir=ck_m,
+            resume=True, checkpoint_every=0))
+        # the resize really adopted a remapped M-way assignment
+        assert len(res.assignment) == m
+        assert sorted(t for a in res.assignment for t in a) == \
+            list(range(res.plan.num_tiles))
+        got = res.run(SSSP(source=0))
+        assert np.array_equal(got.values, ref.values), m
+        assert got.supersteps == ref.supersteps
+
+
+# ---------------------------------------------------------------------------
+# GraphCheckpointer: hardlink-incremental blocks, collision-safe publish
+# ---------------------------------------------------------------------------
+
+def _small_vstore():
+    vs = VertexStateStore(np.array([0, 4, 8, 12]))
+    vs.add_array("value", np.arange(12, dtype=np.float32))
+    vs.add_array("deg", np.ones((12, 2), dtype=np.int32))
+    return vs
+
+
+def test_graph_checkpointer_hardlinks_unchanged_blocks(tmp_path):
+    ck = GraphCheckpointer(str(tmp_path))
+    vs = _small_vstore()
+    d1 = ck.save_graph(1, {"updated_ids": np.arange(3)},
+                       {"superstep": 1, "assignment": [[0]]}, vstore=vs)
+    # dirty exactly one block; the rest must hardlink to the step-1 copies
+    vs.write_block("value", 1, np.full(4, 7.0, np.float32))
+    d2 = ck.save_graph(2, {"updated_ids": np.arange(3)},
+                       {"superstep": 2, "assignment": [[0]]}, vstore=vs)
+    changed = os.path.join(d2, "blocks", "value.1.blk")
+    unchanged = os.path.join(d2, "blocks", "value.0.blk")
+    assert os.stat(unchanged).st_ino == \
+        os.stat(os.path.join(d1, "blocks", "value.0.blk")).st_ino
+    assert os.stat(changed).st_ino != \
+        os.stat(os.path.join(d1, "blocks", "value.1.blk")).st_ino
+    # loader reassembles the mutated state exactly
+    got = ck.load_graph(2)
+    np.testing.assert_array_equal(
+        got.vstate["value"],
+        np.concatenate([np.arange(4), np.full(4, 7.0),
+                        np.arange(8, 12)]).astype(np.float32))
+    np.testing.assert_array_equal(got.vstate["deg"],
+                                  np.ones((12, 2), np.int32))
+    assert got.manifest["superstep"] == 2
+
+
+def test_graph_checkpointer_first_publish_wins(tmp_path):
+    """Two ranks saving the same superstep (preemption race): replicated
+    state makes the copies identical, so the loser silently discards."""
+    a = GraphCheckpointer(str(tmp_path))
+    b = GraphCheckpointer(str(tmp_path))
+    st = {"values": np.arange(5.0)}
+    man = {"superstep": 3, "assignment": [[0], [1]]}
+    a.save_graph(3, st, man)
+    b.save_graph(3, st, man)            # loses the publish, must not raise
+    assert a.all_steps() == [3]
+    assert not glob.glob(str(tmp_path) + "/*.tmp.*")
+    got = b.load_graph()
+    np.testing.assert_array_equal(got.state["values"], np.arange(5.0))
+    assert got.manifest["kind"] == "graphh-superstep"
+
+
+def test_peek_manifest_empty_and_populated(tmp_path):
+    ck = GraphCheckpointer(str(tmp_path))
+    assert ck.peek_manifest() is None
+    assert ck.load_graph() is None
+    ck.save_graph(4, {"values": np.zeros(2)},
+                  {"superstep": 4, "assignment": [[0, 1]]})
+    step, man = ck.peek_manifest()
+    assert step == 4 and man["assignment"] == [[0, 1]]
+
+
+# ---------------------------------------------------------------------------
+# Crash-atomicity: a reader never observes a torn graph checkpoint
+# ---------------------------------------------------------------------------
+
+GRAPH_SITES = ["ckpt.mid_write", "ckpt.leaf", "ckpt.block",
+               "ckpt.pre_rename", "ckpt.latest", "ckpt.pre_latest"]
+
+
+@settings(max_examples=24)
+@given(st.sampled_from(GRAPH_SITES), st.integers(0, 64),
+       st.sampled_from(["raise", "torn_write"]))
+def test_graph_checkpoint_crash_atomicity(site, keep_bytes, kind):
+    """Kill the writer at any staged-write/rename/pointer site — with the
+    write torn at an arbitrary byte — and the reader still sees the
+    previous complete checkpoint, bit-exact."""
+    if kind == "torn_write" and site in ("ckpt.mid_write", "ckpt.pre_rename",
+                                         "ckpt.pre_latest"):
+        return       # pure check() sites: nothing is mid-write there
+    with tempfile.TemporaryDirectory() as d:
+        base = GraphCheckpointer(d)
+        vs = _small_vstore()
+        state = {"updated_ids": np.arange(5), "x": np.eye(3)}
+        man = {"superstep": 2, "assignment": [[0], [1]]}
+        base.save_graph(2, state, man, vstore=vs)
+
+        plan = FaultPlan(specs=(FaultSpec(
+            site=site, kind=kind, keep_bytes=keep_bytes, superstep=4),))
+        wr = GraphCheckpointer(d, fault=plan.injector())
+        vs.write_block("value", 0, np.full(4, 9.0, np.float32))
+        try:
+            wr.save_graph(4, state, {"superstep": 4, "assignment": [[0, 1]]},
+                          vstore=vs)
+            crashed = False
+        except InjectedFault:
+            crashed = True
+        rd = GraphCheckpointer(d)
+        got = rd.load_graph()
+        assert got is not None
+        if crashed and site not in ("ckpt.latest", "ckpt.pre_latest"):
+            # the new step never published: reader sees the old one whole
+            assert got.step == 2
+            assert got.manifest["superstep"] == 2
+            np.testing.assert_array_equal(got.vstate["value"],
+                                          np.arange(12, dtype=np.float32))
+        else:
+            # published (crash only lost/tore the LATEST pointer update,
+            # which os.replace keeps atomic) — either step loads cleanly
+            assert got.step in (2, 4)
+            assert got.manifest["superstep"] == got.step
+        np.testing.assert_array_equal(got.state["x"], np.eye(3))
+
+
+def test_latest_pointer_crash_leaves_prior_resumable(tmp_path):
+    """Specifically: die between publishing step K and updating LATEST —
+    recovery resumes from the pointer's (older, fully committed) step."""
+    base = GraphCheckpointer(str(tmp_path))
+    base.save_graph(2, {"v": np.arange(3.0)}, {"superstep": 2,
+                                               "assignment": [[0]]})
+    plan = FaultPlan(specs=(FaultSpec(site="ckpt.pre_latest",
+                                      superstep=4),))
+    wr = GraphCheckpointer(str(tmp_path), fault=plan.injector())
+    with pytest.raises(InjectedFault):
+        wr.save_graph(4, {"v": np.arange(3.0) * 2}, {"superstep": 4,
+                                                     "assignment": [[0]]})
+    with open(str(tmp_path / "LATEST")) as f:
+        assert int(f.read()) == 2
+    rd = GraphCheckpointer(str(tmp_path))
+    assert rd.latest_step() == 2        # pointer wins: last committed
+    assert sorted(rd.all_steps()) == [2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Elastic remap + handoff accounting properties (satellite 4)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 40))
+def test_remap_assignment_properties(old_n, new_n, num_tiles):
+    """Every tile owned exactly once after any N->M remap; on shrink the
+    survivors keep all their tiles (warmth preservation); deterministic."""
+    rng = np.random.default_rng(old_n * 1000 + new_n * 40 + num_tiles)
+    edges = rng.integers(1, 100, num_tiles)
+    owner = rng.integers(0, old_n, num_tiles)
+    old = [sorted(np.flatnonzero(owner == s).tolist())
+           for s in range(old_n)]
+    new = remap_assignment(old, new_n, edges)
+    assert len(new) == new_n
+    flat = sorted(t for a in new for t in a)
+    assert flat == list(range(num_tiles))           # no tile lost or doubled
+    for s in range(min(old_n, new_n)):
+        assert set(old[s]) <= set(new[s]) or new_n > old_n
+    assert remap_assignment(old, new_n, edges) == new
+
+
+@settings(max_examples=30)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 40))
+def test_handoff_plan_accounting(old_n, new_n, num_tiles):
+    """Handoff bytes equal the sum over moved tiles, split per destination;
+    unmoved tiles contribute nothing."""
+    rng = np.random.default_rng(old_n + 7 * new_n + 13 * num_tiles)
+    tile_bytes = rng.integers(1, 1000, num_tiles)
+    edges = rng.integers(1, 100, num_tiles)
+    owner = rng.integers(0, old_n, num_tiles)
+    old = [sorted(np.flatnonzero(owner == s).tolist()) for s in range(old_n)]
+    new = remap_assignment(old, new_n, edges)
+    plan = handoff_plan(old, new, tile_bytes)
+    moved = {t for t, _s, _d in plan["moves"]}
+    stayed = set(range(num_tiles)) - moved
+    src = {t: s for s, ts in enumerate(old) for t in ts}
+    dst = {t: s for s, ts in enumerate(new) for t in ts}
+    for t in stayed:
+        assert src[t] == dst[t]
+    for t, s, d in plan["moves"]:
+        assert src.get(t, -1) == s and dst[t] == d and s != d
+    assert plan["bytes"] == sum(int(tile_bytes[t]) for t in moved)
+    assert plan["bytes"] == sum(plan["per_dst_bytes"].values())
+
+
+def test_remap_4_to_3_and_2_to_5_non_divisible():
+    """The two drills named in DESIGN.md §12: non-divisible shrink and
+    growth keep the partition exact and survivors warm."""
+    edges = np.arange(1, 14)[::-1]      # 13 tiles, uneven weights
+    old4 = [[0, 4, 8, 12], [1, 5, 9], [2, 6, 10], [3, 7, 11]]
+    new3 = remap_assignment(old4, 3, edges)
+    assert sorted(t for a in new3 for t in a) == list(range(13))
+    for s in range(3):
+        assert set(old4[s]) <= set(new3[s])
+    old2 = [[0, 2, 4, 6, 8, 10, 12], [1, 3, 5, 7, 9, 11]]
+    new5 = remap_assignment(old2, 5, edges)
+    assert sorted(t for a in new5 for t in a) == list(range(13))
+    assert all(len(a) > 0 for a in new5)        # growth absorbed work
+    plan = handoff_plan(old2, new5, np.full(13, 10))
+    assert plan["bytes"] == 10 * len({t for t, _, _ in plan["moves"]})
+
+
+# ---------------------------------------------------------------------------
+# runtime.ft: handler restoration regression (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_ftloop_context_manager_restores_handlers_on_raise(tmp_path):
+    """The regression: FaultTolerantLoop used to leak its SIGTERM/SIGINT
+    handlers when the training body raised, redirecting a later job's
+    signals into a dead object."""
+    from repro.train.checkpoint import CheckpointManager
+
+    def marker(signum, frame):  # pragma: no cover - never delivered
+        pass
+
+    prev_term = signal.signal(signal.SIGTERM, marker)
+    prev_int = signal.getsignal(signal.SIGINT)
+    try:
+        with pytest.raises(RuntimeError, match="boom"):
+            with FaultTolerantLoop(CheckpointManager(str(tmp_path))) as ft:
+                assert not ft.preempted
+                raise RuntimeError("boom")
+        assert signal.getsignal(signal.SIGTERM) is marker
+        assert signal.getsignal(signal.SIGINT) is prev_int
+    finally:
+        signal.signal(signal.SIGTERM, prev_term)
+
+
+def test_ftloop_bare_construction_still_works(tmp_path):
+    from repro.train.checkpoint import CheckpointManager
+
+    prev = signal.getsignal(signal.SIGTERM)
+    ft = FaultTolerantLoop(CheckpointManager(str(tmp_path)), save_every=1)
+    assert signal.getsignal(signal.SIGTERM) is not prev
+    ft.restore_handlers()
+    assert signal.getsignal(signal.SIGTERM) is prev
+    ft.restore_handlers()               # idempotent

@@ -1,11 +1,18 @@
 """Training substrate: optimizer, microbatching, compression, checkpointing,
-fault-tolerant resume equivalence."""
+fault-tolerant resume equivalence, and crash-atomicity of the checkpoint
+protocol under injected kills (runtime.faults)."""
 import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see _hypothesis_compat
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import registry
 from repro.configs.base import RunConfig
@@ -13,6 +20,7 @@ from repro.train import data as datalib
 from repro.train import optimizer as opt
 from repro.train import train_step as ts
 from repro.train.checkpoint import CheckpointManager
+from repro.runtime.faults import FaultPlan, FaultSpec, InjectedFault
 
 RUN = RunConfig(remat="none", q_chunk=16, kv_chunk=16, loss_chunk=16,
                 compute_dtype="float32")
@@ -173,6 +181,64 @@ def test_failure_injection_and_recovery(tmp_path):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                    rtol=1e-6, atol=1e-7)
     assert inj.failures == 1
+
+
+# -- crash atomicity (DESIGN.md §12) ----------------------------------------
+#
+# Kill the writer at every named point of the staged-write protocol — a
+# reader must always see the previous complete checkpoint (or, when only
+# the LATEST pointer update was lost, a fully committed step), never a
+# torn mix.
+
+CKPT_SITES = ["ckpt.mid_write", "ckpt.leaf", "ckpt.pre_rename",
+              "ckpt.latest", "ckpt.pre_latest"]
+
+
+@settings(max_examples=20)
+@given(st.sampled_from(CKPT_SITES), st.integers(0, 128),
+       st.sampled_from(["raise", "torn_write"]))
+def test_checkpoint_crash_atomicity(site, keep_bytes, kind):
+    if kind == "torn_write" and site in ("ckpt.mid_write", "ckpt.pre_rename",
+                                         "ckpt.pre_latest"):
+        return       # pure check() sites: no write to tear there
+    with tempfile.TemporaryDirectory() as d:
+        old = {"params": {"a": np.arange(6.0).reshape(2, 3)},
+               "step": np.asarray(4, np.int32)}
+        new = {"params": {"a": np.full((2, 3), 7.0)},
+               "step": np.asarray(9, np.int32)}
+        CheckpointManager(d).save(4, old)
+        plan = FaultPlan(specs=(FaultSpec(
+            site=site, kind=kind, keep_bytes=keep_bytes, superstep=9),))
+        wr = CheckpointManager(d, fault=plan.injector())
+        try:
+            wr.save(9, new)
+            crashed = False
+        except InjectedFault:
+            crashed = True
+        step, got = CheckpointManager(d).restore()
+        if crashed and site not in ("ckpt.latest", "ckpt.pre_latest"):
+            assert step == 4        # the torn step 9 never published
+        else:
+            assert step in (4, 9)   # only the pointer update was lost
+        want = old if step == 4 else new
+        np.testing.assert_array_equal(np.asarray(got["params"]["a"]),
+                                      want["params"]["a"])
+        np.testing.assert_array_equal(np.asarray(got["step"]),
+                                      np.asarray(want["step"]))
+
+
+def test_checkpoint_unreadable_latest_falls_back(tmp_path):
+    """A torn LATEST pointer (crash mid-content) must not brick recovery:
+    the reader falls back to the newest published step directory."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"w": np.zeros(4)})
+    with open(str(tmp_path / "LATEST"), "w") as f:
+        f.write("garb")             # torn/corrupt pointer content
+    assert CheckpointManager(str(tmp_path)).latest_step() == 3
+    # pointer naming a missing step dir also falls back
+    with open(str(tmp_path / "LATEST"), "w") as f:
+        f.write("77")
+    assert CheckpointManager(str(tmp_path)).latest_step() == 3
 
 
 def test_prefetcher_deterministic():
