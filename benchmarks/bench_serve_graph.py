@@ -1,0 +1,114 @@
+# Online graph-query serving benchmark (DESIGN.md §13; beyond the
+# GraphH paper, which is batch-only).
+#
+#   PYTHONPATH=src python -m benchmarks.run --only serve_graph [--smoke]
+#
+# Drives serve.graph_service with a mixed PPR + MS-BFS workload two ways
+# per q_slots setting:
+#
+#   closed-loop (qps=0) — every query offered upfront; measures the
+#       service's saturated throughput (queries/sec) and the latency
+#       cost of queueing behind a full slot set;
+#   open-loop — queries arrive at an offered QPS; measures p50/p99
+#       submit-to-result latency when slots usually have headroom.
+#
+# Reported per (q_slots, offered qps): p50/p99 total latency, mean queue
+# vs service split, supersteps/query, and achieved queries/sec.  Results
+# land in bench_serve_graph.json (override with BENCH_SERVE_GRAPH_OUT)
+# so CI uploads the sweep as an artifact.
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, make_store
+
+
+def _out_path() -> str:
+    return os.environ.get("BENCH_SERVE_GRAPH_OUT", "bench_serve_graph.json")
+
+
+def _save(key: str, payload) -> None:
+    path = _out_path()
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[key] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+
+
+def _drive(store, nv, *, q_slots, qps, requests, seed=0):
+    from repro.core.engine import EngineConfig
+    from repro.serve.graph_service import GraphService
+
+    cfg = EngineConfig(num_servers=2, max_supersteps=200)
+    svc = GraphService(store, cfg, q_slots=q_slots, min_fill=1,
+                       max_wait_s=0.01, max_supersteps=200)
+    svc.start()
+    rng = np.random.default_rng(seed)
+    apps = ("ppr", "msbfs")
+    t0 = time.perf_counter()
+    tickets = []
+    for i in range(requests):
+        if qps > 0 and i:
+            time.sleep(1.0 / qps)
+        tickets.append(svc.submit(apps[i % len(apps)],
+                                  int(rng.integers(nv))))
+    for t in tickets:
+        assert t.wait(600), t
+    wall = time.perf_counter() - t0
+    svc.request_drain()
+    svc.join(600)
+    s = svc.latency_summary()
+    assert s["count"] == requests and s["timeouts"] == 0
+    return dict(
+        q_slots=q_slots,
+        offered_qps=qps,
+        requests=requests,
+        wall_seconds=wall,
+        queries_per_sec=requests / wall,
+        p50_ms=s["p50_ms"],
+        p99_ms=s["p99_ms"],
+        mean_queue_ms=s["mean_queue_ms"],
+        mean_service_ms=s["mean_service_ms"],
+        mean_supersteps=s["mean_supersteps"],
+        supersteps_total=svc.stats["supersteps"],
+        sessions=svc.stats["sessions_opened"],
+    )
+
+
+def bench_serve_graph():
+    smoke = common.SMOKE
+    nv, ne = (1_500, 9_000) if smoke else (8_000, 80_000)
+    requests = 6 if smoke else 24
+    slot_sweep = (2, 4) if smoke else (2, 8)
+    qps_sweep = (0.0, 8.0) if smoke else (0.0, 2.0, 8.0)
+    store = make_store(nv, ne, tile_size=1024 if smoke else 4096)
+    rows = []
+    for q in slot_sweep:
+        for qps in qps_sweep:
+            r = _drive(store, nv, q_slots=q, qps=qps, requests=requests)
+            rows.append(r)
+            emit(f"serve_graph_q{q}_qps{qps:g}", r["p50_ms"] * 1e3,
+                 f"p99={r['p99_ms']:.0f}ms "
+                 f"qps={r['queries_per_sec']:.2f} "
+                 f"queue={r['mean_queue_ms']:.0f}ms "
+                 f"ss/q={r['mean_supersteps']:.1f}")
+    # more slots must not lose throughput closed-loop (shared tile
+    # visits amortize across more live columns)
+    closed = {r["q_slots"]: r for r in rows if r["offered_qps"] == 0}
+    lo, hi = min(closed), max(closed)
+    emit("serve_graph_slot_speedup",
+         closed[hi]["wall_seconds"] * 1e6,
+         f"q{hi} vs q{lo} closed-loop: "
+         f"{closed[hi]['queries_per_sec'] / closed[lo]['queries_per_sec']:.2f}x qps")
+    _save("latency", rows)
+
+
+ALL = [bench_serve_graph]

@@ -6,6 +6,8 @@
 #   bench_graph    — paper Figs 5/7/8/9/10/11, Tables III/V + scheduler
 #   bench_cluster  — multi-process cluster runtime: comm-mode wire bytes
 #                    sweep + N-server scaling (JSON artifact)
+#   bench_serve_graph — online graph-query serving: p50/p99 latency +
+#                    queries/sec vs q_slots and offered QPS (JSON artifact)
 #   bench_kernels  — Pallas kernel + GAB superstep throughput
 #   bench_train    — LM train-step throughput (CPU, reduced configs)
 import argparse
@@ -24,12 +26,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cluster, bench_graph, bench_kernels,
-                            bench_train, common)
+                            bench_serve_graph, bench_train, common)
 
     common.SMOKE = args.smoke
 
-    fns = (bench_graph.ALL + bench_cluster.ALL + bench_kernels.ALL
-           + bench_train.ALL)
+    fns = (bench_graph.ALL + bench_cluster.ALL + bench_serve_graph.ALL
+           + bench_kernels.ALL + bench_train.ALL)
     if args.only:
         keys = args.only.split(",")
         fns = [f for f in fns if any(k in f.__name__ for k in keys)]

@@ -14,11 +14,36 @@ batched results are bit-identical to independent runs.
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gab import VertexProgram
+
+
+class _BatchedQueries:
+    """Mixin giving batched programs a uniform query interface.
+
+    ``query_field`` names the dataclass field holding the per-query seed
+    tuple (``seeds``/``sources``/``landmarks``); ``queries`` reads it and
+    ``with_queries`` rebuilds the program for a different batch.  The engine
+    session uses ``with_queries`` to construct the init state for columns
+    admitted mid-run (DESIGN.md §13) — column math is independent of which
+    other queries share the batch, so a spliced column is bit-identical to a
+    fresh single-query run.
+    """
+
+    query_field: ClassVar[str] = "seeds"
+
+    @property
+    def queries(self) -> tuple[int, ...]:
+        """The per-query seed vertices, one query column per entry."""
+        return tuple(getattr(self, self.query_field))
+
+    def with_queries(self, queries):
+        """A copy of this program evaluating exactly ``queries`` columns."""
+        return dataclasses.replace(self, **{self.query_field: tuple(queries)})
 
 
 @dataclasses.dataclass(eq=False)
@@ -148,7 +173,7 @@ class InDegree(VertexProgram):
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(eq=False)
-class PersonalizedPageRank(VertexProgram):
+class PersonalizedPageRank(_BatchedQueries, VertexProgram):
     """Q-seed personalized PageRank: column q solves
     ``pr = (1-d) * e_{seed_q} + d * P^T pr`` — teleport mass concentrated
     on that query's seed vertex instead of spread uniformly.
@@ -197,11 +222,12 @@ class PersonalizedPageRank(VertexProgram):
 
 
 @dataclasses.dataclass(eq=False)
-class MultiSourceBFS(VertexProgram):
+class MultiSourceBFS(_BatchedQueries, VertexProgram):
     """Level-synchronous BFS from Q sources at once (hop counts per column)."""
 
     sources: tuple[int, ...] = (0,)
     combine: str = "min"
+    query_field: ClassVar[str] = "sources"
 
     @property
     def num_queries(self) -> int:
@@ -225,12 +251,13 @@ class MultiSourceBFS(VertexProgram):
 
 
 @dataclasses.dataclass(eq=False)
-class LandmarkDistances(VertexProgram):
+class LandmarkDistances(_BatchedQueries, VertexProgram):
     """Weighted shortest-path distances from Q landmark vertices (min-plus)
     — the batched form of SSSP, e.g. for landmark-based distance oracles."""
 
     landmarks: tuple[int, ...] = (0,)
     combine: str = "min"
+    query_field: ClassVar[str] = "landmarks"
 
     @property
     def num_queries(self) -> int:

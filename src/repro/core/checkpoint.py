@@ -7,7 +7,12 @@ the graph engine needs:
   * a **manifest** riding in ``meta.json`` — the superstep to resume at,
     live query columns, retirement/convergence state, and the per-server
     tile assignment (replicated, so any rank can restart from it and an
-    N→M resize is just ``elastic.remap_assignment`` over it);
+    N→M resize is just ``elastic.remap_assignment`` over it); serving
+    sessions (DESIGN.md §13) extend it with per-slot query lineage —
+    ``queries`` ({global qid: seed vertex} for every column ever
+    admitted), ``admitted_at`` (per-column admission superstep) and
+    ``next_qid`` — so a resumed session keeps renumbering and per-query
+    accounting exactly where the saved one stopped;
   * **interval-block payloads** for ooc vertex state: each
     ``VertexStateStore`` block is serialized via its coldest
     already-current representation (``vstate.export_block`` — no
@@ -52,6 +57,16 @@ class GraphCheckpoint:
     manifest: dict
     state: dict
     vstate: dict
+
+    def live_queries(self) -> dict[int, int]:
+        """{global qid: seed vertex} for the query columns still live at
+        this checkpoint — what a resumed serving session (DESIGN.md §13)
+        re-registers before admitting new work.  Pre-session checkpoints
+        carry no lineage; they resume with an empty map."""
+        seeds = {int(g): int(s)
+                 for g, s in self.manifest.get("queries", {}).items()}
+        return {int(g): seeds.get(int(g), -1)
+                for g in self.manifest.get("active_q", [])}
 
 
 class GraphCheckpointer(CheckpointManager):

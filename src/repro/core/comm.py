@@ -506,3 +506,35 @@ def wire_bytes_estimate(num_vertices: int, density: float, itemsize: int = 4,
         return (num_vertices + 7) // 8 + num_vertices * itemsize
     u = int(density * num_vertices)
     return u * (index_bytes + itemsize)
+
+
+# ---------------------------------------------------------------------------
+# Session admission records (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def pack_admissions(admit=(), drain=(), pending: int = 0):
+    """Pack a barrier's admission control record, or ``None`` when empty.
+
+    ``admit`` is a sequence of ``(global qid, seed vertex)`` pairs for the
+    query columns every rank must splice at this barrier; ``drain`` the
+    global qids to force-retire; ``pending`` the number of queries still
+    queued behind the slot limit (peers use it to keep the superstep loop
+    alive while rank 0 has admissible backlog).  The record is JSON-safe —
+    it rides in the transport frame header (``encode_frame(control=...)``)
+    so all ranks see it at the same barrier as the update set."""
+    admit = [[int(g), int(s)] for g, s in admit]
+    drain = [int(g) for g in drain]
+    if not admit and not drain and not pending:
+        return None
+    return {"admit": admit, "drain": drain, "pending": int(pending)}
+
+
+def unpack_admissions(control) -> tuple[list, list, int]:
+    """Invert :func:`pack_admissions`; ``None`` means an empty record."""
+    if not control:
+        return [], [], 0
+    return (
+        [(int(g), int(s)) for g, s in control.get("admit", [])],
+        [int(g) for g in control.get("drain", [])],
+        int(control.get("pending", 0)),
+    )

@@ -197,9 +197,11 @@ class DistributedGABEngine:
 # ---------------------------------------------------------------------------
 
 # Fixed-width exchange envelope prepended to every frame: (sequence number,
-# sender's measured compute seconds, sender's updated-cell count).  Control
-# data lives here — NOT in the frame — so frame bytes are a pure function
-# of the update set and wire measurements are reproducible.
+# sender's measured compute seconds, sender's updated-cell count).  Wire
+# *measurements* live here — NOT in the frame — so frame bytes are a pure
+# function of the update set (plus rank 0's deterministic admission control
+# record, which rides in the frame header; DESIGN.md §13) and wire sizes
+# are reproducible run to run.
 _ENVELOPE = struct.Struct("<IdQ")
 
 
@@ -216,6 +218,9 @@ class ExchangeResult:
     wire_bytes: int                 # cluster total, actual frame bytes
     assignment: Optional[list] = None   # new per-server tile lists, or None
     peer_seconds: dict = dataclasses.field(default_factory=dict)
+    #: rank 0's admission/drain control record for this barrier (DESIGN.md
+    #: §13) — identical on every rank, None when rank 0 shipped none
+    control: Optional[dict] = None
 
 
 class ClusterExchange:
@@ -301,16 +306,24 @@ class ClusterExchange:
     def exchange(self, *, idx: np.ndarray, vals: np.ndarray,
                  mask: Optional[np.ndarray], nv: int,
                  splitter: Optional[np.ndarray] = None,
-                 compute_seconds: float = 0.0) -> ExchangeResult:
+                 compute_seconds: float = 0.0,
+                 control: Optional[dict] = None) -> ExchangeResult:
         """Broadcast this server's updates, wait for all peers, and return
-        the rank-ordered merged update set (see class docstring)."""
+        the rank-ordered merged update set (see class docstring).
+
+        ``control`` (rank 0 only) is the session's admission/drain record
+        for this barrier; it rides in rank 0's frame header and comes back
+        in ``ExchangeResult.control`` on every rank, so all ranks splice
+        the same query columns at the same barrier."""
+        assert control is None or self.rank == 0, \
+            "admission control records originate at rank 0 only"
         seq = self._seq
         self._seq += 1
         updates = int(mask.sum()) if mask is not None else len(idx)
         frame, header = transport_mod.encode_frame(
             idx, vals, mask, nv, splitter=splitter,
             threshold=self.threshold, compressor=self.compressor,
-            mode=self.comm_mode)
+            mode=self.comm_mode, control=control)
         raw_b = header["raw_bytes"]
         wire_b = header["wire_bytes"]
         if self.n > 1:
@@ -354,9 +367,13 @@ class ClusterExchange:
                 self.assignment, nmoves = moved
                 self.steal_moves += nmoves
                 new_assignment = [list(a) for a in self.assignment]
+        out_control = control
+        if self.rank != 0 and 0 in peers:
+            out_control = peers[0][0].header.get("control")
         return ExchangeResult(idx=m_idx, vals=m_val, mask=m_msk,
                               raw_bytes=raw_b, wire_bytes=wire_b,
-                              assignment=new_assignment, peer_seconds=secs)
+                              assignment=new_assignment, peer_seconds=secs,
+                              control=out_control)
 
     def _wait_peers(self, seq: int) -> dict:
         deadline = time.monotonic() + self.timeout

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import tempfile
+import threading
 import time
 from collections import OrderedDict
 from typing import Optional
@@ -129,6 +130,16 @@ class EngineConfig:
     # arms engine sites "superstep"/"barrier", the ckpt.* save sites, and
     # (in cluster launches) "transport.send"
     fault_plan: Optional[FaultPlan] = None
+    # --- step-driven sessions + mid-run query admission (DESIGN.md §13) ---
+    # scripted admissions for batch runs: tuple of (after_superstep, seeds)
+    # entries — each seeds tuple is spliced into the [V, Q] state as fresh
+    # query columns at the END of superstep ``after_superstep`` (their
+    # first compute superstep is after_superstep + 1), in every execution
+    # mode.  Cluster launches replicate the plan to every rank through
+    # this config so peers know the run is not done while entries pend,
+    # but the admission records themselves always originate at rank 0 and
+    # ride its update frame.  Ignored for 1-D (single-query) programs.
+    admit_plan: Optional[tuple] = None
 
 
 @dataclasses.dataclass
@@ -171,6 +182,12 @@ class SuperstepStats:
     # global query ids whose columns converged (and were compacted out)
     # at the end of this superstep
     retired_queries: tuple = ()
+    # global query ids spliced in (admitted) at the end of this superstep —
+    # their first compute superstep is the next one (DESIGN.md §13)
+    admitted_queries: tuple = ()
+    # global query ids force-retired mid-flight (session drain) at the end
+    # of this superstep; their per-query supersteps stay -1
+    drained_queries: tuple = ()
     # --- out-of-core vertex state (DESIGN.md §10; zeros when in-memory) ---
     vstate_faults: int = 0          # interval blocks decoded (warm + cold)
     vstate_load_bytes: int = 0      # compressed bytes faulted back in
@@ -351,33 +368,6 @@ class OutOfCoreEngine:
                 [list(map(int, a)) for a in saved], n,
                 self.plan.edges_per_tile)
 
-    def _save_boundary(self, ss: int, *, values, aux_np, vstore, active_q,
-                       final_values, per_query_ss, updated_ids, multi_q,
-                       nq_total) -> None:
-        """Write the superstep-``ss+1`` boundary checkpoint: manifest
-        (resume point, live queries, replicated assignment) + state leaves;
-        ooc runs flush vertex state as interval blocks instead of leaves
-        (dirty blocks only — clean ones hardlink, see core.checkpoint)."""
-        cfg = self.cfg
-        manifest = dict(
-            superstep=ss + 1,
-            final=False,
-            converged=False,
-            multi_q=bool(multi_q),
-            nq_total=int(nq_total),
-            num_servers=int(cfg.num_servers),
-            assignment=[[int(t) for t in a] for a in self.assignment],
-            active_q=([int(g) for g in active_q] if multi_q else None),
-        )
-        state: dict = {"updated_ids": np.asarray(updated_ids, np.int64)}
-        if multi_q:
-            state["final_values"] = final_values
-            state["per_query_ss"] = per_query_ss
-        if vstore is None:
-            state["values"] = values
-            state["aux"] = aux_np
-        self.ckpt.save_graph(ss + 1, state, manifest, vstore=vstore)
-
     def _save_final(self, values, aux_np, per_query_ss, converged,
                     supersteps: int) -> None:
         """Publish the run's result as a ``final`` checkpoint (step =
@@ -426,6 +416,22 @@ class OutOfCoreEngine:
             return rows[vmask], new[vmask], upd[vmask]
         return rows[upd], new[upd], None
 
+    def open_session(self, prog: VertexProgram, *,
+                     q_slots: Optional[int] = None,
+                     max_supersteps: Optional[int] = None) -> "EngineSession":
+        """Open a step-driven session over ``prog`` (DESIGN.md §13).
+
+        The session owns all per-run state; one ``session.step()`` call
+        executes exactly one superstep, and between barriers the caller
+        may ``admit()`` fresh queries into retired ``[V, Q]`` slots or
+        ``drain()`` live ones.  ``q_slots`` caps the live query columns
+        (default: the program's initial batch width); admissions beyond
+        it queue until retirement frees a slot.  At most one ooc-vstate
+        session may be live per engine at a time (sessions share the
+        engine's edge caches, skip filters and interval bookkeeping)."""
+        return EngineSession(self, prog, q_slots=q_slots,
+                             max_supersteps=max_supersteps)
+
     def run(self, prog: VertexProgram,
             max_supersteps: Optional[int] = None) -> RunResult:
         """Run ``prog`` to convergence (no updated cells cluster-wide) or
@@ -433,6 +439,11 @@ class OutOfCoreEngine:
         policies, pipelining, ooc vertex state, cluster execution, and
         crash/resume (DESIGN.md §12: resuming a checkpoint replays the
         remaining supersteps to byte-identical values).
+
+        A thin wrapper over ``open_session``: steps one EngineSession to
+        completion (honoring ``cfg.admit_plan`` scripted admissions along
+        the way) and returns its result — so batch callers and the online
+        serving path (serve/graph_service.py) share one superstep loop.
 
         With ``cfg.preemptible`` + checkpointing, SIGTERM/SIGINT during
         the run latch a flag; at the next BSP barrier the engine saves a
@@ -442,504 +453,18 @@ class OutOfCoreEngine:
         if self.cfg.preemptible and self.ckpt is not None:
             guard = PreemptionGuard().install()
         self._guard = guard
+        session = None
         try:
-            return self._run_inner(prog, max_supersteps)
+            session = self.open_session(prog, max_supersteps=max_supersteps)
+            while not session.finished:
+                session.step()
+            return session.result()
         finally:
+            if session is not None:
+                session.close()
             if guard is not None:
                 guard.restore()
             self._guard = None
-
-    def _run_inner(self, prog: VertexProgram,
-                   max_supersteps: Optional[int] = None) -> RunResult:
-        cfg = self.cfg
-        nv = self.plan.num_vertices
-        # Re-baseline the cumulative-counter deltas: a second run() on the
-        # same engine — or cache activity between runs (warm()/maintain()/
-        # direct get()s) — must not leak into this run's first superstep.
-        cs = self._agg_cache_stats()
-        self._io_busy_cum = cs["io_seconds"]
-        self._promo_cum = cs["promotions"]
-        self._demo_cum = cs["demotions"]
-        self._disk_cum = cs["disk_bytes_read"]
-        state = prog.init(nv, self.out_degree.astype(np.float64),
-                          self.in_degree.astype(np.float64))
-        values = np.asarray(state.pop("value"))
-        aux_np = {k: np.asarray(v) for k, v in state.items()}
-        vdtype = values.dtype
-        row_cap = self.plan.row_cap
-
-        # --- multi-query bookkeeping (DESIGN.md §9) ---
-        # values [V, Q]: Q program instances share every tile visit.  A query
-        # column that produces zero updates in a superstep has reached its
-        # fixpoint; it is *retired* — its column is written to the result
-        # buffer and compacted out so later supersteps (compute, broadcast
-        # payloads, updated-mask accounting) no longer pay for it.
-        multi_q = values.ndim == 2
-        nq_total = values.shape[1] if multi_q else 1
-        active_q = np.arange(nq_total)          # global ids of live columns
-        final_values = values.copy() if multi_q else None
-        per_query_ss = np.full(nq_total, -1, dtype=np.int64) if multi_q else None
-
-        # --- crash-consistent resume (DESIGN.md §12): overwrite the fresh
-        # init with the latest checkpoint's state and continue from its
-        # superstep boundary.  A "final" checkpoint short-circuits: the run
-        # already completed, return its stored result (supervised restarts
-        # skip finished programs this way).
-        start_ss = 0
-        loaded = None
-        if self.ckpt is not None and cfg.resume:
-            loaded = self.ckpt.load_graph()
-        if loaded is not None and loaded.manifest.get("final"):
-            return self._result_from_final(loaded)
-        if loaded is not None:
-            m, st = loaded.manifest, loaded.state
-            start_ss = int(m["superstep"])
-            if loaded.vstate:
-                values = np.asarray(loaded.vstate["value"])
-                aux_np = {k: np.asarray(v)
-                          for k, v in loaded.vstate.items() if k != "value"}
-            else:
-                values = np.asarray(st["values"])
-                aux_np = {k: np.asarray(v)
-                          for k, v in st.get("aux", {}).items()}
-            if multi_q:
-                active_q = np.asarray(m["active_q"], dtype=np.int64)
-                final_values = np.asarray(st["final_values"])
-                per_query_ss = np.asarray(st["per_query_ss"], dtype=np.int64)
-
-        # --- out-of-core vertex state (DESIGN.md §10) ---
-        # With a vertex memory budget, the [V(, Q)] value/aux arrays move
-        # into an interval-sharded VertexStateStore and the full arrays are
-        # dropped: gather materializes per-tile source inputs block by
-        # block, apply writes back per dirty interval, and broadcasts ship
-        # per-interval sections.  stacked/merged need the full value array
-        # on device, so ooc mode forces the tiled path.
-        ooc = self._ooc = cfg.vertex_memory_budget is not None
-        engine_mode = "tiled" if ooc else cfg.engine_mode
-        vstore: Optional[VertexStateStore] = None
-        if ooc:
-            vstore = self._build_vstate(values, aux_np)
-            self._vs_faults_cum = vstore.stats.faults
-            self._vs_load_cum = vstore.stats.load_bytes
-            self._vs_spill_cum = vstore.stats.spill_bytes
-            values = None
-            aux_np = {}
-            aux_dev = None
-        else:
-            aux_dev = {k: jnp.asarray(v) for k, v in aux_np.items()}
-
-        max_ss = max_supersteps or cfg.max_supersteps
-        history: list[SuperstepStats] = []
-        updated_ids = np.arange(nv)   # everything "updated" before step 0
-        if loaded is not None:
-            # the skip pre-pass keys off the last superstep's update set —
-            # part of the boundary state (filters are rebuilt lazily; they
-            # have no false negatives, so a missing filter only costs work)
-            updated_ids = np.asarray(loaded.state["updated_ids"], np.int64)
-        building_filters = cfg.tile_skipping
-        filters: list = [None] * self.plan.num_tiles if building_filters else []
-
-        converged = False
-        for ss in range(start_ss, max_ss):
-            if self.fault is not None:
-                self.fault.check("superstep", ss)
-            t_start = time.perf_counter()
-            values_dev = None if ooc else jnp.asarray(values)
-            load_s = 0.0
-            comp_s = 0.0
-            stall_s = 0.0
-            tiles_done = 0
-            tiles_skipped = 0
-            qa = len(active_q) if multi_q else 1   # live columns this superstep
-            upd_idx_parts: list[np.ndarray] = []
-            upd_val_parts: list[np.ndarray] = []
-            upd_msk_parts: list[np.ndarray] = []
-            per_server_updates: list[tuple] = []
-            bcast_futures: dict[int, object] = {}
-            # ooc-vstate always measures: the sampled estimator models a
-            # whole-V payload (global density switch, no interval headers),
-            # which would mix incompatible models with the per-interval
-            # records the sampled supersteps learn their ratio from
-            sample = ooc or not (cfg.comm_accounting == "sampled"
-                                 and ss % 4 != 0
-                                 and self._wire_ratio is not None)
-
-            skip_on = (
-                cfg.tile_skipping
-                and ss > 0
-                and len(updated_ids) < cfg.skip_density_threshold * nv
-                and self._filters is not None
-            )
-            active_words = None
-            if skip_on and cfg.skip_filter == "bitmap":
-                active_words = SourceBlockBitmap.active_words_from_ids(
-                    updated_ids, nv, cfg.block_shift
-                )
-
-            for s in self.exec_servers:
-                s_idx: list[np.ndarray] = []
-                s_val: list[np.ndarray] = []
-                s_msk: list[np.ndarray] = []
-                server_tiles = self.assignment[s]
-                if engine_mode in ("stacked", "merged") and not skip_on:
-                    if self._stacks is None:
-                        t0 = time.perf_counter()
-                        if engine_mode == "merged":
-                            self._build_merged(nv)
-                        else:
-                            self._build_stacks(nv)
-                        if building_filters:
-                            for st in self.exec_servers:
-                                n_res = len(self.assignment[st]) - len(self._streamed[st])
-                                for tid in self.assignment[st][:n_res]:
-                                    if filters[tid] is None:
-                                        filters[tid] = self._make_filter(
-                                            self.caches[st].get(tid), nv)
-                        load_s += time.perf_counter() - t0
-                    t0 = time.perf_counter()
-                    step_fn = (self._merged_step if engine_mode == "merged"
-                               else self._stack_step)
-                    new_masked, upd = step_fn(prog, values_dev, aux_dev,
-                                              self._stacks[s])
-                    si, sv, sm = self._split_updates(
-                        np.arange(nv), np.asarray(new_masked), np.asarray(upd))
-                    comp_s += time.perf_counter() - t0
-                    s_idx.append(si)
-                    s_val.append(sv.astype(vdtype))
-                    if sm is not None:
-                        s_msk.append(sm)
-                    tiles_done += len(self.assignment[s]) - len(self._streamed[s])
-                    server_tiles = self._streamed[s]
-
-                # Tile-skipping pre-pass: the filter set is fixed for the
-                # whole superstep, so the survivor list can be computed up
-                # front (and handed to the prefetcher in pipelined mode).
-                if skip_on:
-                    run_list = []
-                    for tid in server_tiles:
-                        f = self._filters[tid]
-                        # a stolen tile may not have a filter yet on this
-                        # server (cluster mode) — run it, never skip blind
-                        hit = f is None or (
-                            f.intersects(active_words)
-                            if cfg.skip_filter == "bitmap"
-                            else f.might_contain_any(updated_ids)
-                        )
-                        if hit:
-                            run_list.append(tid)
-                        else:
-                            tiles_skipped += 1
-                    if cfg.debug_skip_log:
-                        self.skip_log.append(dict(
-                            superstep=ss, server=s,
-                            active=np.asarray(updated_ids).copy(),
-                            run=list(run_list),
-                            skipped=[t for t in server_tiles
-                                     if t not in run_list]))
-                else:
-                    run_list = list(server_tiles)
-
-                if ooc and cfg.interval_aware_order and len(run_list) > 1:
-                    run_list = self._order_joint_residency(s, run_list)
-                elif cfg.cache_aware_order and len(run_list) > 1:
-                    run_list = self._order_cache_first(s, run_list)
-
-                if cfg.pipeline:
-                    p_idx, p_val, p_msk, ld, cp, stl = self._run_tiles_pipelined(
-                        s, run_list, prog, values_dev, aux_dev,
-                        filters if building_filters else None, nv)
-                    s_idx += p_idx
-                    s_val += p_val
-                    s_msk += p_msk
-                    load_s += ld
-                    comp_s += cp
-                    stall_s += stl
-                    tiles_done += len(run_list)
-                else:
-                    for tid in run_list:
-                        t0 = time.perf_counter()
-                        tile = self.caches[s].get(tid)
-                        dt = time.perf_counter() - t0
-                        load_s += dt
-                        stall_s += dt   # serial: every load blocks compute
-
-                        if building_filters and filters[tid] is None:
-                            filters[tid] = self._make_filter(tile, nv)
-
-                        t0 = time.perf_counter()
-                        if ooc:
-                            ri, rv, rm = self._ooc_tile_step(prog, tile, nv)
-                        else:
-                            rows, new, upd = run_tile(
-                                prog, values_dev, aux_dev,
-                                (tile.src, tile.dst_local,
-                                 tile_edge_values(tile)),
-                                tile.meta.row_start, tile.meta.num_rows,
-                                row_cap, cfg.seg_impl,
-                            )
-                            ri, rv, rm = self._split_updates(
-                                np.asarray(rows), np.asarray(new),
-                                np.asarray(upd))
-                        comp_s += time.perf_counter() - t0
-                        s_idx.append(ri)
-                        s_val.append(rv)
-                        if rm is not None:
-                            s_msk.append(rm)
-                        tiles_done += 1
-                si = np.concatenate(s_idx) if s_idx else np.zeros(0, np.int64)
-                val_shape = (0, qa) if multi_q else (0,)
-                sv = (np.concatenate(s_val) if s_val
-                      else np.zeros(val_shape, vdtype))
-                sm = None
-                if multi_q:
-                    sm = (np.concatenate(s_msk) if s_msk
-                          else np.zeros(val_shape, dtype=bool))
-                per_server_updates.append((si, sv, sm))
-                upd_idx_parts.append(si)
-                upd_val_parts.append(sv)
-                if multi_q:
-                    upd_msk_parts.append(sm)
-                if cfg.pipeline and sample and self.exchange is None:
-                    # overlap this server's payload compression with the next
-                    # server's compute; records collected at the barrier below
-                    # (cluster mode measures from the real transport instead)
-                    bcast_futures[s] = self._measure_broadcast(
-                        si, sv, sm, nv, qa, vdtype, background=True)
-
-            own_tiles = [t for s in self.exec_servers
-                         for t in self.assignment[s]]
-            if building_filters and all(filters[t] is not None
-                                        for t in own_tiles):
-                self._filters = filters
-                building_filters = False
-
-            # --- Broadcast (BSP barrier): measure payloads, apply updates ---
-            if self.fault is not None:
-                self.fault.check("barrier", ss)
-            raw_b = wire_b = 0
-            if self.exchange is not None:
-                # cluster mode (DESIGN.md §11): ship this server's updates
-                # through the real transport, merge every peer's frame —
-                # the exchange IS the global barrier, and the byte counts
-                # are measured from the frames that actually travelled
-                si, sv, sm = per_server_updates[0]
-                xr = self.exchange.exchange(
-                    idx=si, vals=sv, mask=sm, nv=nv,
-                    splitter=self._iv_splitter if ooc else None,
-                    compute_seconds=comp_s)
-                all_idx, all_val, all_msk = xr.idx, xr.vals, xr.mask
-                raw_b, wire_b = xr.raw_bytes, xr.wire_bytes
-                if xr.assignment is not None:
-                    # cross-server tile stealing: every server derived the
-                    # same new ownership from the same replicated timings
-                    self.assignment = [list(a) for a in xr.assignment]
-            else:
-                for k, s in enumerate(self.exec_servers):
-                    si, sv, sm = per_server_updates[k]
-                    if sample:
-                        if s in bcast_futures:
-                            rec = bcast_futures[s].result()
-                        else:
-                            rec = self._measure_broadcast(si, sv, sm, nv, qa,
-                                                          vdtype)
-                        raw_b += rec.raw_bytes
-                        wire_b += rec.wire_bytes
-                    else:
-                        pairs = int(sm.sum()) if sm is not None else len(si)
-                        n_eff = nv * qa
-                        est = comm.wire_bytes_estimate(
-                            n_eff, pairs / max(n_eff, 1),
-                            # 2-D sparse payloads pack (vertex, query) u32 pairs
-                            index_bytes=8 if sm is not None else 4)
-                        raw_b += est
-                        wire_b += int(est * self._wire_ratio)
-                if sample and raw_b:
-                    self._wire_ratio = wire_b / raw_b
-                all_idx = (np.concatenate(upd_idx_parts) if upd_idx_parts
-                           else np.zeros(0, np.int64))
-                all_val = (np.concatenate(upd_val_parts) if upd_val_parts
-                           else np.zeros((0, qa) if multi_q else (0,), vdtype))
-                all_msk = None
-                if multi_q:
-                    all_msk = (np.concatenate(upd_msk_parts) if upd_msk_parts
-                               else np.zeros((0, qa), dtype=bool))
-            if multi_q:
-                upd_per_q = all_msk.sum(axis=0)
-                updated_pairs = int(all_msk.sum())
-            else:
-                upd_per_q = None
-                updated_pairs = int(len(all_idx))
-            dirty_ivs = 0
-            if ooc:
-                # dirty-interval writeback (DESIGN.md §10): load only the
-                # interval blocks that received updates, apply in place,
-                # write back dirty — clean intervals are never touched.
-                if len(all_idx):
-                    ivs = vstore.interval_of(all_idx)
-                    for iv in np.unique(ivs):
-                        ksel = ivs == iv
-                        lo, _hi = vstore.interval_range(int(iv))
-                        blk = vstore.get_block("value", int(iv)).copy()
-                        loc = all_idx[ksel] - lo
-                        if multi_q:
-                            # per-cell application: a row touched by query A
-                            # must not clobber query B's untouched column
-                            cur = blk[loc]
-                            msk = all_msk[ksel]
-                            cur[msk] = all_val[ksel][msk]
-                            blk[loc] = cur
-                        else:
-                            blk[loc] = all_val[ksel]
-                        vstore.write_block("value", int(iv), blk)
-                        dirty_ivs += 1
-            elif multi_q:
-                # per-cell application: a row touched by query A must not
-                # clobber query B's column with a masked zero / sub-tol value
-                cur = values[all_idx]
-                cur[all_msk] = all_val[all_msk]
-                values[all_idx] = cur
-            else:
-                values[all_idx] = all_val
-            updated_ids = all_idx
-
-            # Re-tier at the barrier: off the tile hot path, after this
-            # superstep's access pattern has updated the per-tile counters.
-            if cfg.cache_policy != "lru":
-                for c in self.caches.values():
-                    c.maintain()
-
-            cache_stats = self._agg_cache_stats()
-            io_busy = cache_stats["io_seconds"] - self._io_busy_cum
-            self._io_busy_cum = cache_stats["io_seconds"]
-            promo = cache_stats["promotions"] - self._promo_cum
-            demo = cache_stats["demotions"] - self._demo_cum
-            self._promo_cum = cache_stats["promotions"]
-            self._demo_cum = cache_stats["demotions"]
-            # the cache counter is cumulative over the run; the stat is the
-            # per-superstep delta (like io_busy/promotions above)
-            disk_b = cache_stats["disk_bytes_read"] - self._disk_cum
-            self._disk_cum = cache_stats["disk_bytes_read"]
-            vs_faults = vs_load = vs_spill = 0
-            if ooc:
-                vst = vstore.stats
-                vs_faults = vst.faults - self._vs_faults_cum
-                vs_load = vst.load_bytes - self._vs_load_cum
-                vs_spill = vst.spill_bytes - self._vs_spill_cum
-                self._vs_faults_cum = vst.faults
-                self._vs_load_cum = vst.load_bytes
-                self._vs_spill_cum = vst.spill_bytes
-            # --- query retirement (multi-query): a column with zero updated
-            # cells this superstep is at its fixpoint — exactly the condition
-            # under which a single-query run of that column would have
-            # converged.  Freeze it into the result buffer and compact it out
-            # so subsequent supersteps (tile compute, broadcast payloads,
-            # updated-mask accounting) exclude it entirely.
-            retired: tuple = ()
-            upd_map: dict = {}
-            if multi_q:
-                upd_map = {int(g): int(n) for g, n in zip(active_q, upd_per_q)}
-                done = np.nonzero(upd_per_q == 0)[0]
-                if len(done):
-                    retired = tuple(int(active_q[c]) for c in done)
-                    keep = upd_per_q > 0
-                    if ooc:
-                        for c in done:
-                            gq = int(active_q[c])
-                            final_values[:, gq] = self._ooc_column(vstore, c)
-                            per_query_ss[gq] = ss + 1
-                        q_names = [n for n in vstore.names()
-                                   if vstore.spec(n)[1] == (qa,)]
-                        vstore.compact_columns(q_names, keep)
-                    else:
-                        for c in done:
-                            gq = int(active_q[c])
-                            final_values[:, gq] = values[:, c]
-                            per_query_ss[gq] = ss + 1
-                        values = np.ascontiguousarray(values[:, keep])
-                        for k in list(aux_np):
-                            a = aux_np[k]
-                            if a.ndim == 2 and a.shape[1] == qa:  # per-query
-                                aux_np[k] = np.ascontiguousarray(a[:, keep])
-                                aux_dev[k] = jnp.asarray(aux_np[k])
-                    active_q = active_q[keep]
-
-            history.append(SuperstepStats(
-                superstep=ss,
-                seconds=time.perf_counter() - t_start,
-                load_seconds=load_s,
-                compute_seconds=comp_s,
-                updated_vertices=int(len(all_idx)),
-                density=float(len(all_idx)) / max(nv, 1),
-                tiles_processed=tiles_done,
-                tiles_skipped=tiles_skipped,
-                raw_bytes=raw_b,
-                wire_bytes=wire_b,
-                network_bytes=wire_b * max(cfg.num_servers - 1, 0),
-                cache_hit_ratio=cache_stats["hit_ratio"],
-                disk_bytes_read=disk_b,
-                stall_seconds=stall_s,
-                io_busy_seconds=io_busy,
-                cache_promotions=promo,
-                cache_demotions=demo,
-                cache_tiers=cache_stats["tiers"],
-                active_queries=qa,
-                updated_pairs=updated_pairs,
-                updated_per_query=upd_map,
-                retired_queries=retired,
-                vstate_faults=vs_faults,
-                vstate_load_bytes=vs_load,
-                vstate_spill_bytes=vs_spill,
-                vstate_dirty_intervals=dirty_ivs,
-            ))
-            converged = (len(active_q) == 0 if multi_q else len(all_idx) == 0)
-
-            # --- superstep-boundary checkpoint + preemption (DESIGN.md §12)
-            # Written AFTER update apply + retirement — this boundary's
-            # state is exactly what superstep ss+1 starts from.  State is
-            # fully replicated, so rank 0 is the single periodic writer; a
-            # preempted rank may also save (collision-safe publish).
-            if self.ckpt is not None and not converged:
-                due = (cfg.checkpoint_every > 0
-                       and (ss + 1) % cfg.checkpoint_every == 0
-                       and cfg.server_rank in (None, 0))
-                preempt = self._guard is not None and self._guard.triggered
-                if due or preempt:
-                    self._save_boundary(
-                        ss, values=values, aux_np=aux_np, vstore=vstore,
-                        active_q=active_q, final_values=final_values,
-                        per_query_ss=per_query_ss, updated_ids=updated_ids,
-                        multi_q=multi_q, nq_total=nq_total)
-                if preempt:
-                    if ooc:
-                        vstore.close()
-                    raise Preempted(ss + 1)
-            if converged:
-                break
-
-        if multi_q:
-            # flush columns still live at max_supersteps into the result
-            for c, gq in enumerate(active_q):
-                final_values[:, int(gq)] = (
-                    self._ooc_column(vstore, c) if ooc else values[:, c])
-            values = final_values
-        elif ooc:
-            values = vstore.materialize("value")
-        if ooc:
-            # the result materializes the final arrays; the working state
-            # and its disk spill tier are per-run scratch
-            aux_np = {n: vstore.materialize(n) for n in vstore.names()
-                      if n != "value"}
-            vstore.close()
-        # supersteps counts GLOBALLY (resume continues the numbering, so a
-        # resumed run reports the same count as the uninterrupted one even
-        # though its history holds only the post-resume entries)
-        supersteps = start_ss + len(history)
-        if self.ckpt is not None and cfg.server_rank in (None, 0):
-            self._save_final(values, aux_np, per_query_ss, converged,
-                             supersteps)
-        return RunResult(values=values, aux=aux_np, history=history,
-                         supersteps=supersteps, converged=converged,
-                         per_query_supersteps=per_query_ss)
 
     # ------------------------------------------------------------------
     def _measure_broadcast(self, si, sv, sm, nv, qa, dtype, background=False):
@@ -1381,3 +906,878 @@ def _densify(vals: np.ndarray, idx: np.ndarray, nv: int,
     out = np.zeros((nv, nq) if nq is not None else nv, dtype=dtype)
     out[idx] = vals
     return out
+
+
+class EngineSession:
+    """Step-driven run state over one :class:`OutOfCoreEngine` (DESIGN.md
+    §13).
+
+    One ``step()`` call executes exactly one superstep — compute, BSP
+    barrier, update apply, query retirement — and between barriers the
+    session accepts **mid-run query admission**: ``admit(seeds)`` queues
+    fresh queries that are spliced into retired ``[V, Q]`` columns at the
+    next barrier (the inverse of retirement's column compaction), and
+    ``drain(qids)`` force-retires live columns.  ``run()`` is a thin loop
+    over a session, so batch runs and the online serving path
+    (serve/graph_service.py) share this superstep implementation.
+
+    State machine: OPEN --step()*--> FINISHED --result()--> closed.  A
+    session is FINISHED when it converged with no admission backlog, or
+    hit ``max_supersteps``.  ``result()`` finalizes (flushes live columns,
+    closes the ooc spill tier, publishes the final checkpoint) and returns
+    the same :class:`RunResult` the monolithic loop used to.
+
+    Admission protocol (all execution modes apply it at the same point in
+    the barrier, so results stay bit-identical across them):
+
+    1. natural retirement — columns with zero updated cells freeze into
+       the result buffer and compact out;
+    2. drains — force-frozen columns (``per_query_supersteps`` stays -1);
+    3. admissions — fresh columns splice into ``values``/per-query aux/
+       ``active_q`` with state built by ``prog.with_queries(seeds).init``,
+       and the next superstep runs **all** tiles (``_force_full``) so skip
+       filters and interval dirty tracking see the new column as all-dirty
+       for one superstep (filters have no false negatives, so forcing a
+       full pass is always safe).
+
+    Cluster mode: rank 0 collects the admission/drain record *before* the
+    exchange and ships it in its update frame (``transport.encode_frame``
+    ``control=``); every rank — including rank 0 — then applies the record
+    it reads back from ``ExchangeResult.control``, so all ranks splice
+    identically.  Peers follow deterministically and must not ``admit()``
+    themselves.
+
+    Thread-safety: ``admit()``/``drain()`` may be called from any thread
+    (the service's submit path); ``step()``/``result()`` must be called
+    from one driver thread.
+    """
+
+    def __init__(self, engine: OutOfCoreEngine, prog: VertexProgram, *,
+                 q_slots: Optional[int] = None,
+                 max_supersteps: Optional[int] = None):
+        self.eng = engine
+        self.prog = prog
+        cfg = engine.cfg
+        nv = self.nv = engine.plan.num_vertices
+        self._lock = threading.Lock()
+        self._admit_queue: list[tuple[int, int]] = []
+        self._drain_queue: list[int] = []
+        self._force_full = False
+        self._final_result: Optional[RunResult] = None
+        self._closed = False
+        self.history: list[SuperstepStats] = []
+        self.converged = False
+        self.finished = False
+        self.vstore: Optional[VertexStateStore] = None
+        self._ooc = False
+
+        # Re-baseline the engine's cumulative-counter deltas: a second
+        # session on the same engine — or cache activity between sessions
+        # (warm()/maintain()/direct get()s) — must not leak into this
+        # session's first superstep.
+        cs = engine._agg_cache_stats()
+        engine._io_busy_cum = cs["io_seconds"]
+        engine._promo_cum = cs["promotions"]
+        engine._demo_cum = cs["demotions"]
+        engine._disk_cum = cs["disk_bytes_read"]
+
+        state = prog.init(nv, engine.out_degree.astype(np.float64),
+                          engine.in_degree.astype(np.float64))
+        self.values = np.asarray(state.pop("value"))
+        self.aux_np = {k: np.asarray(v) for k, v in state.items()}
+        self.vdtype = self.values.dtype
+
+        # --- multi-query bookkeeping (DESIGN.md §9) ---
+        # values [V, Q]: Q program instances share every tile visit.  A
+        # query column that produces zero updates in a superstep has
+        # reached its fixpoint; it is *retired* — its column is written to
+        # the result buffer and compacted out so later supersteps no
+        # longer pay for it.  The freed slot is what admission refills.
+        self.multi_q = self.values.ndim == 2
+        self.nq_total = self.values.shape[1] if self.multi_q else 1
+        self.active_q = np.arange(self.nq_total)  # global ids, live columns
+        self.final_values = self.values.copy() if self.multi_q else None
+        self.per_query_ss = (np.full(self.nq_total, -1, dtype=np.int64)
+                             if self.multi_q else None)
+        #: superstep each column's compute began at (0 for initial
+        #: queries) — per_query_ss is convergence superstep RELATIVE to
+        #: this, so an admitted query reports the same count as a fresh run
+        self.admitted_at = (np.zeros(self.nq_total, dtype=np.int64)
+                            if self.multi_q else None)
+        #: {global qid: seed vertex} lineage for every column ever admitted
+        self.query_seeds: dict[int, int] = {
+            int(i): int(s)
+            for i, s in enumerate(getattr(prog, "queries", ()))}
+        self.next_qid = self.nq_total if self.multi_q else 1
+        self.q_slots = (max(1, int(q_slots)) if q_slots is not None
+                        else max(1, self.nq_total))
+        self._plan_pending: list[tuple[int, tuple]] = (
+            [(int(after), tuple(int(s) for s in seeds))
+             for after, seeds in (cfg.admit_plan or ())]
+            if self.multi_q else [])
+
+        # --- crash-consistent resume (DESIGN.md §12): overwrite the fresh
+        # init with the latest checkpoint's state and continue from its
+        # superstep boundary.  A "final" checkpoint short-circuits: the
+        # run already completed — the session opens FINISHED with its
+        # stored result (supervised restarts skip finished programs).
+        self.start_ss = 0
+        loaded = None
+        if engine.ckpt is not None and cfg.resume:
+            loaded = engine.ckpt.load_graph()
+        if loaded is not None and loaded.manifest.get("final"):
+            self._final_result = engine._result_from_final(loaded)
+            self.converged = self._final_result.converged
+            self.finished = True
+            return
+        if loaded is not None:
+            m, st = loaded.manifest, loaded.state
+            self.start_ss = int(m["superstep"])
+            if loaded.vstate:
+                self.values = np.asarray(loaded.vstate["value"])
+                self.aux_np = {k: np.asarray(v)
+                               for k, v in loaded.vstate.items()
+                               if k != "value"}
+            else:
+                self.values = np.asarray(st["values"])
+                self.aux_np = {k: np.asarray(v)
+                               for k, v in st.get("aux", {}).items()}
+            if self.multi_q:
+                self.active_q = np.asarray(m["active_q"], dtype=np.int64)
+                self.final_values = np.asarray(st["final_values"])
+                self.per_query_ss = np.asarray(st["per_query_ss"], np.int64)
+                self.nq_total = len(self.per_query_ss)
+                self.admitted_at = (
+                    np.asarray(st["admitted_at"], np.int64)
+                    if "admitted_at" in st
+                    else np.zeros(self.nq_total, dtype=np.int64))
+                self.next_qid = int(m.get("next_qid", self.nq_total))
+                saved_seeds = {int(g): int(s)
+                               for g, s in m.get("queries", {}).items()}
+                if saved_seeds:
+                    self.query_seeds = saved_seeds
+                # plan entries that fired before the boundary are already
+                # in the restored state — replay only the future ones
+                self._plan_pending = [e for e in self._plan_pending
+                                      if e[0] >= self.start_ss]
+
+        # --- out-of-core vertex state (DESIGN.md §10): with a vertex
+        # memory budget the [V(, Q)] arrays move into an interval-sharded
+        # VertexStateStore and the full arrays are dropped.  stacked/
+        # merged need the full value array on device, so ooc forces tiled.
+        self._ooc = engine._ooc = cfg.vertex_memory_budget is not None
+        self.engine_mode = "tiled" if self._ooc else cfg.engine_mode
+        if self._ooc:
+            self.vstore = engine._build_vstate(self.values, self.aux_np)
+            engine._vs_faults_cum = self.vstore.stats.faults
+            engine._vs_load_cum = self.vstore.stats.load_bytes
+            engine._vs_spill_cum = self.vstore.stats.spill_bytes
+            self.values = None
+            self.aux_np = {}
+            self.aux_dev = None
+        else:
+            self.aux_dev = {k: jnp.asarray(v) for k, v in self.aux_np.items()}
+
+        self.max_ss = max_supersteps or cfg.max_supersteps
+        self.updated_ids = np.arange(nv)  # everything "updated" pre step 0
+        if loaded is not None:
+            # the skip pre-pass keys off the last superstep's update set —
+            # part of the boundary state (filters are rebuilt lazily; they
+            # have no false negatives, so a missing filter only costs work)
+            self.updated_ids = np.asarray(loaded.state["updated_ids"],
+                                          np.int64)
+        self.building_filters = cfg.tile_skipping
+        self.filters: list = ([None] * engine.plan.num_tiles
+                              if self.building_filters else [])
+
+    # -- public session surface --------------------------------------------
+    @property
+    def superstep(self) -> int:
+        """Index of the next superstep ``step()`` will execute."""
+        return self._ss if hasattr(self, "_ss") else self.start_ss
+
+    @property
+    def active_queries(self) -> tuple[int, ...]:
+        """Global qids of the currently live query columns."""
+        return tuple(int(g) for g in self.active_q) if self.multi_q else ()
+
+    @property
+    def free_slots(self) -> int:
+        """Query slots available for admission right now."""
+        if not self.multi_q:
+            return 0
+        with self._lock:
+            queued = len(self._admit_queue)
+        return max(0, self.q_slots - len(self.active_q) - queued)
+
+    def admit(self, seeds) -> list[int]:
+        """Queue fresh queries (seed vertices) for admission at the next
+        barrier; returns their global qids.  Thread-safe.  Queries beyond
+        the free ``q_slots`` stay queued until retirement frees slots.
+        Cluster mode: rank 0 only (peers follow the control record)."""
+        if not self.multi_q:
+            raise RuntimeError("admission needs a batched [V, Q] program")
+        if (self.eng.exchange is not None
+                and getattr(self.eng.exchange, "rank", 0) != 0):
+            raise RuntimeError("cluster admissions originate at rank 0 — "
+                               "peers splice from the control record")
+        if self.finished:
+            raise RuntimeError("session is finished")
+        with self._lock:
+            gqs = []
+            for s in seeds:
+                g = self.next_qid
+                self.next_qid += 1
+                self._admit_queue.append((g, int(s)))
+                gqs.append(g)
+        return gqs
+
+    def drain(self, qids) -> None:
+        """Force-retire live columns at the next barrier: their partial
+        values freeze into the result buffer and ``per_query_supersteps``
+        stays -1 (deadline misses in the serving path).  Thread-safe."""
+        with self._lock:
+            self._drain_queue.extend(int(g) for g in qids)
+
+    def query_result(self, gq: int) -> np.ndarray:
+        """The frozen [V] column of query ``gq`` — valid once it retired
+        (or drained); before that it holds the admission-time state."""
+        return np.asarray(self.final_values[:, int(gq)]).copy()
+
+    def query_supersteps(self, gq: int) -> int:
+        """Supersteps query ``gq`` took to converge, counted from its own
+        admission (== a fresh single-query run's count); -1 while live or
+        if it was drained."""
+        return int(self.per_query_ss[int(gq)])
+
+    def checkpoint(self) -> None:
+        """Save a resumable boundary checkpoint of the session right now
+        (manifest carries the per-slot query lineage, so a serving session
+        resumes with renumbering and accounting intact)."""
+        if self.eng.ckpt is None:
+            raise RuntimeError("engine has no checkpoint directory")
+        self._save_boundary(self.superstep - 1)
+
+    def close(self) -> None:
+        """Release per-run scratch (the ooc spill tier).  Idempotent;
+        ``result()`` already closed the store on the normal path."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.vstore is not None and self._final_result is None:
+            self.vstore.close()
+
+    # -- the superstep ------------------------------------------------------
+    def step(self) -> SuperstepStats:
+        """Execute exactly one superstep (compute → barrier → apply →
+        retirement → drains → admissions) and return its stats.  Raises
+        ``runtime.ft.Preempted`` after a preemption checkpoint when the
+        engine's guard latched a signal."""
+        if self.finished:
+            raise RuntimeError("session is finished — open a new one")
+        eng = self.eng
+        cfg = eng.cfg
+        prog = self.prog
+        nv = self.nv
+        ooc = self._ooc
+        multi_q = self.multi_q
+        vstore = self.vstore
+        vdtype = self.vdtype
+        row_cap = eng.plan.row_cap
+        filters = self.filters
+        building_filters = self.building_filters
+        ss = self._ss = getattr(self, "_ss", self.start_ss)
+
+        if eng.fault is not None:
+            eng.fault.check("superstep", ss)
+        t_start = time.perf_counter()
+        qa = len(self.active_q) if multi_q else 1  # live columns this step
+        # a batched session with zero live columns still steps (waiting on
+        # scheduled/queued admissions): no compute, but the barrier — and
+        # in cluster mode the exchange carrying the control record — runs
+        run_compute = not (multi_q and qa == 0)
+        values_dev = (None if (ooc or not run_compute)
+                      else jnp.asarray(self.values))
+        load_s = 0.0
+        comp_s = 0.0
+        stall_s = 0.0
+        tiles_done = 0
+        tiles_skipped = 0
+        upd_idx_parts: list[np.ndarray] = []
+        upd_val_parts: list[np.ndarray] = []
+        upd_msk_parts: list[np.ndarray] = []
+        per_server_updates: list[tuple] = []
+        bcast_futures: dict[int, object] = {}
+        # ooc-vstate always measures: the sampled estimator models a
+        # whole-V payload (global density switch, no interval headers),
+        # which would mix incompatible models with the per-interval
+        # records the sampled supersteps learn their ratio from
+        sample = ooc or not (cfg.comm_accounting == "sampled"
+                             and ss % 4 != 0
+                             and eng._wire_ratio is not None)
+
+        # a column admitted at the previous barrier must be treated as
+        # all-dirty for one superstep: run every tile once (filters have
+        # no false negatives, so a full pass can only do extra work,
+        # never change results), then fall back to skip filters
+        force_full = self._force_full
+        self._force_full = False
+        skip_on = (
+            cfg.tile_skipping
+            and ss > 0
+            and not force_full
+            and len(self.updated_ids) < cfg.skip_density_threshold * nv
+            and eng._filters is not None
+        )
+        active_words = None
+        if skip_on and cfg.skip_filter == "bitmap":
+            active_words = SourceBlockBitmap.active_words_from_ids(
+                self.updated_ids, nv, cfg.block_shift
+            )
+
+        for s in (eng.exec_servers if run_compute else ()):
+            s_idx: list[np.ndarray] = []
+            s_val: list[np.ndarray] = []
+            s_msk: list[np.ndarray] = []
+            server_tiles = eng.assignment[s]
+            if self.engine_mode in ("stacked", "merged") and not skip_on:
+                if eng._stacks is None:
+                    t0 = time.perf_counter()
+                    if self.engine_mode == "merged":
+                        eng._build_merged(nv)
+                    else:
+                        eng._build_stacks(nv)
+                    if building_filters:
+                        for st in eng.exec_servers:
+                            n_res = (len(eng.assignment[st])
+                                     - len(eng._streamed[st]))
+                            for tid in eng.assignment[st][:n_res]:
+                                if filters[tid] is None:
+                                    filters[tid] = eng._make_filter(
+                                        eng.caches[st].get(tid), nv)
+                    load_s += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                step_fn = (eng._merged_step if self.engine_mode == "merged"
+                           else eng._stack_step)
+                new_masked, upd = step_fn(prog, values_dev, self.aux_dev,
+                                          eng._stacks[s])
+                si, sv, sm = eng._split_updates(
+                    np.arange(nv), np.asarray(new_masked), np.asarray(upd))
+                comp_s += time.perf_counter() - t0
+                s_idx.append(si)
+                s_val.append(sv.astype(vdtype))
+                if sm is not None:
+                    s_msk.append(sm)
+                tiles_done += len(eng.assignment[s]) - len(eng._streamed[s])
+                server_tiles = eng._streamed[s]
+
+            # Tile-skipping pre-pass: the filter set is fixed for the
+            # whole superstep, so the survivor list can be computed up
+            # front (and handed to the prefetcher in pipelined mode).
+            if skip_on:
+                run_list = []
+                for tid in server_tiles:
+                    f = eng._filters[tid]
+                    # a stolen tile may not have a filter yet on this
+                    # server (cluster mode) — run it, never skip blind
+                    hit = f is None or (
+                        f.intersects(active_words)
+                        if cfg.skip_filter == "bitmap"
+                        else f.might_contain_any(self.updated_ids)
+                    )
+                    if hit:
+                        run_list.append(tid)
+                    else:
+                        tiles_skipped += 1
+                if cfg.debug_skip_log:
+                    eng.skip_log.append(dict(
+                        superstep=ss, server=s,
+                        active=np.asarray(self.updated_ids).copy(),
+                        run=list(run_list),
+                        skipped=[t for t in server_tiles
+                                 if t not in run_list]))
+            else:
+                run_list = list(server_tiles)
+
+            if ooc and cfg.interval_aware_order and len(run_list) > 1:
+                run_list = eng._order_joint_residency(s, run_list)
+            elif cfg.cache_aware_order and len(run_list) > 1:
+                run_list = eng._order_cache_first(s, run_list)
+
+            if cfg.pipeline:
+                p_idx, p_val, p_msk, ld, cp, stl = eng._run_tiles_pipelined(
+                    s, run_list, prog, values_dev, self.aux_dev,
+                    filters if building_filters else None, nv)
+                s_idx += p_idx
+                s_val += p_val
+                s_msk += p_msk
+                load_s += ld
+                comp_s += cp
+                stall_s += stl
+                tiles_done += len(run_list)
+            else:
+                for tid in run_list:
+                    t0 = time.perf_counter()
+                    tile = eng.caches[s].get(tid)
+                    dt = time.perf_counter() - t0
+                    load_s += dt
+                    stall_s += dt   # serial: every load blocks compute
+
+                    if building_filters and filters[tid] is None:
+                        filters[tid] = eng._make_filter(tile, nv)
+
+                    t0 = time.perf_counter()
+                    if ooc:
+                        ri, rv, rm = eng._ooc_tile_step(prog, tile, nv)
+                    else:
+                        rows, new, upd = run_tile(
+                            prog, values_dev, self.aux_dev,
+                            (tile.src, tile.dst_local,
+                             tile_edge_values(tile)),
+                            tile.meta.row_start, tile.meta.num_rows,
+                            row_cap, cfg.seg_impl,
+                        )
+                        ri, rv, rm = eng._split_updates(
+                            np.asarray(rows), np.asarray(new),
+                            np.asarray(upd))
+                    comp_s += time.perf_counter() - t0
+                    s_idx.append(ri)
+                    s_val.append(rv)
+                    if rm is not None:
+                        s_msk.append(rm)
+                    tiles_done += 1
+            si = np.concatenate(s_idx) if s_idx else np.zeros(0, np.int64)
+            val_shape = (0, qa) if multi_q else (0,)
+            sv = (np.concatenate(s_val) if s_val
+                  else np.zeros(val_shape, vdtype))
+            sm = None
+            if multi_q:
+                sm = (np.concatenate(s_msk) if s_msk
+                      else np.zeros(val_shape, dtype=bool))
+            per_server_updates.append((si, sv, sm))
+            upd_idx_parts.append(si)
+            upd_val_parts.append(sv)
+            if multi_q:
+                upd_msk_parts.append(sm)
+            if cfg.pipeline and sample and eng.exchange is None:
+                # overlap this server's payload compression with the next
+                # server's compute; records collected at the barrier below
+                # (cluster mode measures from the real transport instead)
+                bcast_futures[s] = eng._measure_broadcast(
+                    si, sv, sm, nv, qa, vdtype, background=True)
+        if not run_compute:
+            for _ in eng.exec_servers:
+                per_server_updates.append((np.zeros(0, np.int64),
+                                           np.zeros((0, qa), vdtype),
+                                           np.zeros((0, qa), dtype=bool)))
+
+        own_tiles = [t for s in eng.exec_servers
+                     for t in eng.assignment[s]]
+        if building_filters and all(filters[t] is not None
+                                    for t in own_tiles):
+            eng._filters = filters
+            self.building_filters = False
+
+        # --- Broadcast (BSP barrier): measure payloads, apply updates ---
+        if eng.fault is not None:
+            eng.fault.check("barrier", ss)
+        raw_b = wire_b = 0
+        control = None
+        if eng.exchange is not None:
+            # cluster mode (DESIGN.md §11): ship this server's updates
+            # through the real transport, merge every peer's frame — the
+            # exchange IS the global barrier, and the byte counts are
+            # measured from the frames that actually travelled.  Rank 0
+            # collects the admission/drain record pre-exchange (it must
+            # ride its frame); every rank applies the record it reads
+            # back below, after natural retirement.
+            if eng.exchange.rank == 0:
+                control = self._collect_control(
+                    ss, qa, set(self.active_queries), set())
+            si, sv, sm = per_server_updates[0]
+            xr = eng.exchange.exchange(
+                idx=si, vals=sv, mask=sm, nv=nv,
+                splitter=eng._iv_splitter if ooc else None,
+                compute_seconds=comp_s, control=control)
+            control = xr.control
+            all_idx, all_val, all_msk = xr.idx, xr.vals, xr.mask
+            raw_b, wire_b = xr.raw_bytes, xr.wire_bytes
+            if xr.assignment is not None:
+                # cross-server tile stealing: every server derived the
+                # same new ownership from the same replicated timings
+                eng.assignment = [list(a) for a in xr.assignment]
+        else:
+            for k, s in enumerate(eng.exec_servers):
+                if not run_compute:
+                    break
+                si, sv, sm = per_server_updates[k]
+                if sample:
+                    if s in bcast_futures:
+                        rec = bcast_futures[s].result()
+                    else:
+                        rec = eng._measure_broadcast(si, sv, sm, nv, qa,
+                                                     vdtype)
+                    raw_b += rec.raw_bytes
+                    wire_b += rec.wire_bytes
+                else:
+                    pairs = int(sm.sum()) if sm is not None else len(si)
+                    n_eff = nv * qa
+                    est = comm.wire_bytes_estimate(
+                        n_eff, pairs / max(n_eff, 1),
+                        # 2-D sparse payloads pack (vertex, query) u32 pairs
+                        index_bytes=8 if sm is not None else 4)
+                    raw_b += est
+                    wire_b += int(est * eng._wire_ratio)
+            if sample and raw_b:
+                eng._wire_ratio = wire_b / raw_b
+            all_idx = (np.concatenate(upd_idx_parts) if upd_idx_parts
+                       else np.zeros(0, np.int64))
+            all_val = (np.concatenate(upd_val_parts) if upd_val_parts
+                       else np.zeros((0, qa) if multi_q else (0,), vdtype))
+            all_msk = None
+            if multi_q:
+                all_msk = (np.concatenate(upd_msk_parts) if upd_msk_parts
+                           else np.zeros((0, qa), dtype=bool))
+        if multi_q:
+            upd_per_q = all_msk.sum(axis=0)
+            updated_pairs = int(all_msk.sum())
+        else:
+            upd_per_q = None
+            updated_pairs = int(len(all_idx))
+        dirty_ivs = 0
+        if ooc:
+            # dirty-interval writeback (DESIGN.md §10): load only the
+            # interval blocks that received updates, apply in place,
+            # write back dirty — clean intervals are never touched.
+            if len(all_idx):
+                ivs = vstore.interval_of(all_idx)
+                for iv in np.unique(ivs):
+                    ksel = ivs == iv
+                    lo, _hi = vstore.interval_range(int(iv))
+                    blk = vstore.get_block("value", int(iv)).copy()
+                    loc = all_idx[ksel] - lo
+                    if multi_q:
+                        # per-cell application: a row touched by query A
+                        # must not clobber query B's untouched column
+                        cur = blk[loc]
+                        msk = all_msk[ksel]
+                        cur[msk] = all_val[ksel][msk]
+                        blk[loc] = cur
+                    else:
+                        blk[loc] = all_val[ksel]
+                    vstore.write_block("value", int(iv), blk)
+                    dirty_ivs += 1
+        elif multi_q:
+            # per-cell application: a row touched by query A must not
+            # clobber query B's column with a masked zero / sub-tol value
+            cur = self.values[all_idx]
+            cur[all_msk] = all_val[all_msk]
+            self.values[all_idx] = cur
+        else:
+            self.values[all_idx] = all_val
+        self.updated_ids = all_idx
+
+        # Re-tier at the barrier: off the tile hot path, after this
+        # superstep's access pattern has updated the per-tile counters.
+        if cfg.cache_policy != "lru":
+            for c in eng.caches.values():
+                c.maintain()
+
+        cache_stats = eng._agg_cache_stats()
+        io_busy = cache_stats["io_seconds"] - eng._io_busy_cum
+        eng._io_busy_cum = cache_stats["io_seconds"]
+        promo = cache_stats["promotions"] - eng._promo_cum
+        demo = cache_stats["demotions"] - eng._demo_cum
+        eng._promo_cum = cache_stats["promotions"]
+        eng._demo_cum = cache_stats["demotions"]
+        # the cache counter is cumulative over the run; the stat is the
+        # per-superstep delta (like io_busy/promotions above)
+        disk_b = cache_stats["disk_bytes_read"] - eng._disk_cum
+        eng._disk_cum = cache_stats["disk_bytes_read"]
+        vs_faults = vs_load = vs_spill = 0
+        if ooc:
+            vst = vstore.stats
+            vs_faults = vst.faults - eng._vs_faults_cum
+            vs_load = vst.load_bytes - eng._vs_load_cum
+            vs_spill = vst.spill_bytes - eng._vs_spill_cum
+            eng._vs_faults_cum = vst.faults
+            eng._vs_load_cum = vst.load_bytes
+            eng._vs_spill_cum = vst.spill_bytes
+
+        # --- barrier bookkeeping: natural retirement → drains → admissions
+        # (the same order in every execution mode — see class docstring).
+        retired: tuple = ()
+        drained: tuple = ()
+        admitted: tuple = ()
+        upd_map: dict = {}
+        ctl_pending = 0
+        if multi_q:
+            upd_map = {int(g): int(n)
+                       for g, n in zip(self.active_q, upd_per_q)}
+            done = np.nonzero(upd_per_q == 0)[0]
+            retired = tuple(int(self.active_q[c]) for c in done)
+            if eng.exchange is None:
+                # classic mode collects post-retirement: a slot freed at
+                # this barrier refills at this same barrier
+                control = self._collect_control(
+                    ss, qa - len(done), set(self.active_queries),
+                    set(retired))
+            ctl_admit, ctl_drain, ctl_pending = comm.unpack_admissions(
+                control)
+            drained = tuple(g for g in ctl_drain
+                            if g in set(self.active_queries)
+                            and g not in set(retired))
+            freeze = sorted(set(int(c) for c in done)
+                            | {int(np.nonzero(self.active_q == g)[0][0])
+                               for g in drained})
+            if freeze:
+                keep = np.ones(qa, dtype=bool)
+                keep[freeze] = False
+                done_set = set(int(c) for c in done)
+                if ooc:
+                    for c in freeze:
+                        gq = int(self.active_q[c])
+                        self.final_values[:, gq] = eng._ooc_column(vstore, c)
+                        if c in done_set:
+                            self.per_query_ss[gq] = (
+                                ss + 1 - int(self.admitted_at[gq]))
+                    q_names = [n for n in vstore.names()
+                               if vstore.spec(n)[1] == (qa,)]
+                    vstore.compact_columns(q_names, keep)
+                else:
+                    for c in freeze:
+                        gq = int(self.active_q[c])
+                        self.final_values[:, gq] = self.values[:, c]
+                        if c in done_set:
+                            self.per_query_ss[gq] = (
+                                ss + 1 - int(self.admitted_at[gq]))
+                    self.values = np.ascontiguousarray(
+                        self.values[:, keep])
+                    for k in list(self.aux_np):
+                        a = self.aux_np[k]
+                        if a.ndim == 2 and a.shape[1] == qa:  # per-query
+                            self.aux_np[k] = np.ascontiguousarray(
+                                a[:, keep])
+                            self.aux_dev[k] = jnp.asarray(self.aux_np[k])
+                self.active_q = self.active_q[keep]
+            if ctl_admit:
+                self._apply_admissions(ctl_admit, ss)
+                admitted = tuple(int(g) for g, _ in ctl_admit)
+                self._force_full = True
+        # every rank drops the plan entries that fired at this barrier
+        # (peers never fire them, but must agree the backlog shrank)
+        self._plan_pending = [e for e in self._plan_pending if e[0] > ss]
+
+        stats = SuperstepStats(
+            superstep=ss,
+            seconds=time.perf_counter() - t_start,
+            load_seconds=load_s,
+            compute_seconds=comp_s,
+            updated_vertices=int(len(all_idx)),
+            density=float(len(all_idx)) / max(nv, 1),
+            tiles_processed=tiles_done,
+            tiles_skipped=tiles_skipped,
+            raw_bytes=raw_b,
+            wire_bytes=wire_b,
+            network_bytes=wire_b * max(cfg.num_servers - 1, 0),
+            cache_hit_ratio=cache_stats["hit_ratio"],
+            disk_bytes_read=disk_b,
+            stall_seconds=stall_s,
+            io_busy_seconds=io_busy,
+            cache_promotions=promo,
+            cache_demotions=demo,
+            cache_tiers=cache_stats["tiers"],
+            active_queries=qa,
+            updated_pairs=updated_pairs,
+            updated_per_query=upd_map,
+            retired_queries=retired,
+            admitted_queries=admitted,
+            drained_queries=drained,
+            vstate_faults=vs_faults,
+            vstate_load_bytes=vs_load,
+            vstate_spill_bytes=vs_spill,
+            vstate_dirty_intervals=dirty_ivs,
+        )
+        self.history.append(stats)
+        self.converged = (len(self.active_q) == 0 if multi_q
+                          else len(all_idx) == 0)
+        self._ss = ss + 1
+        with self._lock:
+            backlog = (bool(self._plan_pending) or ctl_pending > 0
+                       or bool(self._admit_queue))
+        self.finished = ((self.converged and not backlog)
+                         or self._ss >= self.max_ss)
+
+        # --- superstep-boundary checkpoint + preemption (DESIGN.md §12)
+        # Written AFTER update apply + retirement + admission — this
+        # boundary's state is exactly what superstep ss+1 starts from.
+        # State is fully replicated, so rank 0 is the single periodic
+        # writer; a preempted rank may also save (collision-safe publish).
+        if eng.ckpt is not None and not self.finished:
+            due = (cfg.checkpoint_every > 0
+                   and (ss + 1) % cfg.checkpoint_every == 0
+                   and cfg.server_rank in (None, 0))
+            preempt = eng._guard is not None and eng._guard.triggered
+            if due or preempt:
+                self._save_boundary(ss)
+            if preempt:
+                if ooc:
+                    vstore.close()
+                raise Preempted(ss + 1)
+        return stats
+
+    # -- result / epilogue ---------------------------------------------------
+    def result(self) -> RunResult:
+        """Finalize the session and return its RunResult (same contract as
+        the pre-session monolithic ``run()``): flush still-live columns,
+        materialize + close the ooc store, publish the final checkpoint."""
+        if self._final_result is not None:
+            return self._final_result
+        if not self.finished:
+            raise RuntimeError(
+                "session still live — step() to completion or drain first")
+        eng = self.eng
+        ooc, vstore = self._ooc, self.vstore
+        values, aux_np = self.values, self.aux_np
+        if self.multi_q:
+            # flush columns still live at max_supersteps into the result
+            for c, gq in enumerate(self.active_q):
+                self.final_values[:, int(gq)] = (
+                    eng._ooc_column(vstore, c) if ooc else values[:, c])
+            values = self.final_values
+        elif ooc:
+            values = vstore.materialize("value")
+        if ooc:
+            # the result materializes the final arrays; the working state
+            # and its disk spill tier are per-run scratch
+            aux_np = {n: vstore.materialize(n) for n in vstore.names()
+                      if n != "value"}
+            vstore.close()
+        # supersteps counts GLOBALLY (resume continues the numbering, so a
+        # resumed run reports the same count as the uninterrupted one even
+        # though its history holds only the post-resume entries)
+        supersteps = self.start_ss + len(self.history)
+        if eng.ckpt is not None and eng.cfg.server_rank in (None, 0):
+            eng._save_final(values, aux_np, self.per_query_ss,
+                            self.converged, supersteps)
+        self._final_result = RunResult(
+            values=values, aux=aux_np, history=self.history,
+            supersteps=supersteps, converged=self.converged,
+            per_query_supersteps=self.per_query_ss)
+        return self._final_result
+
+    # -- admission internals -------------------------------------------------
+    def _collect_control(self, ss: int, live_base: int, active_set: set,
+                         retired_set: set) -> Optional[dict]:
+        """Assemble this barrier's admission/drain control record (rank 0
+        / classic engine only).  ``live_base`` is the column count that
+        survives this barrier's natural retirement (cluster mode passes
+        the conservative pre-retirement count — a slot freed at the same
+        barrier refills one barrier later there); scheduled ``admit_plan``
+        entries fire first and bypass the slot cap, then queued live
+        admissions fill the remaining free slots."""
+        if not self.multi_q:
+            return None
+        with self._lock:
+            drains: list[int] = []
+            for g in self._drain_queue:
+                if g not in drains:
+                    drains.append(g)
+            self._drain_queue.clear()
+            live_drains = [g for g in drains
+                           if g in active_set and g not in retired_set]
+            admit: list[tuple[int, int]] = []
+            for after, seeds in self._plan_pending:
+                if after == ss:
+                    for s in seeds:
+                        admit.append((self.next_qid, int(s)))
+                        self.next_qid += 1
+            free = self.q_slots - (live_base - len(live_drains))
+            while self._admit_queue and free > 0:
+                admit.append(self._admit_queue.pop(0))
+                free -= 1
+            return comm.pack_admissions(admit, drains,
+                                        len(self._admit_queue))
+
+    def _apply_admissions(self, admit: list, ss: int) -> None:
+        """Splice freshly admitted query columns into the live state — the
+        inverse of retirement's compaction.  Initial column state comes
+        from ``prog.with_queries(seeds).init`` (column math is independent
+        of batch context, so the spliced column is bit-identical to a
+        fresh single-query run); per-query aux arrays ([V, q_new]) splice
+        alongside, shared aux is untouched.  Deterministic given the
+        control record, so every cluster rank converges to identical
+        state."""
+        eng = self.eng
+        nv = self.nv
+        gqs = [int(g) for g, _ in admit]
+        seeds = [int(s) for _, s in admit]
+        sub = self.prog.with_queries(seeds)
+        state = sub.init(nv, eng.out_degree.astype(np.float64),
+                         eng.in_degree.astype(np.float64))
+        new_vals = np.asarray(state.pop("value")).astype(self.vdtype)
+        qn = len(gqs)
+        per_q_aux = {k: np.asarray(v) for k, v in state.items()
+                     if np.asarray(v).ndim == 2
+                     and np.asarray(v).shape[1] == qn}
+        hi = max(gqs) + 1
+        if hi > len(self.per_query_ss):
+            grow = hi - len(self.per_query_ss)
+            self.per_query_ss = np.concatenate(
+                [self.per_query_ss, np.full(grow, -1, np.int64)])
+            self.admitted_at = np.concatenate(
+                [self.admitted_at, np.zeros(grow, np.int64)])
+            self.final_values = np.ascontiguousarray(np.concatenate(
+                [self.final_values,
+                 np.zeros((nv, grow), self.final_values.dtype)], axis=1))
+        for g, s in zip(gqs, seeds):
+            self.admitted_at[g] = ss + 1
+            self.query_seeds[g] = s
+        self.final_values[:, gqs] = new_vals
+        self.nq_total = len(self.per_query_ss)
+        # peers renumber from the control record (rank 0 assigned at
+        # collect time); max() keeps both sides monotonic
+        self.next_qid = max(self.next_qid, hi)
+        if self._ooc:
+            self.vstore.append_columns({"value": new_vals, **per_q_aux})
+        else:
+            self.values = np.ascontiguousarray(
+                np.concatenate([self.values, new_vals], axis=1))
+            for k, arr in per_q_aux.items():
+                self.aux_np[k] = np.ascontiguousarray(
+                    np.concatenate([self.aux_np[k], arr], axis=1))
+                self.aux_dev[k] = jnp.asarray(self.aux_np[k])
+        self.active_q = np.concatenate(
+            [self.active_q, np.asarray(gqs, dtype=self.active_q.dtype)])
+
+    # -- checkpoint ----------------------------------------------------------
+    def _save_boundary(self, ss: int) -> None:
+        """Write the superstep-``ss+1`` boundary checkpoint: manifest
+        (resume point, live queries + per-slot lineage, replicated
+        assignment) + state leaves; ooc runs flush vertex state as
+        interval blocks instead of leaves (dirty blocks only — clean ones
+        hardlink, see core.checkpoint)."""
+        eng, cfg = self.eng, self.eng.cfg
+        manifest = dict(
+            superstep=ss + 1,
+            final=False,
+            converged=False,
+            multi_q=bool(self.multi_q),
+            nq_total=int(self.nq_total),
+            num_servers=int(cfg.num_servers),
+            assignment=[[int(t) for t in a] for a in eng.assignment],
+            active_q=([int(g) for g in self.active_q]
+                      if self.multi_q else None),
+            next_qid=int(self.next_qid),
+            queries={str(g): int(s) for g, s in self.query_seeds.items()},
+        )
+        state: dict = {"updated_ids": np.asarray(self.updated_ids,
+                                                 np.int64)}
+        if self.multi_q:
+            state["final_values"] = self.final_values
+            state["per_query_ss"] = self.per_query_ss
+            state["admitted_at"] = self.admitted_at
+        if self.vstore is None:
+            state["values"] = self.values
+            state["aux"] = self.aux_np
+        eng.ckpt.save_graph(ss + 1, state, manifest, vstore=self.vstore)

@@ -128,6 +128,7 @@ def encode_frame(
     threshold: float = comm.DENSITY_THRESHOLD,
     compressor: str = "zstd-1",
     mode: str = "hybrid",
+    control: Optional[dict] = None,
 ) -> tuple[bytes, dict]:
     """Encode one server's per-superstep update set into a wire frame.
 
@@ -137,9 +138,12 @@ def encode_frame(
     is per-dirty-interval sections exactly like
     ``comm.plan_broadcast_intervals``; otherwise one whole-V payload like
     ``comm.plan_broadcast``.  A frame is a pure function of the update
-    set (no timings or other run-varying control data — the exchange
-    carries those in its fixed-width envelope), so its size is
-    reproducible across runs.
+    set plus the barrier's ``control`` record (no timings or other
+    run-varying measurements — the exchange carries those in its
+    fixed-width envelope), so its size is reproducible across runs.
+    ``control``, when given, is a JSON-safe dict shipped verbatim in the
+    header — the session's admission/drain records (DESIGN.md §13) ride
+    here so every rank splices the same columns at the same barrier.
 
     Returns (frame bytes, header dict).  ``header["wire_bytes"]`` is the
     full frame size (what actually travels); ``header["raw_bytes"]`` the
@@ -157,7 +161,7 @@ def encode_frame(
         for m in ("dense", "sparse", "threshold"):
             cand = encode_frame(idx, vals, mask, nv, splitter=splitter,
                                 threshold=threshold, compressor=compressor,
-                                mode=m)
+                                mode=m, control=control)
             if best is None or len(cand[0]) < len(best[0]):
                 best = cand
         return best
@@ -208,6 +212,8 @@ def encode_frame(
         density=updated_cells / max(cells, 1),
         raw_bytes=int(raw),
     )
+    if control:
+        header["control"] = control
     body_all = b"".join(bodies)
     hb = json.dumps(header).encode()
     frame = b"".join([FRAME_MAGIC, _U32.pack(len(hb)), hb, body_all])

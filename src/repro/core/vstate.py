@@ -249,6 +249,71 @@ class VertexStateStore:
                     self._mem += b.mem_bytes()
             self._enforce_budget()
 
+    def append_columns(self, cols: dict[str, np.ndarray]) -> None:
+        """Multi-query admission support (DESIGN.md §13): splice fresh query
+        columns onto the trailing axis of ``[V, Q]`` arrays, block by block.
+
+        The inverse of ``compact_columns`` — but tier-preserving: each block
+        is re-encoded *at its current tier* (hot blocks concat in memory;
+        warm blobs decompress → concat → recompress warm; cold spill files
+        are rewritten in place at cold mode) so admitting a query never
+        promotes cold state into the byte budget.  ``cols`` maps array name
+        to the ``[V, q_new]`` columns to append; every name must already be
+        registered with a 1-D query tail."""
+        with self._lock:
+            for name, new in cols.items():
+                new = np.asarray(new)
+                dt, tail = self._specs[name]
+                assert len(tail) == 1, f"{name} has no query axis"
+                assert new.ndim == 2 and new.shape[0] == self.num_vertices, \
+                    (name, new.shape, self.num_vertices)
+                new = np.ascontiguousarray(new, dtype=dt)
+                self._specs[name] = (dt, (int(tail[0]) + new.shape[1],))
+                for k in range(self.num_intervals):
+                    lo, hi = self.interval_range(k)
+                    piece = new[lo:hi]
+                    b = self._blocks[(name, k)]
+                    self._mem -= b.mem_bytes()
+                    if b.arr is not None:
+                        b.arr = np.ascontiguousarray(
+                            np.concatenate([b.arr, piece], axis=1))
+                        b.shape = b.arr.shape
+                        b.blob = None
+                        b.file_ok = False
+                    elif b.blob is not None:
+                        t0 = time.perf_counter()
+                        raw = formats.decompress_blob(b.blob, WARM_MODE)
+                        self.stats.decompress_seconds += (
+                            time.perf_counter() - t0)
+                        cur = np.frombuffer(raw, dtype=b.dtype).reshape(b.shape)
+                        cur = np.ascontiguousarray(
+                            np.concatenate([cur, piece], axis=1))
+                        b.shape = cur.shape
+                        t0 = time.perf_counter()
+                        b.blob = formats.compress_blob(cur.tobytes(), WARM_MODE)
+                        self.stats.compress_seconds += (
+                            time.perf_counter() - t0)
+                        b.file_ok = False
+                    else:
+                        assert b.file_ok, \
+                            f"block {(name, k)} has no representation"
+                        t0 = time.perf_counter()
+                        with open(self._path(b), "rb") as f:
+                            fb = f.read()
+                        self.stats.disk_seconds += time.perf_counter() - t0
+                        t0 = time.perf_counter()
+                        raw = formats.decompress_blob(fb, COLD_MODE)
+                        self.stats.decompress_seconds += (
+                            time.perf_counter() - t0)
+                        cur = np.frombuffer(raw, dtype=b.dtype).reshape(b.shape)
+                        cur = np.ascontiguousarray(
+                            np.concatenate([cur, piece], axis=1))
+                        b.shape = cur.shape
+                        self._spill(b, cur.tobytes())
+                    b.version += 1
+                    self._mem += b.mem_bytes()
+            self._enforce_budget()
+
     # -- checkpoint support (DESIGN.md §12) ----------------------------------
     def block_version(self, name: str, k: int) -> int:
         """Content version of one block — bumped on every mutation, so an

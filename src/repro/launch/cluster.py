@@ -346,6 +346,23 @@ def run_cluster(store_root: str, progs: list,
             shutil.rmtree(base_dir, ignore_errors=True)
 
 
+def parse_admit_plan(specs) -> Optional[tuple]:
+    """``--admit`` specs -> ``EngineConfig.admit_plan``: each
+    ``"SS:seed1,seed2"`` entry schedules those query seeds for admission
+    at the end of superstep SS (batched apps only; DESIGN.md §13)."""
+    if not specs:
+        return None
+    plan = []
+    for spec in specs:
+        try:
+            ss, seeds = spec.split(":", 1)
+            plan.append((int(ss), tuple(int(s)
+                                        for s in seeds.split(","))))
+        except ValueError:
+            raise SystemExit(f"--admit {spec!r}: expected 'SS:seed,seed'")
+    return tuple(sorted(plan))
+
+
 def _build_progs(args) -> list:
     """Vertex program list for the CLI (mirrors launch.graph seeding)."""
     from repro.core.apps import APPS
@@ -440,6 +457,15 @@ def main(argv=None) -> ClusterResult:
                     help="after the (possibly faulted/restarted) cluster "
                          "run, re-run uninterrupted in-process and fail "
                          "unless the answers are byte-for-byte identical")
+    ap.add_argument("--admit", action="append", default=None,
+                    metavar="SS:SEEDS",
+                    help="scripted mid-run admission for batched apps "
+                         "(DESIGN.md §13), repeatable: '4:17,42' splices "
+                         "queries seeded at vertices 17 and 42 into "
+                         "retired [V,Q] slots at the end of superstep 4. "
+                         "The plan replicates to every rank; rank 0 "
+                         "admits (its frame header carries the record) "
+                         "and peers splice deterministically from it")
     args = ap.parse_args(argv)
 
     if args.reuse and args.store:
@@ -480,6 +506,7 @@ def main(argv=None) -> ClusterResult:
         resume=args.resume,
         preemptible=args.preemptible,
         fault_plan=fault_plan,
+        admit_plan=parse_admit_plan(args.admit),
     )
     cfg = ClusterConfig(num_servers=args.servers, transport=args.transport,
                         steal=args.steal, on_failure=args.on_failure,

@@ -44,6 +44,86 @@ def build_store(args) -> TileStore:
     return store
 
 
+def _serve_main(args):
+    """``--serve``: long-lived graph-query service over the tile store
+    (DESIGN.md §13).  A scripted workload of ``--serve-requests`` mixed
+    queries (seeded from ``--seed``) is offered at ``--serve-qps`` (0 =
+    all upfront) from a feeder thread; the serve loop runs in the main
+    thread so SIGTERM drains gracefully (exit 0).  With
+    ``--serve-requests 0`` the service idles until SIGTERM."""
+    import threading
+
+    from repro.serve.graph_service import SERVABLE, GraphService
+
+    apps = [a.strip() for a in args.serve_apps.split(",") if a.strip()]
+    bad = [a for a in apps if a not in SERVABLE]
+    if bad:
+        raise SystemExit(f"--serve-apps: {bad} not servable "
+                         f"(batched apps only: {', '.join(SERVABLE)})")
+    if args.reuse and args.store:
+        store = TileStore(args.store)
+        store.load_meta()
+    else:
+        store = build_store(args)
+    cfg = EngineConfig(
+        num_servers=args.servers,
+        cache_capacity_bytes=int(args.cache_mb * 1e6),
+        cache_mode=args.cache_mode if args.cache_mode == "auto"
+        else int(args.cache_mode),
+        comm_mode=args.comm_mode,
+        cache_policy=args.cache_policy,
+        pipeline=args.pipeline,
+        vertex_memory_budget=(None if args.vertex_memory_budget is None
+                              else int(args.vertex_memory_budget * 1e6)),
+        num_intervals=args.num_intervals,
+        checkpoint_dir=args.checkpoint_dir,
+    )
+    svc = GraphService(
+        store, cfg, q_slots=args.q_slots, min_fill=args.min_fill,
+        max_wait_s=args.max_wait_ms / 1e3,
+        default_deadline_s=(None if args.deadline_ms is None
+                            else args.deadline_ms / 1e3),
+        max_supersteps=args.supersteps,
+        drain_mode=args.drain_mode, resume=args.resume)
+
+    def feeder():
+        rng = np.random.default_rng(args.seed)
+        tickets = []
+        for i in range(args.serve_requests):
+            if args.serve_qps > 0 and i:
+                time.sleep(1.0 / args.serve_qps)
+            try:
+                tickets.append(svc.submit(apps[i % len(apps)],
+                                          int(rng.integers(args.vertices))))
+            except RuntimeError:
+                break               # service started draining under us
+        for t in tickets:
+            t.wait()
+        svc.request_drain()
+
+    if args.serve_requests:
+        threading.Thread(target=feeder, daemon=True).start()
+    print(f"serving {','.join(apps)} on {store.root} "
+          f"(q_slots={args.q_slots}, min_fill={args.min_fill}, "
+          f"max_wait={args.max_wait_ms:g} ms, drain={args.drain_mode})",
+          flush=True)
+    t0 = time.time()
+    svc.serve()
+    dt = time.time() - t0
+    s = svc.latency_summary()
+    print(f"drained: {svc.stats['done']} done, {svc.stats['timeout']} "
+          f"timeout, {svc.stats['failed']} failed in {dt:.1f}s "
+          f"({svc.stats['done'] / max(dt, 1e-9):.2f} queries/s, "
+          f"{svc.stats['supersteps']} supersteps, "
+          f"{svc.stats['sessions_opened']} sessions)")
+    if s.get("count"):
+        print(f"  latency p50 {s['p50_ms']:.0f} ms, p99 {s['p99_ms']:.0f} "
+              f"ms (queue {s['mean_queue_ms']:.0f} ms + service "
+              f"{s['mean_service_ms']:.0f} ms mean); "
+              f"{s['mean_supersteps']:.1f} supersteps/query mean")
+    return svc
+
+
 def main(argv=None):
     """Parse CLI flags, build/reuse a tile store, and run the selected app
     through the out-of-core engine (or hand off to the multi-process
@@ -138,7 +218,45 @@ def main(argv=None):
     ap.add_argument("--verify-clean", action="store_true",
                     help="cluster mode: diff the run against an "
                          "uninterrupted in-process rerun")
+    ap.add_argument("--admit", action="append", default=None,
+                    metavar="SS:SEEDS",
+                    help="scripted mid-run admission for batched apps "
+                         "(DESIGN.md §13), repeatable: '4:17,42' splices "
+                         "those query seeds into retired [V,Q] slots at "
+                         "the end of superstep 4")
+    ap.add_argument("--serve", action="store_true",
+                    help="run as a long-lived graph-query service "
+                         "(DESIGN.md §13): queries admit into retired "
+                         "[V,Q] slots mid-run; SIGTERM drains gracefully")
+    ap.add_argument("--q-slots", type=int, default=8,
+                    help="serve mode: live query columns per session")
+    ap.add_argument("--min-fill", type=int, default=1,
+                    help="serve mode: batch admissions until this many "
+                         "queries are queued (amortizes the all-dirty "
+                         "superstep an admission forces) ...")
+    ap.add_argument("--max-wait-ms", type=float, default=50.0,
+                    help="... but admit anyway after this long")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="serve mode: per-query deadline; overdue "
+                         "queries drain with partial results")
+    ap.add_argument("--serve-requests", type=int, default=32,
+                    help="serve mode: scripted workload size "
+                         "(0 = serve idle until SIGTERM)")
+    ap.add_argument("--serve-qps", type=float, default=0.0,
+                    help="serve mode: offered arrival rate for the "
+                         "scripted workload (0 = submit all upfront)")
+    ap.add_argument("--serve-apps", default="ppr,msbfs",
+                    help="serve mode: comma list of batched apps the "
+                         "scripted workload mixes")
+    ap.add_argument("--drain-mode", default="finish",
+                    choices=["finish", "checkpoint"],
+                    help="serve mode: on SIGTERM, run in-flight queries "
+                         "to convergence or checkpoint them for a "
+                         "--resume'd service restart")
     args = ap.parse_args(argv)
+
+    if args.serve:
+        return _serve_main(args)
 
     if args.cluster:
         from repro.launch import cluster as cluster_mod
@@ -178,6 +296,8 @@ def main(argv=None):
             cl_argv += ["--checkpoint-dir", args.checkpoint_dir]
         for spec in args.inject or ():
             cl_argv += ["--inject", spec]
+        for spec in args.admit or ():
+            cl_argv += ["--admit", spec]
         if args.store:
             cl_argv += ["--store", args.store]
         if args.queries:
@@ -223,6 +343,11 @@ def main(argv=None):
 
         cfg = dataclasses.replace(cfg, fault_plan=faults.parse_plan(
             args.inject))
+    if args.admit:
+        from repro.launch.cluster import parse_admit_plan
+
+        cfg = dataclasses.replace(cfg,
+                                  admit_plan=parse_admit_plan(args.admit))
     eng = OutOfCoreEngine(store, cfg)
     batched = args.app in ("ppr", "msbfs", "landmarks")
     if batched:

@@ -86,7 +86,7 @@ class ServeEngine:
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         sc, logits = self._prefill1(self.params, sc, toks)
         self.cache = _insert_slot(self.cache, sc, slot)
-        nxt = self._sample(logits[0, -1], req)
+        nxt = self._sample(logits[0, -1], req, step=0)
         self.cache_len[slot] = len(req.prompt)
         self.active[slot] = True
         self.slot_req[slot] = req
@@ -94,11 +94,14 @@ class ServeEngine:
         self.stats["prefill_calls"] += 1
         self._prefill_s = time.perf_counter() - t0
 
-    def _sample(self, logits, req: Request):
+    def _sample(self, logits, req: Request, step: int):
+        """Sample the next token; ``step`` is this request's decode-step
+        counter, so the (rid, step) seed pair is fresh every step but a
+        rerun of the same request reproduces the same sequence."""
         if req.temperature <= 0:
             return int(jnp.argmax(logits))
         p = jax.nn.softmax(logits / req.temperature)
-        return int(np.random.default_rng(req.rid + len(self.slot_out)).choice(
+        return int(np.random.default_rng((req.rid, step)).choice(
             len(p), p=np.asarray(p, dtype=np.float64) / float(np.sum(p))))
 
     def _slot_done(self, slot: int) -> bool:
@@ -147,7 +150,8 @@ class ServeEngine:
                 if not self.active[s]:
                     continue
                 req = self.slot_req[s]
-                nxt = self._sample(logits[s, -1], req)
+                nxt = self._sample(logits[s, -1], req,
+                                   step=len(self.slot_out[s]))
                 self.slot_out[s].append(int(nxt))
                 completions[req.rid].decode_s += dt / max(self.active.sum(), 1)
                 self.stats["tokens"] += 1

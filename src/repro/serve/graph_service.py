@@ -1,0 +1,416 @@
+"""Online graph-query serving over step-driven engine sessions
+(DESIGN.md §13; beyond the GraphH paper, which is batch-only).
+
+The batch engine already retires converged query columns mid-run;
+:class:`~repro.core.engine.EngineSession` adds the inverse — splicing
+fresh queries into the freed ``[V, Q]`` slots at a barrier.  This module
+turns that pair into a long-running service:
+
+  * ``submit(app, seed)`` (any thread) queues a query and returns a
+    :class:`QueryTicket`;
+  * the serve loop (ONE driver thread — run ``serve()`` in the main
+    thread so the SIGTERM guard is live) opens one engine session per
+    app family, steps the live sessions round-robin, and admits queued
+    queries at barriers under a **batched admission policy**: wait until
+    ``min_fill`` queries are queued (amortizing the all-dirty superstep
+    an admission forces) but never past ``max_wait_s``;
+  * per-query **deadlines**: a live query past its deadline is drained
+    at the next barrier — its ticket finishes with status ``timeout``
+    and the partial column as the result;
+  * per-query **latency accounting**: queue wait, service time, total,
+    and the superstep count (identical to a fresh single-query run's,
+    by the admission-equivalence invariant);
+  * **graceful drain** on SIGTERM (or ``request_drain()``): admission
+    stops, in-flight queries either run to convergence
+    (``drain_mode="finish"``) or the sessions checkpoint with their
+    per-slot query lineage (``drain_mode="checkpoint"``, resumable via
+    ``resume=True``), then ``serve()`` returns — exit 0.
+
+Sessions are ephemeral: when a session finishes (everything converged,
+nothing queued for its app) it is finalized and discarded; the next
+submit for that app opens a fresh one.  Engines — and their edge-tile
+caches, skip filters, interval bookkeeping — persist for the service
+lifetime, so a new session starts with warm caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.apps import APPS
+from repro.core.engine import EngineConfig, OutOfCoreEngine
+from repro.runtime.ft import PreemptionGuard
+
+#: app families the service accepts: batched [V, Q] programs only (the
+#: admission protocol splices query columns; 1-D programs have none)
+SERVABLE = ("ppr", "msbfs", "landmarks")
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """One submitted query's lifecycle + latency record.
+
+    ``status``: queued → running → done | timeout (``failed`` when the
+    service shut down before the query could finish).  ``result`` holds
+    the query's [V] value column once finished (partial values for
+    timeouts).  Times are ``time.perf_counter()`` seconds.
+    """
+
+    rid: int
+    app: str
+    seed: int
+    deadline_s: Optional[float] = None
+    submitted_s: float = 0.0
+    status: str = "queued"
+    gq: int = -1                     # global qid inside the app's session
+    admitted_s: float = 0.0
+    finished_s: float = 0.0
+    supersteps: int = -1
+    result: Optional[np.ndarray] = None
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Seconds from submit to admission at a barrier."""
+        return max(0.0, self.admitted_s - self.submitted_s)
+
+    @property
+    def service_s(self) -> float:
+        """Seconds from admission to retirement (or drain)."""
+        return max(0.0, self.finished_s - self.admitted_s)
+
+    @property
+    def total_s(self) -> float:
+        """Submit-to-finish latency — what the client observes."""
+        return max(0.0, self.finished_s - self.submitted_s)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the query finished (done/timeout/failed)."""
+        return self._event.wait(timeout)
+
+
+class GraphService:
+    """Long-running graph-query service over one TileStore (module
+    docstring).  ``cfg`` is the engine config template; the service
+    forces ``preemptible=False`` (it owns the SIGTERM guard — the engine
+    must not race it for the handlers) and fans out per-app checkpoint
+    directories under ``cfg.checkpoint_dir`` when one is set."""
+
+    def __init__(self, store, cfg: EngineConfig, *,
+                 q_slots: int = 8,
+                 min_fill: int = 1,
+                 max_wait_s: float = 0.05,
+                 default_deadline_s: Optional[float] = None,
+                 max_supersteps: int = 200,
+                 drain_mode: str = "finish",
+                 resume: bool = False):
+        if drain_mode not in ("finish", "checkpoint"):
+            raise ValueError(f"drain_mode {drain_mode!r}")
+        if drain_mode == "checkpoint" and not cfg.checkpoint_dir:
+            raise ValueError("drain_mode='checkpoint' needs a "
+                             "cfg.checkpoint_dir")
+        self.store = store
+        self.cfg = dataclasses.replace(cfg, preemptible=False,
+                                       resume=resume)
+        self.q_slots = max(1, int(q_slots))
+        self.min_fill = max(1, int(min_fill))
+        self.max_wait_s = float(max_wait_s)
+        self.default_deadline_s = default_deadline_s
+        self.max_supersteps = int(max_supersteps)
+        self.drain_mode = drain_mode
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._pending: dict[str, list[QueryTicket]] = {}
+        self._live: dict[str, dict[int, QueryTicket]] = {}
+        self._engines: dict[str, OutOfCoreEngine] = {}
+        self._sessions: dict = {}
+        self._next_rid = 0
+        self._draining = False
+        self._stopped = False
+        self._thread: Optional[threading.Thread] = None
+        self.guard = PreemptionGuard()
+        self.completed: list[QueryTicket] = []
+        self.stats = dict(submitted=0, done=0, timeout=0, failed=0,
+                          supersteps=0, sessions_opened=0)
+        if resume and cfg.checkpoint_dir:
+            self._resume_sessions()
+
+    # -- client surface ----------------------------------------------------
+    def submit(self, app: str, seed: int,
+               deadline_s: Optional[float] = None) -> QueryTicket:
+        """Queue one query (thread-safe); returns its ticket.  Raises
+        once the service is draining — clients must back off."""
+        if app not in SERVABLE:
+            raise ValueError(f"app {app!r} not servable (batched apps "
+                             f"only: {', '.join(SERVABLE)})")
+        with self._lock:
+            if self._draining or self._stopped:
+                raise RuntimeError("service is draining — not admitting")
+            t = QueryTicket(rid=self._next_rid, app=app, seed=int(seed),
+                            deadline_s=(deadline_s if deadline_s is not None
+                                        else self.default_deadline_s),
+                            submitted_s=time.perf_counter())
+            self._next_rid += 1
+            self._pending.setdefault(app, []).append(t)
+            self.stats["submitted"] += 1
+            self._wake.notify()
+        return t
+
+    def request_drain(self) -> None:
+        """Begin graceful drain (what SIGTERM triggers): stop admitting,
+        finish or checkpoint in-flight work, then ``serve()`` returns."""
+        with self._lock:
+            self._draining = True
+            self._wake.notify()
+
+    # -- serve loop --------------------------------------------------------
+    def serve(self) -> None:
+        """Run the serve loop until drained.  Call from the MAIN thread
+        for live SIGTERM handling (``PreemptionGuard`` is inert
+        elsewhere); background use goes through ``start()`` +
+        ``request_drain()``."""
+        with self.guard:
+            try:
+                while True:
+                    if self.guard.triggered:
+                        with self._lock:
+                            self._draining = True
+                    if self._tick():
+                        break
+            finally:
+                self._shutdown()
+
+    def start(self) -> threading.Thread:
+        """Run ``serve()`` on a daemon thread (benchmarks/tests; SIGTERM
+        latching is inert off-main-thread — use ``request_drain()``)."""
+        self._thread = threading.Thread(target=self.serve,
+                                        name="graph-serve", daemon=True)
+        self._thread.start()
+        return self._thread
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def _tick(self) -> bool:
+        """One serve-loop iteration; True when fully drained."""
+        now = time.perf_counter()
+        with self._lock:
+            draining = self._draining
+            if draining and self.drain_mode == "checkpoint":
+                return True    # _shutdown checkpoints the live sessions
+            # open sessions for apps whose batching policy fired
+            for app, queue in list(self._pending.items()):
+                if not queue or draining:
+                    continue
+                if app not in self._sessions:
+                    sess = self._open_session(app, queue)
+                    if sess is not None:
+                        continue    # first batch rode the open
+                sess = self._sessions.get(app)
+                if sess is None:
+                    continue
+                free = max(0, self.q_slots - len(sess.active_queries))
+                oldest = queue[0].submitted_s
+                if free and (len(queue) >= self.min_fill
+                             or now - oldest >= self.max_wait_s):
+                    batch = queue[:free]
+                    del queue[:free]
+                    gqs = sess.admit([t.seed for t in batch])
+                    for t, g in zip(batch, gqs):
+                        t.gq = g
+                        t.status = "running"
+                        t.admitted_s = time.perf_counter()
+                        self._live[app][g] = t
+            # deadline sweep: drain live queries past their deadline
+            for app, live in self._live.items():
+                overdue = [t.gq for t in live.values()
+                           if t.deadline_s is not None
+                           and t.status == "running"
+                           and now - t.submitted_s > t.deadline_s]
+                if overdue and app in self._sessions:
+                    self._sessions[app].drain(overdue)
+            idle = not self._sessions
+        if idle:
+            if draining:
+                return True    # _shutdown fails whatever is still queued
+            with self._wake:
+                self._wake.wait(timeout=self.max_wait_s)
+            return False
+        # step every live session once, round-robin (outside the lock:
+        # submit() stays responsive during a superstep)
+        for app in list(self._sessions):
+            sess = self._sessions[app]
+            st = sess.step()
+            self.stats["supersteps"] += 1
+            self._finish(app, sess, st.retired_queries, "done")
+            self._finish(app, sess, st.drained_queries, "timeout")
+            if sess.finished:
+                self._close_session(app, sess)
+        return False
+
+    def _open_session(self, app: str, queue: list[QueryTicket]):
+        """Open a session for ``app`` seeded with the queued batch (the
+        initial batch needs no admission barrier — it IS the program).
+        Called under the lock."""
+        batch = queue[:self.q_slots]
+        if not batch:
+            return None
+        del queue[:len(batch)]
+        eng = self._engine(app)
+        prog = APPS[app]().with_queries([t.seed for t in batch])
+        sess = eng.open_session(prog, q_slots=self.q_slots,
+                                max_supersteps=self.max_supersteps)
+        self._sessions[app] = sess
+        self._live.setdefault(app, {})
+        self.stats["sessions_opened"] += 1
+        now = time.perf_counter()
+        for gq, t in zip(sess.active_queries, batch):
+            t.gq = gq
+            t.status = "running"
+            t.admitted_s = now
+            self._live[app][gq] = t
+        return sess
+
+    def _engine(self, app: str) -> OutOfCoreEngine:
+        """The service-lifetime engine for ``app`` (edge caches and skip
+        filters stay warm across sessions)."""
+        eng = self._engines.get(app)
+        if eng is None:
+            cfg = self.cfg
+            if cfg.checkpoint_dir:
+                cfg = dataclasses.replace(
+                    cfg, checkpoint_dir=os.path.join(cfg.checkpoint_dir,
+                                                     app))
+            eng = self._engines[app] = OutOfCoreEngine(self.store, cfg)
+        return eng
+
+    def _finish(self, app: str, sess, gqs, status: str) -> None:
+        """Finalize tickets whose columns froze at the last barrier."""
+        if not gqs:
+            return
+        now = time.perf_counter()
+        with self._lock:
+            for g in gqs:
+                t = self._live.get(app, {}).pop(int(g), None)
+                if t is None:       # resumed column with no local ticket
+                    continue
+                t.status = status
+                t.finished_s = now
+                t.result = sess.query_result(t.gq)
+                t.supersteps = sess.query_supersteps(t.gq)
+                self.completed.append(t)
+                self.stats[status] += 1
+                t._event.set()
+
+    def _close_session(self, app: str, sess) -> None:
+        """Finalize a finished session; any columns still live at
+        max_supersteps finish as timeouts with their partial values."""
+        stranded = tuple(sess.active_queries)
+        sess.result()
+        self._finish(app, sess, stranded, "timeout")
+        sess.close()
+        del self._sessions[app]
+
+    # -- drain / resume ----------------------------------------------------
+    def _shutdown(self) -> None:
+        """Drain epilogue: finish or checkpoint in-flight sessions, fail
+        whatever is still queued, wake all waiters."""
+        if self.drain_mode == "checkpoint":
+            for app, sess in list(self._sessions.items()):
+                if self._engines[app].ckpt is not None:
+                    sess.checkpoint()
+                sess.close()
+                del self._sessions[app]
+            # live tickets stay unresolved here by design: the resumed
+            # service re-registers them from the manifest lineage
+            for live in self._live.values():
+                for t in live.values():
+                    t.status = "failed"
+                    self.stats["failed"] += 1
+                    t._event.set()
+                live.clear()
+        else:
+            while self._sessions:
+                for app in list(self._sessions):
+                    sess = self._sessions[app]
+                    st = sess.step()
+                    self.stats["supersteps"] += 1
+                    self._finish(app, sess, st.retired_queries, "done")
+                    self._finish(app, sess, st.drained_queries, "timeout")
+                    if sess.finished:
+                        self._close_session(app, sess)
+        with self._lock:
+            self._stopped = True
+            for queue in self._pending.values():
+                for t in queue:
+                    t.status = "failed"
+                    self.stats["failed"] += 1
+                    t._event.set()
+                queue.clear()
+
+    def _resume_sessions(self) -> None:
+        """Reopen checkpointed serving sessions (drain_mode='checkpoint'
+        shutdown): per-app subdirs of ``cfg.checkpoint_dir`` holding a
+        non-final boundary are restored, and their live columns get
+        synthetic tickets rebuilt from the manifest's query lineage."""
+        root = self.cfg.checkpoint_dir
+        for app in SERVABLE:
+            if not os.path.isdir(os.path.join(root, app)):
+                continue
+            eng = self._engine(app)
+            if eng.ckpt is None:
+                continue
+            peek = eng.ckpt.peek_manifest()
+            if peek is None or peek[1].get("final"):
+                continue
+            lineage = {int(g): int(s) for g, s in
+                       (peek[1].get("queries") or {}).items()}
+            live = [int(g) for g in peek[1].get("active_q") or []]
+            prog = APPS[app]().with_queries(
+                [lineage.get(g, 0) for g in live] or [0])
+            sess = eng.open_session(prog, q_slots=self.q_slots,
+                                    max_supersteps=self.max_supersteps)
+            self._sessions[app] = sess
+            self._live.setdefault(app, {})
+            self.stats["sessions_opened"] += 1
+            now = time.perf_counter()
+            for gq in sess.active_queries:
+                t = QueryTicket(rid=self._next_rid, app=app,
+                                seed=lineage.get(gq, -1),
+                                submitted_s=now, status="running", gq=gq,
+                                admitted_s=now)
+                self._next_rid += 1
+                self.stats["submitted"] += 1
+                self._live[app][gq] = t
+        # resume applies to the restore pass only: later sessions on the
+        # same engines must start fresh, not re-load a stale checkpoint
+        self.cfg = dataclasses.replace(self.cfg, resume=False)
+        for eng in self._engines.values():
+            eng.cfg = dataclasses.replace(eng.cfg, resume=False)
+
+    # -- reporting ---------------------------------------------------------
+    def latency_summary(self) -> dict:
+        """p50/p99 total latency + component means over completed
+        queries (the bench's and runbook's one-stop report)."""
+        done = [t for t in self.completed if t.status == "done"]
+        if not done:
+            return dict(count=0, timeouts=self.stats["timeout"])
+        tot = np.asarray([t.total_s for t in done])
+        return dict(
+            count=len(done),
+            timeouts=self.stats["timeout"],
+            p50_ms=float(np.percentile(tot, 50) * 1e3),
+            p99_ms=float(np.percentile(tot, 99) * 1e3),
+            mean_queue_ms=float(np.mean([t.queue_wait_s for t in done])
+                                * 1e3),
+            mean_service_ms=float(np.mean([t.service_s for t in done])
+                                  * 1e3),
+            mean_supersteps=float(np.mean([t.supersteps for t in done])),
+        )

@@ -1,0 +1,220 @@
+"""Online graph-query serving (serve.graph_service, DESIGN.md §13).
+
+Covers the service surface over the session admission machinery: results
+match fresh batch runs bit-for-bit, deadlines drain to timeout tickets,
+SIGTERM drains gracefully (in-process flag drill + a real subprocess
+drill through ``launch.graph --serve``), checkpoint-drain + resume keeps
+in-flight queries alive across a restart, and the serve-engine sampling
+regression (``_sample`` reseeded per decode step, not per slot count).
+"""
+import dataclasses
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.apps import APPS
+from repro.core.engine import EngineConfig, OutOfCoreEngine
+from repro.graphio import spe
+from repro.graphio.formats import TileStore
+from repro.serve.graph_service import GraphService, QueryTicket
+
+SS = 120
+
+
+def _make_store(nv=220, ne=1400, tile_size=96, seed=7):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, nv, ne)
+    dst = rng.integers(0, nv, ne)
+    key = src * nv + dst
+    _, i = np.unique(key, return_index=True)
+    root = tempfile.mkdtemp(prefix="serve_store_")
+    spe.preprocess_arrays(src[i], dst[i], None, nv, TileStore(root),
+                          tile_size)
+    store = TileStore(root)
+    store.load_meta()
+    return store
+
+
+@pytest.fixture(scope="module")
+def store():
+    return _make_store()
+
+
+def _cfg(**kw):
+    return EngineConfig(num_servers=2, max_supersteps=SS, **kw)
+
+
+def _fresh(store, app, seed):
+    eng = OutOfCoreEngine(TileStore(store.root), _cfg())
+    return eng.run(APPS[app]().with_queries((seed,)))
+
+
+def _drain_and_join(svc, timeout=120):
+    svc.request_drain()
+    svc.join(timeout)
+    assert svc._thread is not None and not svc._thread.is_alive()
+
+
+def test_service_results_match_fresh_runs(store):
+    svc = GraphService(store, _cfg(), q_slots=3, min_fill=2,
+                       max_wait_s=0.01, max_supersteps=SS)
+    svc.start()
+    work = [("ppr", 3), ("msbfs", 11), ("ppr", 77), ("msbfs", 42),
+            ("ppr", 105)]
+    tickets = [svc.submit(app, seed) for app, seed in work]
+    for t in tickets:
+        assert t.wait(120), t
+    _drain_and_join(svc)
+    assert svc.stats["done"] == len(work)
+    assert svc.stats["timeout"] == svc.stats["failed"] == 0
+    for t in tickets:
+        assert t.status == "done"
+        ref = _fresh(store, t.app, t.seed)
+        # online-served query == fresh batch run, bit for bit
+        assert np.array_equal(t.result, ref.values[:, 0]), (t.app, t.seed)
+        assert t.supersteps == ref.per_query_supersteps[0]
+        assert t.total_s >= t.service_s >= 0
+        assert t.queue_wait_s >= 0
+    s = svc.latency_summary()
+    assert s["count"] == len(work)
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+
+
+def test_deadline_drains_to_timeout(store):
+    svc = GraphService(store, _cfg(), q_slots=2, max_wait_s=0.01,
+                       max_supersteps=SS)
+    svc.start()
+    slow = svc.submit("ppr", 3, deadline_s=0.0)      # overdue on arrival
+    ok = svc.submit("msbfs", 11)
+    assert slow.wait(120) and ok.wait(120)
+    _drain_and_join(svc)
+    assert slow.status == "timeout"
+    assert slow.supersteps == -1          # drained, never converged
+    assert slow.result is not None        # partial column still delivered
+    assert ok.status == "done"
+    assert svc.stats["timeout"] == 1 and svc.stats["done"] == 1
+
+
+def test_sigterm_flag_drains_in_flight_work(store):
+    """The in-process half of the SIGTERM drill: latch the guard flag the
+    signal handler would set; the loop must stop admitting and finish
+    in-flight queries before returning."""
+    svc = GraphService(store, _cfg(), q_slots=2, max_wait_s=0.01,
+                       max_supersteps=SS)
+    svc.start()
+    tickets = [svc.submit("ppr", s) for s in (3, 77)]
+    while svc.stats["supersteps"] < 1:     # in-flight for real
+        time.sleep(0.005)
+    svc.guard.triggered = True             # what SIGTERM does
+    svc.join(120)
+    assert all(t.status == "done" for t in tickets)
+    with pytest.raises(RuntimeError):
+        svc.submit("ppr", 9)               # drained services reject work
+
+
+def test_sigterm_subprocess_drill(store):
+    """The real drill: SIGTERM a live ``launch.graph --serve`` process —
+    it must drain gracefully and exit 0."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    p = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.graph", "--serve",
+         "--vertices", "300", "--edges", "1500", "--tile-size", "128",
+         "--servers", "1", "--serve-requests", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+    try:
+        for line in p.stdout:
+            if "serving" in line:
+                break
+        time.sleep(0.3)
+        p.send_signal(signal.SIGTERM)
+        out = p.stdout.read()
+        assert p.wait(timeout=120) == 0
+        assert "drained" in out
+    finally:
+        if p.poll() is None:      # pragma: no cover - cleanup on failure
+            p.kill()
+
+
+def test_checkpoint_drain_and_resume(store, tmp_path):
+    """drain_mode='checkpoint': SIGTERM-style drain checkpoints live
+    sessions with their query lineage; a resumed service re-registers the
+    in-flight queries and finishes them to the fresh-run answers."""
+    ck = str(tmp_path / "svc_ck")
+    cfg = _cfg(checkpoint_dir=ck)
+    svc = GraphService(store, cfg, q_slots=2, max_wait_s=0.01,
+                       max_supersteps=SS, drain_mode="checkpoint")
+    svc.start()
+    seeds = (3, 77)
+    tickets = [svc.submit("ppr", s) for s in seeds]
+    while svc.stats["supersteps"] < 2:      # mid-flight, not converged
+        time.sleep(0.005)
+    svc.request_drain()
+    svc.join(120)
+    assert all(t.status == "failed" for t in tickets)   # not resolved here
+    assert os.path.isdir(os.path.join(ck, "ppr"))
+
+    svc2 = GraphService(store, cfg, q_slots=2, max_wait_s=0.01,
+                        max_supersteps=SS, resume=True)
+    # the resumed service re-registered the live columns from the
+    # manifest lineage before serving anything new
+    resumed = {t.seed: t for app in svc2._live
+               for t in svc2._live[app].values()}
+    assert set(resumed) == set(seeds)
+    svc2.start()
+    for t in resumed.values():
+        assert t.wait(120), t
+    _drain_and_join(svc2)
+    for s in seeds:
+        t = resumed[s]
+        assert t.status == "done"
+        ref = _fresh(store, "ppr", s)
+        assert np.array_equal(t.result, ref.values[:, 0]), s
+        assert t.supersteps == ref.per_query_supersteps[0]
+
+
+def test_submit_rejects_unbatched_app(store):
+    svc = GraphService(store, _cfg())
+    with pytest.raises(ValueError):
+        svc.submit("pagerank", 0)
+
+
+def test_ticket_latency_components():
+    t = QueryTicket(rid=0, app="ppr", seed=1, submitted_s=1.0,
+                    admitted_s=3.0, finished_s=7.5)
+    assert t.queue_wait_s == 2.0
+    assert t.service_s == 4.5
+    assert t.total_s == 6.5
+
+
+# ---------------------------------------------------------------------------
+# serve-engine sampling regression (the [V,Q]-slot analogue lives above;
+# this is the token-slot engine's per-step reseed fix)
+
+
+def test_serve_engine_sample_reseeds_per_step():
+    """_sample used to seed from rid + len(self.slot_out) — the FIXED
+    slot-list length — so every decode step of a request drew the same
+    sample.  It must draw from (rid, step): steps differ, reruns repeat."""
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine.__new__(ServeEngine)    # no model needed for _sample
+    eng.slot_out = [[] for _ in range(4)]
+    req = Request(rid=5, prompt=np.zeros(1, np.int32), temperature=1.0)
+    logits = np.zeros(64, np.float32)         # uniform: sampling is pure RNG
+    draws = [eng._sample(logits, req, step=s) for s in range(12)]
+    assert len(set(draws)) > 1, "every decode step drew the same token"
+    # deterministic per (rid, step): a rerun reproduces the sequence
+    assert draws == [eng._sample(logits, req, step=s) for s in range(12)]
+    # greedy path ignores the rng entirely
+    g = Request(rid=5, prompt=np.zeros(1, np.int32), temperature=0.0)
+    peaked = np.zeros(64, np.float32)
+    peaked[17] = 9.0
+    assert eng._sample(peaked, g, step=3) == 17
