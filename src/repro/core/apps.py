@@ -72,12 +72,26 @@ class PageRank(VertexProgram):
 
     def gather(self, src_value, edge_val, aux):
         # edge_val is 1.0 for real edges and 0.0 for padding -> padding inert.
+        # Association matters: src · (inv · ev) is the fused kernel's form
+        # (the scale stream is pre-folded as a = inv · ev), so the unfused
+        # path must group the same way to stay bit-identical on *weighted*
+        # edges, where ev != 1.0 makes the two groupings round differently.
         """Per-edge message [E]: src rank / out-degree (padding inert: edge_val == 0)."""
-        return src_value * aux["inv_out_degree"] * edge_val
+        return src_value * (aux["inv_out_degree"] * edge_val)
 
     def apply(self, old_value, accum, aux):
         """Damped update over [R] rows: (1 - d) + d * accum."""
         return (1.0 - self.damping) + self.damping * accum
+
+    def fused_spec(self):
+        """Fused form: contrib = src · (inv_out_degree · edge_val), damped
+        affine apply — the same association as :meth:`gather`, so the two
+        paths agree bit-for-bit on weighted and unweighted edges alike
+        (padding reduces into the discarded sink row)."""
+        from repro.kernels.gab_fused import FusedSpec
+        return FusedSpec(combine="sum", scale_aux="inv_out_degree",
+                         apply="affine", alpha=1.0 - self.damping,
+                         beta=self.damping, update_tol=self.update_tol)
 
 
 @dataclasses.dataclass(eq=False)
@@ -105,6 +119,11 @@ class SSSP(VertexProgram):
         """Relaxation over [R] rows: min(old distance, best incoming)."""
         return jnp.minimum(old_value, accum)
 
+    def fused_spec(self):
+        """Fused form: contrib = src + edge_val, min-relax apply."""
+        from repro.kernels.gab_fused import FusedSpec
+        return FusedSpec(combine="min", add_edge=True, apply="min")
+
 
 @dataclasses.dataclass(eq=False)
 class WCC(VertexProgram):
@@ -125,6 +144,11 @@ class WCC(VertexProgram):
     def apply(self, old_value, accum, aux):
         """Label update over [R] rows: min(old label, smallest incoming)."""
         return jnp.minimum(old_value, accum)
+
+    def fused_spec(self):
+        """Fused form: contrib = src (label forward), min-merge apply."""
+        from repro.kernels.gab_fused import FusedSpec
+        return FusedSpec(combine="min", apply="min")
 
 
 @dataclasses.dataclass(eq=False)
@@ -147,6 +171,11 @@ class BFS(VertexProgram):
     def apply(self, old_value, accum, aux):
         """Hop update over [R] rows: min(old, best incoming)."""
         return jnp.minimum(old_value, accum)
+
+    def fused_spec(self):
+        """Fused form: contrib = src + 1, min-relax apply."""
+        from repro.kernels.gab_fused import FusedSpec
+        return FusedSpec(combine="min", add_const=1.0, apply="min")
 
 
 @dataclasses.dataclass(eq=False)
@@ -220,6 +249,16 @@ class PersonalizedPageRank(_BatchedQueries, VertexProgram):
         """Damped update over [R, Q]: (1 - d) * seed_mass + d * accum."""
         return (1.0 - self.damping) * aux["seed_mass"] + self.damping * accum
 
+    def fused_spec(self):
+        """Fused form: contrib = src · (inv_out_degree · edge_val) per
+        column, affine apply against the per-query seed_mass base — the
+        exact expressions :meth:`gather`/:meth:`apply` trace."""
+        from repro.kernels.gab_fused import FusedSpec
+        return FusedSpec(combine="sum", scale_aux="inv_out_degree",
+                         apply="affine", alpha=1.0 - self.damping,
+                         beta=self.damping, base_aux="seed_mass",
+                         update_tol=self.update_tol)
+
 
 @dataclasses.dataclass(eq=False)
 class MultiSourceBFS(_BatchedQueries, VertexProgram):
@@ -248,6 +287,11 @@ class MultiSourceBFS(_BatchedQueries, VertexProgram):
     def apply(self, old_value, accum, aux):
         """Hop update over [R, Q]: min(old, best incoming) per column."""
         return jnp.minimum(old_value, accum)
+
+    def fused_spec(self):
+        """Fused form: contrib = src + 1 per column, min-relax apply."""
+        from repro.kernels.gab_fused import FusedSpec
+        return FusedSpec(combine="min", add_const=1.0, apply="min")
 
 
 @dataclasses.dataclass(eq=False)
@@ -279,6 +323,11 @@ class LandmarkDistances(_BatchedQueries, VertexProgram):
     def apply(self, old_value, accum, aux):
         """Relaxation over [R, Q]: min(old, best incoming) per column."""
         return jnp.minimum(old_value, accum)
+
+    def fused_spec(self):
+        """Fused form: contrib = src + edge_val per column, min-relax."""
+        from repro.kernels.gab_fused import FusedSpec
+        return FusedSpec(combine="min", add_edge=True, apply="min")
 
 
 APPS = {

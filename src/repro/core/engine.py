@@ -62,6 +62,17 @@ class EngineConfig:
     skip_filter: str = "bitmap"             # "bitmap" (exact) | "bloom" (paper)
     skip_density_threshold: float = 0.05    # paper: only when few updates
     seg_impl: str = "jnp"
+    # --- fused-kernel block autotuning (DESIGN.md §14) ---
+    # pick (BE, BR, stack_size) for the Pallas kernel paths from the
+    # roofline cost model (roofline/kernel_tune.py) per (app monoid, Q,
+    # tile shape) instead of the static (512, 256) defaults.  Also
+    # promotes seg_impl="jnp" to "pallas_fused" — autotuning targets the
+    # fused gather→combine→apply kernel.
+    kernel_autotune: bool = False
+    # explicit (BE, BR) override for the Pallas kernel paths; None = the
+    # kernel's static defaults (or the autotuner's pick when
+    # kernel_autotune is on).  Takes precedence over the autotuner.
+    kernel_blocks: Optional[tuple] = None
     max_supersteps: int = 200
     balanced_assignment: bool = False       # beyond-paper LPT stage-2
     bloom_bits: int = 1 << 16
@@ -307,6 +318,11 @@ class OutOfCoreEngine:
         self._filters: Optional[list] = None  # built during first superstep
         self._stacks: Optional[dict] = None   # per-server device-resident tiles
         self._stack_fn = None
+        # fused-kernel autotuning (DESIGN.md §14): memoized KernelChoice per
+        # (combine, Q); ``kernel_choice`` holds the last resolved pick for
+        # stats/CLI reporting
+        self._kernel_choices: dict = {}
+        self.kernel_choice = None
         self._streamed: dict[int, list[int]] = {s: [] for s in self.exec_servers}
         #: populated when cfg.debug_skip_log: one dict per (superstep, server)
         #: with the active source ids and the run/skipped tile partition
@@ -318,6 +334,38 @@ class OutOfCoreEngine:
         # first superstep's deltas).
         self._io_busy_cum = 0.0   # cache io_seconds at end of last superstep
         self._promo_cum = 0       # cache promotions at end of last superstep
+
+    # ------------------------------------------------------------------
+    def kernel_plan(self, prog) -> tuple[str, Optional[tuple], int]:
+        """Resolve ``(seg_impl, blocks, stack_size)`` for this program.
+
+        With ``cfg.kernel_autotune`` the roofline cost model
+        (roofline/kernel_tune.py) picks the Pallas ``(BE, BR)`` blocks and
+        the pipelined stack size per ``(combine, Q, tile shape)`` —
+        memoized, so the dry-run model runs once per program family — and
+        ``seg_impl="jnp"`` is promoted to the fused kernel path.  An
+        explicit ``cfg.kernel_blocks`` wins over the autotuner; without
+        either, the kernels' static defaults apply (blocks=None).
+        """
+        cfg = self.cfg
+        seg_impl = cfg.seg_impl
+        if cfg.kernel_autotune and seg_impl == "jnp":
+            seg_impl = "pallas_fused"
+        stack_k = max(1, cfg.stack_size)
+        if cfg.kernel_blocks is not None:
+            return seg_impl, tuple(cfg.kernel_blocks), stack_k
+        if not cfg.kernel_autotune:
+            return seg_impl, None, stack_k
+        q = int(getattr(prog, "num_queries", 1) or 1)
+        key = (prog.combine, q)
+        if key not in self._kernel_choices:
+            from repro.roofline import kernel_tune
+
+            self._kernel_choices[key] = kernel_tune.pick_blocks(
+                prog.combine, q, self.plan.edge_cap, self.plan.row_cap)
+        choice = self._kernel_choices[key]
+        self.kernel_choice = choice
+        return seg_impl, choice.blocks, choice.stack_size
         self._demo_cum = 0
         self._disk_cum = 0        # cache disk_bytes_read at last superstep
         # --- out-of-core vertex state (DESIGN.md §10) ---
@@ -531,7 +579,7 @@ class OutOfCoreEngine:
             # step (stacking would need the full [V] array on device)
             return self._run_tiles_pipelined_ooc(s, tids, prog, filters, nv)
         row_cap = self.plan.row_cap
-        stack_k = max(1, cfg.stack_size)
+        seg_impl, kblocks, stack_k = self.kernel_plan(prog)
         load_s = comp_s = stall_s = 0.0
         masked_acc = upd_acc = None
         batch: list = []
@@ -543,7 +591,7 @@ class OutOfCoreEngine:
                 stk = pad_stack_to(stk, stack_k)  # keep one compiled shape
             t0 = time.perf_counter()
             new_masked, upd = run_tile_stack(
-                prog, values_dev, aux_dev, stk, row_cap, cfg.seg_impl)
+                prog, values_dev, aux_dev, stk, row_cap, seg_impl, kblocks)
             if masked_acc is None:
                 masked_acc, upd_acc = new_masked, upd
             else:  # disjoint row ranges: set-where-updated merge is exact
@@ -631,13 +679,14 @@ class OutOfCoreEngine:
         if self._stack_fn is None:
             from functools import partial
 
-            @partial(jax.jit, static_argnums=(0, 1))
-            def fn(p, seg_impl, values, aux, src, dst, val, owned):
+            @partial(jax.jit, static_argnums=(0, 1, 2))
+            def fn(p, seg_impl, blocks, values, aux, src, dst, val, owned):
                 return merged_server_step(p, values, aux, src, dst, val,
-                                          owned, seg_impl)
+                                          owned, seg_impl, blocks)
 
             self._stack_fn = fn
-        return self._stack_fn(prog, self.cfg.seg_impl, values_dev, aux_dev,
+        seg_impl, kblocks, _ = self.kernel_plan(prog)
+        return self._stack_fn(prog, seg_impl, kblocks, values_dev, aux_dev,
                               m["src"], m["dst"], m["val"], m["owned"])
 
     def _stack_step(self, prog, values_dev, aux_dev, stack):
@@ -648,12 +697,15 @@ class OutOfCoreEngine:
 
             row_cap = self.plan.row_cap
 
-            @partial(jax.jit, static_argnums=(0, 3))
-            def fn(p, values, aux, seg_impl, stk):
-                return stacked_tiles_step(p, values, aux, stk, row_cap, seg_impl)
+            @partial(jax.jit, static_argnums=(0, 3, 4))
+            def fn(p, values, aux, seg_impl, blocks, stk):
+                return stacked_tiles_step(p, values, aux, stk, row_cap,
+                                          seg_impl, blocks)
 
             self._stack_fn = fn
-        return self._stack_fn(prog, values_dev, aux_dev, self.cfg.seg_impl, stack)
+        seg_impl, kblocks, _ = self.kernel_plan(prog)
+        return self._stack_fn(prog, values_dev, aux_dev, seg_impl, kblocks,
+                              stack)
 
     # ------------------------------------------------------------------
     def _make_filter(self, tile, nv):
@@ -765,10 +817,11 @@ class OutOfCoreEngine:
             buf = np.zeros((row_cap,) + tail, dt)
             buf[: m.num_rows] = vstore.get_block(name, ivd)[r0:r1]
             dst_aux[name] = buf
+        seg_impl, kblocks, _ = self.kernel_plan(prog)
         new, upd = run_tile_sharded(
             prog, bufs["value"], {k: bufs[k] for k in prog.src_aux},
             tile_edge_values(tile), tile.dst_local, old, dst_aux,
-            m.num_rows, row_cap, self.cfg.seg_impl)
+            m.num_rows, row_cap, seg_impl, kblocks)
         rows = np.minimum(m.row_start + np.arange(row_cap), nv - 1)
         return self._split_updates(rows, np.asarray(new), np.asarray(upd))
 
@@ -1330,12 +1383,13 @@ class EngineSession:
                     if ooc:
                         ri, rv, rm = eng._ooc_tile_step(prog, tile, nv)
                     else:
+                        seg_impl, kblocks, _ = eng.kernel_plan(prog)
                         rows, new, upd = run_tile(
                             prog, values_dev, self.aux_dev,
                             (tile.src, tile.dst_local,
                              tile_edge_values(tile)),
                             tile.meta.row_start, tile.meta.num_rows,
-                            row_cap, cfg.seg_impl,
+                            row_cap, seg_impl, kblocks,
                         )
                         ri, rv, rm = eng._split_updates(
                             np.asarray(rows), np.asarray(new),

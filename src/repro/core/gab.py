@@ -49,6 +49,7 @@ def segment_reduce(
     combine: str,
     impl: str = "jnp",
     sorted_ids: bool = True,
+    blocks: Optional[tuple[int, int]] = None,
 ) -> Array:
     """Reduce ``data`` into ``num_segments`` buckets with the given monoid.
 
@@ -57,7 +58,9 @@ def segment_reduce(
 
     impl="jnp" uses XLA scatter-reduce; impl="pallas_onehot" routes through
     the Pallas block kernels (see kernels/gab_gather.py): the sum monoid
-    becomes an MXU one-hot contraction, min/max a masked VPU reduction.
+    becomes an MXU one-hot contraction, min/max a masked VPU reduction —
+    ``blocks`` overrides the static ``(BE, BR)`` kernel block sizes (the
+    roofline autotuner's choice, see roofline/kernel_tune.py).
     Tile edges are CSR-sorted by dst (build_tile invariant), so
     ``sorted_ids=True`` by default — XLA's sorted-scatter path (§Perf It4).
     """
@@ -68,6 +71,9 @@ def segment_reduce(
               "max": _kops.segment_max}.get(combine)
         if fn is None:
             raise ValueError(f"unknown combine: {combine}")
+        if blocks is not None:
+            return fn(data, segment_ids, num_segments,
+                      block_e=blocks[0], block_r=blocks[1])
         return fn(data, segment_ids, num_segments)
     kw = dict(num_segments=num_segments, indices_are_sorted=sorted_ids)
     if combine == "sum":
@@ -134,6 +140,14 @@ class VertexProgram:
             return jnp.abs(new - old) > self.update_tol
         return new != old
 
+    def fused_spec(self):
+        """:class:`repro.kernels.gab_fused.FusedSpec` describing this
+        program's gather/apply in the affine form the fused Pallas kernel
+        executes, or ``None`` when the program has no such form — the
+        ``pallas_fused`` path then falls back to the unfused one-hot
+        kernel for this program."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # jit-friendly tile step
@@ -162,6 +176,33 @@ def _row_pad(arr: Array, pad: int) -> Array:
     return jnp.concatenate([arr, z])
 
 
+def _fused_tile(prog, fs, src_vals, src_aux, edge_val, dst_local, old,
+                dst_aux, num_rows, row_cap, blocks):
+    """Dispatch one tile through the fused gather→combine→apply kernel
+    (kernels/gab_fused.py).  The per-edge affine terms are formed here —
+    ``a = src_aux[scale_aux] * edge_val`` matches the programs' own gather
+    expressions bit-for-bit (edge_val is exactly 1.0 on real unweighted
+    edges) — and the kernel returns the applied+masked row block."""
+    from repro.kernels import gab_fused as _gf
+    from repro.kernels import ops as _kops
+
+    a = src_aux[fs.scale_aux] * edge_val if fs.scale_aux else None
+    b = edge_val if fs.add_edge else None
+    base = dst_aux[fs.base_aux] if fs.base_aux else None
+    be, br = blocks if blocks is not None else (
+        _gf.DEFAULT_BLOCK_E, _gf.DEFAULT_BLOCK_R)
+    return _gf.gab_fused(
+        fs, src_vals, a, b, dst_local, old, base, num_rows, row_cap,
+        block_e=be, block_r=br, interpret=_kops._interpret(),
+    )
+
+
+def _unfused_impl(seg_impl: str) -> str:
+    """The segment-reduce impl backing programs without a FusedSpec (and
+    the merged path) when the engine asks for ``pallas_fused``."""
+    return "pallas_onehot" if seg_impl == "pallas_fused" else seg_impl
+
+
 def tile_gather_apply(
     prog: VertexProgram,
     values: Array,                # [V] replicated vertex values
@@ -173,23 +214,38 @@ def tile_gather_apply(
     num_rows: Array,              # scalar int32 (<= row_cap)
     row_cap: int,
     seg_impl: str = "jnp",
+    blocks: Optional[tuple[int, int]] = None,
 ) -> tuple[Array, Array, Array]:
     """Gather+Apply for one tile.
 
     Returns (rows [row_cap] global ids clipped to V-1, new_values
     [row_cap(, Q)], updated [row_cap(, Q)] bool).  Rows beyond num_rows are
     masked not-updated.  ``values`` may be [V] or [V, Q] (multi-query).
+    seg_impl="pallas_fused" runs gather/combine/apply/mask as one fused
+    Pallas kernel (DESIGN.md §14); ``blocks`` carries the autotuned
+    ``(BE, BR)`` to either Pallas path.
     """
     nv = values.shape[0]
     src_vals = jnp.take(values, src, axis=0)
     src_aux = {k: jnp.take(aux[k], src, axis=0) for k in prog.src_aux}
-    contrib = prog.gather(src_vals, edge_val, src_aux)
-    accum = segment_reduce(
-        contrib, dst_local, row_cap + 1, prog.combine, impl=seg_impl
-    )[:row_cap]
-
     local_rows = jnp.arange(row_cap, dtype=jnp.int32)
     rows = jnp.minimum(row_start + local_rows, nv - 1)
+
+    fs = prog.fused_spec() if seg_impl == "pallas_fused" else None
+    if fs is not None:
+        old = jnp.take(values, rows, axis=0)
+        dst_aux = {k: jnp.take(aux[k], rows, axis=0) for k in prog.dst_aux}
+        new, updated = _fused_tile(prog, fs, src_vals, src_aux, edge_val,
+                                   dst_local, old, dst_aux, num_rows,
+                                   row_cap, blocks)
+        return rows, new, updated
+
+    contrib = prog.gather(src_vals, edge_val, src_aux)
+    accum = segment_reduce(
+        contrib, dst_local, row_cap + 1, prog.combine,
+        impl=_unfused_impl(seg_impl), blocks=blocks,
+    )[:row_cap]
+
     old = jnp.take(values, rows, axis=0)
     dst_aux = {k: jnp.take(aux[k], rows, axis=0) for k in prog.dst_aux}
     new = prog.apply(old, accum, dst_aux)
@@ -210,6 +266,7 @@ def tile_gather_apply_sharded(
     num_rows: Array,              # scalar int32 (<= row_cap)
     row_cap: int,
     seg_impl: str = "jnp",
+    blocks: Optional[tuple[int, int]] = None,
 ) -> tuple[Array, Array]:
     """Gather+Apply for one tile with *pre-gathered* source-side inputs —
     the out-of-core vertex-state path (DESIGN.md §10).
@@ -225,9 +282,15 @@ def tile_gather_apply_sharded(
 
     Returns (new_values [row_cap(, Q)], updated [row_cap(, Q)] bool).
     """
+    fs = prog.fused_spec() if seg_impl == "pallas_fused" else None
+    if fs is not None:
+        return _fused_tile(prog, fs, src_vals, src_aux, edge_val, dst_local,
+                           old, dst_aux, num_rows, row_cap, blocks)
+
     contrib = prog.gather(src_vals, edge_val, src_aux)
     accum = segment_reduce(
-        contrib, dst_local, row_cap + 1, prog.combine, impl=seg_impl
+        contrib, dst_local, row_cap + 1, prog.combine,
+        impl=_unfused_impl(seg_impl), blocks=blocks,
     )[:row_cap]
     new = prog.apply(old, accum, dst_aux)
     local_rows = jnp.arange(row_cap, dtype=jnp.int32)
@@ -244,6 +307,7 @@ def stacked_tiles_step(
     stk: dict[str, Array],        # stacked tiles (tiles.stack_tiles output)
     row_cap: int,
     seg_impl: str = "jnp",
+    blocks: Optional[tuple[int, int]] = None,
 ) -> tuple[Array, Array]:
     """Process a stack of tiles via lax.scan (one server's local work for a
     superstep).  Returns (new_masked [V(, Q)], updated [V(, Q)] bool): the
@@ -265,6 +329,8 @@ def stacked_tiles_step(
     values_p = _row_pad(values, pad)
     aux_p = {k: _row_pad(aux[k], pad) for k in prog.dst_aux}
 
+    fs = prog.fused_spec() if seg_impl == "pallas_fused" else None
+
     def body(carry, tile):
         out_p, upd_p = carry
         row_start = tile["row_start"]
@@ -273,18 +339,23 @@ def stacked_tiles_step(
         src_vals = jnp.take(values, tile["src"], axis=0)
         src_aux = {k: jnp.take(aux[k], tile["src"], axis=0)
                    for k in prog.src_aux}
-        contrib = prog.gather(src_vals, tile["val"], src_aux)
-        accum = segment_reduce(contrib, tile["dst_local"], row_cap + 1,
-                               prog.combine, impl=seg_impl)[:row_cap]
-
         old = _dslice(values_p, row_start, row_cap)
         dst_aux = {k: _dslice(aux_p[k], row_start, row_cap)
                    for k in prog.dst_aux}
-        new = prog.apply(old, accum, dst_aux)
-        local = jnp.arange(row_cap, dtype=jnp.int32)
-        valid = _bcast_rows(local < num_rows, new)
-        new = jnp.where(valid, new, old)
-        updated = jnp.logical_and(valid, prog.updated_mask(old, new))
+        if fs is not None:
+            new, updated = _fused_tile(
+                prog, fs, src_vals, src_aux, tile["val"], tile["dst_local"],
+                old, dst_aux, num_rows, row_cap, blocks)
+        else:
+            contrib = prog.gather(src_vals, tile["val"], src_aux)
+            accum = segment_reduce(contrib, tile["dst_local"], row_cap + 1,
+                                   prog.combine, impl=_unfused_impl(seg_impl),
+                                   blocks=blocks)[:row_cap]
+            new = prog.apply(old, accum, dst_aux)
+            local = jnp.arange(row_cap, dtype=jnp.int32)
+            valid = _bcast_rows(local < num_rows, new)
+            new = jnp.where(valid, new, old)
+            updated = jnp.logical_and(valid, prog.updated_mask(old, new))
 
         cur = _dslice(out_p, row_start, row_cap)
         window = jnp.where(updated, new, cur)   # set-where-updated (overlap-safe)
@@ -315,6 +386,7 @@ def merged_server_step(
     edge_val: Array,              # [E_s]
     owned: Array,                 # [V] bool: rows covered by this server
     seg_impl: str = "jnp",
+    blocks: Optional[tuple[int, int]] = None,
 ) -> tuple[Array, Array]:
     """§Perf It5: one fused gather/segment-sum/apply per server.
 
@@ -322,13 +394,18 @@ def merged_server_step(
     tile, so merging a server's tiles into a single edge list and reducing
     straight into [V] is exact; apply runs on all rows and is masked by
     ownership.  Removes the tile scan, the per-tile slicing, and all edge
-    padding (only real edges are stored)."""
+    padding (only real edges are stored).
+
+    The merged path masks rows by *ownership* rather than a contiguous
+    ``num_rows`` window, which the fused kernel's row test cannot express —
+    ``pallas_fused`` therefore degrades to the unfused one-hot kernel here
+    (same autotuned blocks)."""
     nv = values.shape[0]
     src_vals = jnp.take(values, src, axis=0)
     src_aux = {k: jnp.take(aux[k], src, axis=0) for k in prog.src_aux}
     contrib = prog.gather(src_vals, edge_val, src_aux)
     accum = segment_reduce(contrib, dst, nv + 1, prog.combine,
-                           impl=seg_impl)[:nv]
+                           impl=_unfused_impl(seg_impl), blocks=blocks)[:nv]
     dst_aux = {k: aux[k] for k in prog.dst_aux}
     new = prog.apply(values, accum, dst_aux)
     own = _bcast_rows(owned, new)
@@ -343,42 +420,45 @@ def merged_server_step(
 # by (edge_cap, row_cap), so one compile serves every tile).
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnums=(0, 7, 8))
+@partial(jax.jit, static_argnums=(0, 7, 8, 9))
 def _jit_tile_step(prog, values, aux, src, dst_local, edge_val,
-                   row_start_num_rows, row_cap, seg_impl):
+                   row_start_num_rows, row_cap, seg_impl, blocks):
     row_start, num_rows = row_start_num_rows
     return tile_gather_apply(
         prog, values, aux, src, dst_local, edge_val,
-        row_start, num_rows, row_cap, seg_impl,
+        row_start, num_rows, row_cap, seg_impl, blocks,
     )
 
 
 def run_tile(prog, values, aux, tile_arrays, row_start, num_rows,
-             row_cap, seg_impl="jnp"):
+             row_cap, seg_impl="jnp", blocks=None):
     """Out-of-core engine entry point for one tile (host arrays ok)."""
     src, dst_local, edge_val = tile_arrays
     return _jit_tile_step(
         prog, values, aux, src, dst_local, edge_val,
         (jnp.int32(row_start), jnp.int32(num_rows)), row_cap, seg_impl,
+        blocks,
     )
 
 
-@partial(jax.jit, static_argnums=(0, 8, 9))
+@partial(jax.jit, static_argnums=(0, 8, 9, 10))
 def _jit_tile_step_sharded(prog, src_vals, src_aux, edge_val, dst_local,
-                           old, dst_aux, num_rows, row_cap, seg_impl):
+                           old, dst_aux, num_rows, row_cap, seg_impl,
+                           blocks):
     return tile_gather_apply_sharded(
         prog, src_vals, src_aux, edge_val, dst_local, old, dst_aux,
-        num_rows, row_cap, seg_impl,
+        num_rows, row_cap, seg_impl, blocks,
     )
 
 
 def run_tile_sharded(prog, src_vals, src_aux, edge_val, dst_local, old,
-                     dst_aux, num_rows, row_cap, seg_impl="jnp"):
+                     dst_aux, num_rows, row_cap, seg_impl="jnp",
+                     blocks=None):
     """Ooc-vstate engine entry point for one tile (host arrays ok); one
     compile serves every tile (shapes keyed by (edge_cap, row_cap, Q))."""
     return _jit_tile_step_sharded(
         prog, src_vals, src_aux, edge_val, dst_local, old, dst_aux,
-        jnp.int32(num_rows), row_cap, seg_impl,
+        jnp.int32(num_rows), row_cap, seg_impl, blocks,
     )
 
 
@@ -389,12 +469,14 @@ def run_tile_sharded(prog, src_vals, src_aux, edge_val, dst_local, old,
 # so a fixed stack_size means a single compile for the whole run.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnums=(0, 4, 5))
-def _jit_run_tile_stack(prog, values, aux, stk, row_cap, seg_impl):
-    return stacked_tiles_step(prog, values, aux, stk, row_cap, seg_impl)
+@partial(jax.jit, static_argnums=(0, 4, 5, 6))
+def _jit_run_tile_stack(prog, values, aux, stk, row_cap, seg_impl, blocks):
+    return stacked_tiles_step(prog, values, aux, stk, row_cap, seg_impl,
+                              blocks)
 
 
-def run_tile_stack(prog, values, aux, stk, row_cap, seg_impl="jnp"):
+def run_tile_stack(prog, values, aux, stk, row_cap, seg_impl="jnp",
+                   blocks=None):
     """Process a K-tile stack (``tiles.stack_tiles`` output, possibly padded
     with inert tiles via ``distributed.pad_stack_to``) in one dispatch.
 
@@ -404,4 +486,5 @@ def run_tile_stack(prog, values, aux, stk, row_cap, seg_impl="jnp"):
     """
     scan = {k: jnp.asarray(stk[k])
             for k in ("src", "dst_local", "val", "row_start", "num_rows")}
-    return _jit_run_tile_stack(prog, values, aux, scan, row_cap, seg_impl)
+    return _jit_run_tile_stack(prog, values, aux, scan, row_cap, seg_impl,
+                               blocks)

@@ -37,6 +37,7 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_E = 512
 DEFAULT_BLOCK_R = 256
+SUBLANES = 8  # f32 tiles are (8, 128): the second-minor dim must be a multiple
 
 _IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
 
@@ -111,9 +112,15 @@ def segment_reduce_pallas(
     e, q = cq.shape
     e_pad = max(((e + block_e - 1) // block_e) * block_e, block_e)
     r_pad = max(((num_segments + block_r - 1) // block_r) * block_r, block_r)
+    # Q rides the sublane dim of every block: Mosaic rejects block shapes
+    # whose second-minor dim is not a multiple of the 8-sublane tile, so pad
+    # Q up and slice on return.  Padded query rows carry the identity and
+    # never reach the caller.
+    q_pad = max(((q + SUBLANES - 1) // SUBLANES) * SUBLANES, SUBLANES)
 
     # [Q, E] layout: the edge axis lands on TPU lanes, Q on sublanes.
     contrib_p = _pad_axis(cq.astype(jnp.float32).T, e_pad, 0.0, axis=1)
+    contrib_p = _pad_axis(contrib_p, q_pad, _IDENTITY[combine], axis=0)
     dst_p = _pad_axis(dst.astype(jnp.int32), e_pad, jnp.int32(r_pad))[None, :]
 
     grid = (r_pad // block_r, e_pad // block_e)
@@ -122,11 +129,11 @@ def segment_reduce_pallas(
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_e), lambda j, i: (0, i)),   # dst
-            pl.BlockSpec((q, block_e), lambda j, i: (0, i)),   # contrib
+            pl.BlockSpec((q_pad, block_e), lambda j, i: (0, i)),   # contrib
         ],
-        out_specs=pl.BlockSpec((q, block_r), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((q, r_pad), jnp.float32),
+        out_specs=pl.BlockSpec((q_pad, block_r), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((q_pad, r_pad), jnp.float32),
         interpret=interpret,
     )(dst_p, contrib_p)
-    out = out[:, :num_segments].astype(contrib.dtype)
+    out = out[:q, :num_segments].astype(contrib.dtype)
     return out[0] if squeeze else out.T

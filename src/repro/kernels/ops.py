@@ -22,12 +22,27 @@ def _interpret() -> bool:
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
         return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+    # TPU compiles with Mosaic, GPU with Triton; only CPU (and anything
+    # else without a Pallas lowering) needs the interpreter.
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+def _needs_exact_fallback(contrib: jax.Array) -> bool:
+    """True when the f32 round-trip inside the kernel could lose bits.
+
+    The one-hot kernel computes in f32, which represents integers exactly
+    only up to 2^24.  Same guard shape as the compaction path below: decide
+    statically from dtype (int8/int16 always fit; wider ints may not).
+    """
+    return (jnp.issubdtype(contrib.dtype, jnp.integer)
+            and contrib.dtype.itemsize >= 4)
 
 
 def segment_sum(contrib: jax.Array, dst: jax.Array, num_segments: int,
                 block_e: int = _gg.DEFAULT_BLOCK_E,
                 block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    if _needs_exact_fallback(contrib):
+        return _ref.segment_sum(contrib, dst, num_segments)
     return _gg.segment_reduce_pallas(
         contrib, dst, num_segments, combine="sum",
         block_e=block_e, block_r=block_r, interpret=_interpret(),
@@ -37,6 +52,8 @@ def segment_sum(contrib: jax.Array, dst: jax.Array, num_segments: int,
 def segment_min(contrib: jax.Array, dst: jax.Array, num_segments: int,
                 block_e: int = _gg.DEFAULT_BLOCK_E,
                 block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    if _needs_exact_fallback(contrib):
+        return _ref.segment_min(contrib, dst, num_segments)
     return _gg.segment_reduce_pallas(
         contrib, dst, num_segments, combine="min",
         block_e=block_e, block_r=block_r, interpret=_interpret(),
@@ -46,6 +63,8 @@ def segment_min(contrib: jax.Array, dst: jax.Array, num_segments: int,
 def segment_max(contrib: jax.Array, dst: jax.Array, num_segments: int,
                 block_e: int = _gg.DEFAULT_BLOCK_E,
                 block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    if _needs_exact_fallback(contrib):
+        return _ref.segment_max(contrib, dst, num_segments)
     return _gg.segment_reduce_pallas(
         contrib, dst, num_segments, combine="max",
         block_e=block_e, block_r=block_r, interpret=_interpret(),

@@ -160,6 +160,16 @@ def main(argv=None):
                          "compression (DESIGN.md §7)")
     ap.add_argument("--prefetch-depth", type=int, default=4)
     ap.add_argument("--prefetch-workers", type=int, default=2)
+    ap.add_argument("--seg-impl", default="jnp",
+                    choices=["jnp", "pallas_onehot", "pallas_fused"],
+                    help="segment-reduce backend: XLA scatter, the unfused "
+                         "one-hot Pallas kernel, or the fused "
+                         "gather→combine→apply kernel (DESIGN.md §14)")
+    ap.add_argument("--kernel-autotune", action="store_true",
+                    help="pick Pallas (BE, BR) blocks + stack size from the "
+                         "roofline cost model per (app, Q, tile shape) "
+                         "instead of the static (512, 256); implies the "
+                         "fused kernel path")
     ap.add_argument("--stack-size", type=int, default=4,
                     help="tiles per jitted batch dispatch (pipelined mode)")
     ap.add_argument("--queries", type=int, default=None,
@@ -324,6 +334,8 @@ def main(argv=None):
         cache_policy=args.cache_policy,
         cache_promote_hits=args.cache_promote_hits,
         cache_aware_order=not args.static_order,
+        seg_impl=args.seg_impl,
+        kernel_autotune=args.kernel_autotune,
         max_supersteps=args.supersteps,
         pipeline=args.pipeline,
         prefetch_depth=args.prefetch_depth,
@@ -371,6 +383,12 @@ def main(argv=None):
     print(f"{args.app}: {res.supersteps} supersteps in {dt:.1f}s "
           f"(mean {res.mean_superstep_seconds()*1000:.0f} ms/superstep, "
           f"converged={res.converged})")
+    if args.kernel_autotune and eng.kernel_choice is not None:
+        c = eng.kernel_choice
+        print(f"  kernel autotune [{prog.combine}, Q="
+              f"{getattr(prog, 'num_queries', 1)}]: BE={c.block_e} "
+              f"BR={c.block_r} stack={c.stack_size} ({c.bound}-bound, "
+              f"ceiling {c.edges_per_s:.2e} edges/s)")
     if batched:
         q = len(seeds)
         io = sum(x.disk_bytes_read for x in res.history)

@@ -1,8 +1,13 @@
 """Target hardware constants: TPU v5e (per chip)."""
 
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 4   # MXU f32 rate (one bf16 pass = 4x)
+VPU_OPS = 4e12                  # elementwise f32 op/s (8x128 VPU lanes)
 HBM_BW = 819e9                  # bytes/s
 ICI_BW_PER_LINK = 50e9          # bytes/s/link (~45-50 GB/s on v5e)
 HBM_BYTES = 16 * 1024**3        # 16 GiB
 VMEM_BYTES = 128 * 1024**2      # ~128 MiB vector memory
 MXU_ALIGN = 128
+SUBLANES = 8                    # f32 tile is (8, 128)
+GRID_STEP_OVERHEAD_S = 2e-6     # per kernel grid step (DMA issue + sync)
+HOST_DISPATCH_S = 200e-6        # per jit dispatch from the host loop

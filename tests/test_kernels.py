@@ -178,3 +178,56 @@ def test_gab_engine_with_pallas_segsum(small_store, nx_pagerank):
     res = eng.run(PageRank(update_tol=1e-8))
     ours = res.values / res.values.sum()
     assert np.abs(ours - nx_pagerank).max() < 1e-5
+
+
+@pytest.mark.parametrize("combine", ["sum", "min", "max"])
+def test_segment_reduce_integer_exact_above_2p24(combine):
+    """Regression: wide-integer contributions must keep integer exactness.
+
+    The Pallas path casts to f32, which cannot represent odd integers
+    above 2**24 — the gather wrapper now routes >=32-bit integer inputs to
+    the exact jnp reference (mirroring the compact kernel's magnitude
+    guard in ops.py) instead of silently rounding."""
+    big = 1 << 24
+    c = jnp.asarray([big - 1, big, big + 1, big + 3, 1, 2], dtype=jnp.int32)
+    d = jnp.asarray([0, 0, 1, 1, 2, 2], dtype=jnp.int32)
+    got = np.asarray(getattr(ops, f"segment_{combine}")(c, d, 3))
+    want = np.asarray(getattr(ref, f"segment_{combine}")(c, d, 3))
+    assert got.dtype == want.dtype and np.issubdtype(got.dtype, np.integer)
+    np.testing.assert_array_equal(got, want)
+    if combine == "sum":
+        # the f32 path would have produced 2**25 + 3 -> rounded
+        assert got[1] == 2 * big + 4
+
+
+def test_segment_sum_int32_many_terms_exact():
+    """A sum that only crosses 2**24 through accumulation (every term is
+    small) must still be exact — the guard keys on dtype, not magnitude,
+    because the kernel cannot know the reduction total in advance."""
+    E = 4096
+    c = jnp.full((E,), 8193, dtype=jnp.int32)       # total = 8193*4096 > 2^25
+    d = jnp.zeros((E,), dtype=jnp.int32)
+    got = np.asarray(ops.segment_sum(c, d, 1))
+    assert int(got[0]) == 8193 * E
+
+
+@pytest.mark.parametrize("Q", [1, 3, 5, 8])
+@pytest.mark.parametrize("combine", ["sum", "min", "max"])
+def test_segment_reduce_sublane_q_padding(Q, combine):
+    """Regression: Q is padded to a full sublane multiple inside the
+    wrapper (raw q as the BlockSpec sublane dim miscompiles on real TPUs)
+    and sliced back on return — results must match the per-column oracle
+    for every Q in and at the sublane boundary."""
+    rng = np.random.default_rng(Q * 11 + len(combine))
+    E, R = 513, 130
+    shape = (E,) if Q == 1 else (E, Q)
+    c = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    d = jnp.asarray(rng.integers(0, R, E).astype(np.int32))
+    got = np.asarray(getattr(ops, f"segment_{combine}")(c, d, R))
+    want_2d = _per_column_ref(combine, c if c.ndim == 2 else c[:, None],
+                              d, R)
+    want = want_2d[:, 0] if Q == 1 else want_2d
+    assert got.shape == ((R,) if Q == 1 else (R, Q))
+    fin = np.isfinite(want)
+    assert np.array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5, atol=1e-5)
