@@ -49,14 +49,15 @@ class BloomFilter:
         return pos  # [k, n]
 
     def add(self, ids: np.ndarray) -> None:
-        """Set the k hash bits for every vertex id in ``ids`` (vectorized)."""
+        """Set the k hash bits for every vertex id in ids ``[U]``
+        (vectorized)."""
         pos = self._positions(ids).ravel()
         np.bitwise_or.at(self.bits, pos >> np.uint64(6),
                          np.uint64(1) << (pos & np.uint64(63)))
 
     def might_contain_any(self, ids: np.ndarray) -> bool:
-        """True if ANY id may be present (no false negatives; false positives
-        at the configured bits/hashes rate)."""
+        """True if ANY id in ids ``[U]`` may be present (no false negatives;
+        false positives at the configured bits/hashes rate)."""
         if len(ids) == 0:
             return False
         pos = self._positions(ids)
@@ -79,21 +80,22 @@ class SourceBlockBitmap:
         self.words = np.zeros(nwords, dtype=np.uint64)
 
     def add(self, ids: np.ndarray) -> None:
-        """Mark the 2^block_shift-vertex blocks covering ``ids``."""
+        """Mark the 2^block_shift-vertex blocks covering ids ``[U]``."""
         blocks = np.unique(np.asarray(ids, dtype=np.int64) >> self.block_shift)
         np.bitwise_or.at(self.words, blocks >> 6,
                          np.uint64(1) << (blocks & 63).astype(np.uint64))
 
     def intersects(self, active_words: np.ndarray) -> bool:
-        """Exact block-granular test: any common block with ``active_words``
-        (one AND over uint64 words; no false negatives)."""
+        """Exact block-granular test: any common block with uint64 words
+        active_words ``[B]`` (one AND; no false negatives)."""
         return bool(np.any(self.words & active_words))
 
     @staticmethod
     def active_words_from_ids(ids: np.ndarray, num_vertices: int,
                               block_shift: int = 8) -> np.ndarray:
-        """Bitmap words [ceil(blocks/64)] for an updated-vertex id set — built
-        once per superstep and tested against every tile filter."""
+        """Bitmap words ``[B]`` (B = ceil(blocks/64)) for an updated-vertex
+        id set ids ``[U]`` — built once per superstep and tested against
+        every tile filter."""
         bm = SourceBlockBitmap(num_vertices, block_shift)
         bm.add(ids)
         return bm.words

@@ -141,6 +141,10 @@ class EdgeCache:
     PROMOTE_WATERMARK = 0.70  # maintain(): promote only below this pressure
     DEMOTE_WATERMARK = 0.95   # maintain(): pre-demote LRU hot above this
 
+    #: lock discipline, enforced by tools/analyze.py --check locks
+    _guarded_by = {"_entries": "_lock", "_bytes": "_lock",
+                   "_clock": "_lock", "stats": "_lock"}
+
     def __init__(self, store: TileStore, capacity_bytes: int, mode: int = 1,
                  policy: str = "lru", promote_hits: int = 2):
         if policy not in POLICIES:
@@ -318,17 +322,14 @@ class EdgeCache:
                 dt = time.perf_counter() - t0   # _try_promote times its own
                 with self._lock:                # compress pass
                     self.stats.retier_seconds += dt
-                before = self.stats.promotions
-                self._try_promote(tid, blob, mode, raw)
-                if self.stats.promotions == before:
+                if not self._try_promote(tid, blob, mode, raw):
                     break                 # promotion no longer fits: stop
                 promoted += 1
             else:
-                before = self.stats.demotions
-                self._demote(tid, blob, mode)
                 # _demote may abort (concurrent swap) or evict instead
-                # (blob didn't shrink) — report only real demotions
-                demoted += self.stats.demotions - before
+                # (blob didn't shrink) — count only committed demotions
+                if self._demote(tid, blob, mode):
+                    demoted += 1
         return dict(promoted=promoted, demoted=demoted)
 
     def start_background(self, interval_s: float = 1.0) -> None:
@@ -484,16 +485,18 @@ class EdgeCache:
             self._bytes -= len(e.blob)
             self.stats.evictions += 1
 
-    def _demote(self, tile_id: int, old_blob: bytes, old_mode: int) -> None:
+    def _demote(self, tile_id: int, old_blob: bytes, old_mode: int) -> bool:
         """Recompress one tier colder (outside the lock); commit only if the
         entry is unchanged and the blob actually shrank — tiles that don't
-        compress are treated as already-coldest and evicted."""
+        compress are treated as already-coldest and evicted.  True only
+        when a demotion committed (aborts/evictions return False), so
+        callers never re-read ``stats`` to learn the outcome."""
         if old_mode not in TIER_LADDER or old_mode == TIER_LADDER[-1]:
             with self._lock:
                 e = self._entries.get(tile_id)
                 if e is not None and e.blob is old_blob:
                     self._evict_locked(tile_id)
-            return
+            return False
         target = TIER_LADDER[TIER_LADDER.index(old_mode) + 1]
         t0 = time.perf_counter()
         new_blob = formats.compress_blob(
@@ -503,22 +506,24 @@ class EdgeCache:
             self.stats.retier_seconds += dt
             e = self._entries.get(tile_id)
             if e is None or e.blob is not old_blob:
-                return
+                return False
             if len(new_blob) >= len(old_blob):
                 self._evict_locked(tile_id)
-                return
+                return False
             self._bytes += len(new_blob) - len(old_blob)
             e.blob, e.mode = new_blob, target
             e.hits_since_retier = 0
             self.stats.demotions += 1
+            return True
 
     def _try_promote(self, tile_id: int, old_blob: bytes, old_mode: int,
-                     raw: bytes) -> None:
+                     raw: bytes) -> bool:
         """Recompress one tier hotter (outside the lock).  Promotion grows
         the blob, so it only commits if it fits without evicting anything —
-        under tight capacity the cache stays demoted instead."""
+        under tight capacity the cache stays demoted instead.  True only
+        when the promotion committed."""
         if old_mode not in TIER_LADDER or old_mode == TIER_LADDER[0]:
-            return
+            return False
         target = TIER_LADDER[TIER_LADDER.index(old_mode) - 1]
         t0 = time.perf_counter()
         new_blob = formats.compress_blob(raw, target)
@@ -527,12 +532,13 @@ class EdgeCache:
             self.stats.retier_seconds += dt
             e = self._entries.get(tile_id)
             if e is None or e.blob is not old_blob:
-                return
+                return False
             delta = len(new_blob) - len(e.blob)
             if self._bytes + delta > self.capacity_bytes:
                 e.hits_since_retier = 0   # capacity tight: stay put
-                return
+                return False
             self._bytes += delta
             e.blob, e.mode = new_blob, target
             e.hits_since_retier = 0
             self.stats.promotions += 1
+            return True

@@ -125,8 +125,9 @@ def multi_query_payload(
     threshold: float = DENSITY_THRESHOLD,
     mode: str = "hybrid",
 ) -> tuple[bytes, tuple]:
-    """2-D broadcast payload (DESIGN.md §9): density is measured *per query
-    column*.  Dense columns ship a ceil(V/8) bitvector + the full column;
+    """2-D broadcast payload (DESIGN.md §9) over values ``[V, Q]`` and the
+    bool updated mask ``[V, Q]``: density is measured *per query column*.
+    Dense columns ship a ceil(V/8) bitvector + the full column;
     sparse columns pool their updates into one packed section of
     (vertex: uint32, query: uint32) pairs followed by the values.  Returns
     (payload bytes, per-column mode tuple)."""
@@ -248,7 +249,9 @@ def plan_broadcast_intervals(
     mode: str = "hybrid",
 ) -> BroadcastRecord:
     """Measure one server's broadcast sharded per *dirty interval*
-    (DESIGN.md §10) instead of one whole-V payload.
+    (DESIGN.md §10) instead of one whole-V payload.  Shapes: idx ``[U]``
+    global vertex ids, vals ``[U(, Q)]``, mask ``[U, Q]`` or None,
+    splitter ``[K+1]`` interval boundaries.
 
     Each interval that received updates ships its own section — an 8-byte
     (interval id, count) header plus a :func:`plan_broadcast` payload built
@@ -344,7 +347,8 @@ def plan_broadcast_async(
     compressor: str = "zstd-1",
     mode: str = "hybrid",
 ) -> "Future[BroadcastRecord]":
-    """Submit :func:`plan_broadcast` onto the comm executor.  The caller owns
+    """Submit :func:`plan_broadcast` onto the comm executor over values
+    ``[V(, Q)]`` and the updated mask ``[V(, Q)]``.  The caller owns
     ``values``/``updated`` after submission — pass freshly built arrays."""
     return _comm_pool().submit(plan_broadcast, values, updated,
                                threshold=threshold, compressor=compressor,

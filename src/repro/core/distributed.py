@@ -175,6 +175,7 @@ class DistributedGABEngine:
                           in_degree.astype(np.float64))
         rep = NamedSharding(self.mesh, P())
         values = jax.device_put(jnp.asarray(state.pop("value")), rep)
+        # lint: allow(GH205): program-defined init dict, consumed by keyed lookup only
         aux = {k: jax.device_put(jnp.asarray(v), rep) for k, v in state.items()}
         stk = self.shard_tiles(tiles, row_cap)
 
@@ -250,6 +251,10 @@ class ClusterExchange:
     loop); the receiver thread only touches the inbox under its lock.
     """
 
+    #: lock discipline, enforced by tools/analyze.py --check locks
+    #: (_cond wraps the inbox mutex shared with the receiver thread)
+    _guarded_by = {"_inbox": "_cond", "_rx_error": "_cond"}
+
     def __init__(self, transport, *, comm_mode: str = "hybrid",
                  compressor: str = "zstd-1",
                  threshold: float = comm.DENSITY_THRESHOLD,
@@ -308,8 +313,9 @@ class ClusterExchange:
                  splitter: Optional[np.ndarray] = None,
                  compute_seconds: float = 0.0,
                  control: Optional[dict] = None) -> ExchangeResult:
-        """Broadcast this server's updates, wait for all peers, and return
-        the rank-ordered merged update set (see class docstring).
+        """Broadcast this server's updates (idx ``[U]``, vals ``[U(, Q)]``,
+        mask ``[U, Q]`` or None, splitter ``[K+1]``), wait for all peers,
+        and return the rank-ordered merged update set (see class docstring).
 
         ``control`` (rank 0 only) is the session's admission/drain record
         for this barrier; it rides in rank 0's frame header and comes back
@@ -336,6 +342,7 @@ class ClusterExchange:
                 if dst != self.rank:
                     self.transport.send(dst, env, timeout=self.timeout)
             peers = self._wait_peers(seq)
+            # lint: allow(GH205): arrival-ordered; folded with commutative integer addition only
             for dec, _secs in peers.values():
                 raw_b += dec.header["raw_bytes"]
                 wire_b += dec.header["wire_bytes"]

@@ -1005,6 +1005,12 @@ class EngineSession:
     from one driver thread.
     """
 
+    #: lock discipline, enforced by tools/analyze.py --check locks
+    #: (admission/drain queues are filled by the serving thread while the
+    #: driver thread splices them at the barrier)
+    _guarded_by = {"_admit_queue": "_lock", "_drain_queue": "_lock",
+                   "next_qid": "_lock"}
+
     def __init__(self, engine: OutOfCoreEngine, prog: VertexProgram, *,
                  q_slots: Optional[int] = None,
                  max_supersteps: Optional[int] = None):
@@ -1790,8 +1796,10 @@ class EngineSession:
         self.final_values[:, gqs] = new_vals
         self.nq_total = len(self.per_query_ss)
         # peers renumber from the control record (rank 0 assigned at
-        # collect time); max() keeps both sides monotonic
-        self.next_qid = max(self.next_qid, hi)
+        # collect time); max() keeps both sides monotonic — under the lock,
+        # since the serving thread's admit() bumps the counter concurrently
+        with self._lock:
+            self.next_qid = max(self.next_qid, hi)
         if self._ooc:
             self.vstore.append_columns({"value": new_vals, **per_q_aux})
         else:
@@ -1812,6 +1820,8 @@ class EngineSession:
         interval blocks instead of leaves (dirty blocks only — clean ones
         hardlink, see core.checkpoint)."""
         eng, cfg = self.eng, self.eng.cfg
+        with self._lock:
+            next_qid = int(self.next_qid)
         manifest = dict(
             superstep=ss + 1,
             final=False,
@@ -1822,7 +1832,7 @@ class EngineSession:
             assignment=[[int(t) for t in a] for a in eng.assignment],
             active_q=([int(g) for g in self.active_q]
                       if self.multi_q else None),
-            next_qid=int(self.next_qid),
+            next_qid=next_qid,
             queries={str(g): int(s) for g, s in self.query_seeds.items()},
         )
         state: dict = {"updated_ids": np.asarray(self.updated_ids,

@@ -114,7 +114,8 @@ class VertexProgram:
     # -- hooks ------------------------------------------------------------
     def init(self, num_vertices: int, out_degree: np.ndarray,
              in_degree: np.ndarray, **kw) -> dict[str, np.ndarray]:
-        """Return {"value": ..., <aux name>: ...}."""
+        """Return {"value": ..., <aux name>: ...} — value ``[V(, Q)]``,
+        aux arrays ``[V]``, given out/in degrees ``[V]``."""
         raise NotImplementedError
 
     def gather(self, src_value: Array, edge_val: Array,
@@ -134,8 +135,9 @@ class VertexProgram:
         return _COMBINE_IDENTITY[self.combine]
 
     def updated_mask(self, old: Array, new: Array) -> Array:
-        """Elementwise "value changed" mask — exact (!=) or |new - old| >
-        update_tol for tolerance-based programs like PageRank."""
+        """Elementwise "value changed" mask over old/new ``[V(, Q)]`` —
+        exact (!=) or |new - old| > update_tol for tolerance-based
+        programs like PageRank."""
         if self.update_tol > 0.0:
             return jnp.abs(new - old) > self.update_tol
         return new != old

@@ -101,7 +101,8 @@ def plan_partition(
     pad_edges_to: int = 128,
     pad_rows_to: int = 128,
 ) -> PartitionPlan:
-    """Stage 1: derive the tile splitter and shared static capacities."""
+    """Stage 1: derive the tile splitter and shared static capacities
+    from in_degree ``[V]``."""
     splitter = make_splitter(in_degree, tile_size)
     csum = np.concatenate([[0], np.cumsum(in_degree.astype(np.int64))])
     edges_per_tile = csum[splitter[1:]] - csum[splitter[:-1]]
@@ -143,7 +144,7 @@ class IntervalPlan:
         return int(self.splitter[k]), int(self.splitter[k + 1])
 
     def interval_of(self, vertex_ids) -> np.ndarray:
-        """Owning interval per vertex id (vectorized)."""
+        """Owning interval id ``[U]`` per vertex id ``[U]`` (vectorized)."""
         return np.searchsorted(self.splitter, vertex_ids, side="right") - 1
 
     def to_dict(self) -> dict:
@@ -164,7 +165,8 @@ class IntervalPlan:
 
 def plan_intervals(tile_splitter: np.ndarray, num_intervals: int) -> IntervalPlan:
     """Group consecutive tiles into ``num_intervals`` vertex intervals of
-    roughly |V|/K vertices each.  Boundaries are chosen *from the tile
+    roughly |V|/K vertices each, given tile_splitter ``[P+1]``.  Boundaries
+    are chosen *from the tile
     splitter*, so intervals always align to tile row ranges; K is clamped to
     the tile count when there are fewer tiles than requested intervals."""
     tile_splitter = np.asarray(tile_splitter, dtype=np.int64)
@@ -195,7 +197,8 @@ def assign_tiles(num_tiles: int, num_servers: int) -> list[list[int]]:
 def assign_tiles_balanced(
     edges_per_tile: np.ndarray, num_servers: int
 ) -> list[list[int]]:
-    """Beyond-paper variant: greedy longest-processing-time assignment, which
+    """Beyond-paper variant: greedy longest-processing-time assignment over
+    edges_per_tile ``[P]``, which
     balances *edges* (not tile counts) per server.  Used by the scheduler when
     tiles have uneven real edge counts (last tile is usually short)."""
     order = np.argsort(-edges_per_tile)
@@ -213,7 +216,8 @@ def assign_tiles_balanced(
 def server_vertex_ranges(
     splitter: np.ndarray, assignment: list[list[int]]
 ) -> list[list[tuple[int, int]]]:
-    """Per-server owned dst-vertex ranges, merged where contiguous.
+    """Per-server owned dst-vertex ranges from splitter ``[P+1]``, merged
+    where contiguous.
 
     Server s owns the union of its tiles' row ranges — the vertices whose
     new values that server (and only that server) produces each superstep.
@@ -235,7 +239,8 @@ def server_vertex_ranges(
 
 
 def balance_stats(edges_per_tile: np.ndarray, assignment: list[list[int]]) -> dict:
-    """Edge/tile balance metrics (paper Fig. 5 reproduces these per tile)."""
+    """Edge/tile balance metrics over edges_per_tile ``[P]`` (paper Fig. 5
+    reproduces these per tile)."""
     per_server = np.array(
         [sum(int(edges_per_tile[t]) for t in ts) for ts in assignment], dtype=np.int64
     )

@@ -95,7 +95,8 @@ class Tile:
         return n
 
     def source_ids(self) -> np.ndarray:
-        """Unique real source vertex ids (for bloom filters / skip bitmaps)."""
+        """Unique real source vertex ids ``[U]`` (for bloom filters / skip
+        bitmaps)."""
         return np.unique(self.src[: self.meta.num_edges])
 
     def validate(self) -> None:
@@ -127,10 +128,12 @@ class Tile:
 def compute_source_footprint(
     src: np.ndarray, num_edges: int, interval_splitter: np.ndarray
 ) -> tuple[tuple, tuple, np.ndarray]:
-    """Source-interval footprint of a tile's real edges.
+    """Source-interval footprint of a tile's real edges src ``[E]`` under
+    interval_splitter ``[K+1]``.
 
     Returns (interval ids ascending, cumulative edge counts per interval,
-    edge-index permutation bucket-sorting the real edges by interval) — the
+    edge-index permutation ``[E]`` bucket-sorting the real edges by
+    interval) — the
     layout gather needs to run interval-by-interval with one contiguous
     block read per touched interval."""
     real = np.asarray(src[:num_edges], dtype=np.int64)
@@ -146,8 +149,9 @@ def compute_source_footprint(
 
 
 def attach_source_footprint(tile: Tile, interval_splitter: np.ndarray) -> Tile:
-    """Record the tile's source-interval footprint in its metadata (and the
-    bucket-sort permutation in ``iv_perm``).  In place; returns the tile."""
+    """Record the tile's source-interval footprint (interval_splitter
+    ``[K+1]``) in its metadata (and the bucket-sort permutation in
+    ``iv_perm``).  In place; returns the tile."""
     ids, ptr, perm = compute_source_footprint(
         tile.src, tile.meta.num_edges, interval_splitter)
     tile.meta.src_intervals = ids
@@ -168,7 +172,8 @@ def build_tile(
     row_cap: int,
     interval_splitter: Optional[np.ndarray] = None,
 ) -> Tile:
-    """Build a padded tile from raw (src, dst[, val]) edges with
+    """Build a padded tile from raw (src ``[E]``, dst ``[E]``[, val
+    ``[E]``]) edges with
     row_start <= dst < row_end.  Edges are sorted by (dst, src).  When an
     ``interval_splitter`` is given, the source-interval footprint is
     recorded in the tile's metadata (DESIGN.md §10)."""
@@ -216,8 +221,8 @@ def build_tile(
 
 
 def tile_edge_values(tile: Tile) -> np.ndarray:
-    """Edge-value array with inert padding: real val (or 1.0 if unweighted),
-    0.0 for padded slots."""
+    """Edge-value array ``[E]`` (E = edge_cap) with inert padding: real val
+    (or 1.0 if unweighted), 0.0 for padded slots."""
     if tile.val is not None:
         return tile.val
     v = np.zeros(tile.meta.edge_cap, dtype=np.float32)

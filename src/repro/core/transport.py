@@ -426,6 +426,7 @@ class RingTransport:
         after ``timeout`` seconds of silence."""
         deadline = time.monotonic() + timeout
         while True:
+            # lint: allow(GH205): _in built in ascending rank order at construction
             for s, ch in self._in.items():
                 if ch.poll():
                     msg = ch.recv_msg(timeout=None)
@@ -436,6 +437,7 @@ class RingTransport:
 
     def close(self) -> None:
         """Unmap every channel."""
+        # lint: allow(GH205): resource teardown — close order is irrelevant
         for ch in (*self._out.values(), *self._in.values()):
             ch.close()
 
@@ -469,6 +471,10 @@ class SocketTransport:
     guarantees match :class:`RingTransport`."""
 
     kind = "tcp"
+
+    #: lock discipline, enforced by tools/analyze.py --check locks
+    #: (the lazily-connected outbound socket map; one lock per peer)
+    _guarded_by = {"_out": "_out_locks"}
 
     def __init__(self, rank: int, n: int, run_dir: str,
                  host: str = "127.0.0.1", connect_timeout: float = 60.0):
@@ -583,7 +589,11 @@ class SocketTransport:
             self._listener.close()
         except OSError:
             pass
-        for s in self._out.values():
+        for dst in range(self.n):
+            with self._out_locks[dst]:
+                s = self._out.pop(dst, None)
+            if s is None:
+                continue
             try:
                 s.close()
             except OSError:

@@ -116,6 +116,10 @@ class VertexStateStore:
     (everything stays hot) — the engine only builds a store when a budget
     is set, but unit tests use the unlimited mode as the oracle."""
 
+    #: lock discipline, enforced by tools/analyze.py --check locks
+    _guarded_by = {"_blocks": "_lock", "_specs": "_lock",
+                   "_mem": "_lock", "stats": "_lock"}
+
     def __init__(self, splitter: np.ndarray,
                  budget_bytes: Optional[int] = None,
                  spill_dir: Optional[str] = None):
@@ -145,12 +149,13 @@ class VertexStateStore:
         return int(self.splitter[k]), int(self.splitter[k + 1])
 
     def interval_of(self, vertex_ids) -> np.ndarray:
-        """Owning interval per vertex id (vectorized searchsorted)."""
+        """Owning interval id ``[U]`` per vertex id ``[U]`` (vectorized
+        searchsorted)."""
         return np.searchsorted(self.splitter, vertex_ids, side="right") - 1
 
     # -- registration / access ----------------------------------------------
     def add_array(self, name: str, arr: np.ndarray) -> None:
-        """Shard a full ``[V(, ...)]`` array into interval blocks.  Blocks
+        """Shard a full ``[V(, Q)]`` array into interval blocks.  Blocks
         start hot; budget enforcement may immediately demote/spill the tail
         (the "initial state lives on disk" case)."""
         arr = np.asarray(arr)
@@ -168,15 +173,18 @@ class VertexStateStore:
 
     def spec(self, name: str) -> tuple[np.dtype, tuple]:
         """(dtype, trailing shape) of a registered array."""
-        return self._specs[name]
+        with self._lock:
+            return self._specs[name]
 
     def names(self) -> tuple[str, ...]:
         """Registered array names ("value" + the program's aux arrays)."""
-        return tuple(self._specs)
+        with self._lock:
+            return tuple(self._specs)
 
     def get_block(self, name: str, k: int) -> np.ndarray:
-        """Interval ``k`` of array ``name`` as a hot ndarray (read-only by
-        convention — use ``write_block`` to mutate)."""
+        """Interval ``k`` of array ``name`` as a hot ndarray ``[B(, Q)]``
+        (B = interval rows; read-only by convention — use ``write_block``
+        to mutate)."""
         with self._lock:
             b = self._blocks[(name, k)]
             self._blocks.move_to_end((name, k))
@@ -206,7 +214,8 @@ class VertexStateStore:
             return b.arr
 
     def write_block(self, name: str, k: int, arr: np.ndarray) -> None:
-        """Replace interval ``k``'s content — the dirty-writeback entry
+        """Replace interval ``k``'s content with arr ``[B(, Q)]`` — the
+        dirty-writeback entry
         point.  Invalidates the warm/cold copies, so the block pays
         (re)serialization only when pressure later demotes it."""
         with self._lock:
@@ -224,7 +233,8 @@ class VertexStateStore:
             self._enforce_budget(exclude=(name, k))
 
     def materialize(self, name: str) -> np.ndarray:
-        """Assemble the full array (used once, when a run finishes)."""
+        """Assemble the full array ``[V(, Q)]`` (used once, when a run
+        finishes)."""
         return np.concatenate(
             [self.get_block(name, k) for k in range(self.num_intervals)])
 
@@ -355,8 +365,9 @@ class VertexStateStore:
         """~How many ``name`` blocks fit hot under the budget (>= 1)."""
         if self.budget_bytes is None:
             return self.num_intervals
-        per = max(1, max((self._blocks[(name, k)].raw_bytes
-                          for k in range(self.num_intervals)), default=1))
+        with self._lock:
+            per = max(1, max((self._blocks[(name, k)].raw_bytes
+                              for k in range(self.num_intervals)), default=1))
         return max(1, self.budget_bytes // per)
 
     def tier_snapshot(self) -> dict:
@@ -449,6 +460,8 @@ class VertexStateStore:
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(fb)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
         self.stats.disk_seconds += time.perf_counter() - t0
         self.stats.spills += 1

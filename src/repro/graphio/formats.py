@@ -119,6 +119,10 @@ def deserialize_tile(blob: bytes) -> Tile:
 class TileStore:
     """Directory-backed tile store with optional at-rest compression."""
 
+    #: lock discipline, enforced by tools/analyze.py --check locks
+    _guarded_by = {"bytes_read": "_stats_lock",
+                   "bytes_written": "_stats_lock"}
+
     def __init__(self, root: str, disk_mode: int = 1):
         self.root = root
         self.disk_mode = disk_mode
@@ -144,9 +148,17 @@ class TileStore:
         tmp = os.path.join(self.root, "meta.json.tmp")
         with open(tmp, "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, os.path.join(self.root, "meta.json"))
-        np.savez(os.path.join(self.root, "degrees.npz"),
-                 in_degree=in_degree, out_degree=out_degree)
+        # stage through a file object: np.savez would append ".npz" to a
+        # bare "degrees.npz.tmp" path and the publish would miss it
+        dtmp = os.path.join(self.root, "degrees.npz.tmp")
+        with open(dtmp, "wb") as f:
+            np.savez(f, in_degree=in_degree, out_degree=out_degree)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(dtmp, os.path.join(self.root, "degrees.npz"))
 
     def write_tile(self, tile: Tile) -> int:
         """Serialize + disk-mode-compress + atomically write one tile; returns
@@ -156,6 +168,8 @@ class TileStore:
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic: a reader never sees a torn tile
         with self._stats_lock:
             self.bytes_written += len(blob)

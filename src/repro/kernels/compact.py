@@ -84,7 +84,8 @@ def compact_pallas(
     interpret: bool = True,
     fill_index: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """First-`capacity` set indices of ``mask`` (ascending) + their values.
+    """First-`capacity` set indices of mask ``[V]`` (ascending) and their
+    values ``[V]``, as ``([K], [K])`` with K = capacity.
 
     Caller guarantees popcount(mask) <= capacity (comm.sparse_capacity does).
     """

@@ -226,6 +226,9 @@ def gab_fused(
 ) -> tuple[jax.Array, jax.Array]:
     """One fused Gather+Apply tile step.
 
+    Shapes: src_vals ``[E(, Q)]``, a/b/dst_local ``[E]``, old/base
+    ``[R(, Q)]`` with R = row_cap.
+
     Returns ``(new [row_cap(, Q)], updated [row_cap(, Q)] bool)`` with the
     exact semantics of ``core/gab.tile_gather_apply``'s reduce+apply+mask
     tail: rows at or beyond ``num_rows`` keep ``old`` and are not-updated.

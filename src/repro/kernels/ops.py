@@ -41,6 +41,8 @@ def _needs_exact_fallback(contrib: jax.Array) -> bool:
 def segment_sum(contrib: jax.Array, dst: jax.Array, num_segments: int,
                 block_e: int = _gg.DEFAULT_BLOCK_E,
                 block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    """Sum-reduce contrib ``[E]`` or ``[E, Q]`` by dst ``[E]`` into
+    ``[R]`` / ``[R, Q]`` rows (R = num_segments)."""
     if _needs_exact_fallback(contrib):
         return _ref.segment_sum(contrib, dst, num_segments)
     return _gg.segment_reduce_pallas(
@@ -52,6 +54,8 @@ def segment_sum(contrib: jax.Array, dst: jax.Array, num_segments: int,
 def segment_min(contrib: jax.Array, dst: jax.Array, num_segments: int,
                 block_e: int = _gg.DEFAULT_BLOCK_E,
                 block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    """Min-reduce contrib ``[E]`` or ``[E, Q]`` by dst ``[E]`` into
+    ``[R]`` / ``[R, Q]`` rows (+inf for empty segments)."""
     if _needs_exact_fallback(contrib):
         return _ref.segment_min(contrib, dst, num_segments)
     return _gg.segment_reduce_pallas(
@@ -63,6 +67,8 @@ def segment_min(contrib: jax.Array, dst: jax.Array, num_segments: int,
 def segment_max(contrib: jax.Array, dst: jax.Array, num_segments: int,
                 block_e: int = _gg.DEFAULT_BLOCK_E,
                 block_r: int = _gg.DEFAULT_BLOCK_R) -> jax.Array:
+    """Max-reduce contrib ``[E]`` or ``[E, Q]`` by dst ``[E]`` into
+    ``[R]`` / ``[R, Q]`` rows (-inf for empty segments)."""
     if _needs_exact_fallback(contrib):
         return _ref.segment_max(contrib, dst, num_segments)
     return _gg.segment_reduce_pallas(
@@ -74,6 +80,8 @@ def segment_max(contrib: jax.Array, dst: jax.Array, num_segments: int,
 def compact(mask: jax.Array, values: jax.Array, capacity: int,
             block: int = _compact.DEFAULT_BLOCK,
             fill_index: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """First-`capacity` set indices of mask ``[V]`` (ascending) and their
+    values ``[V]``, as ``([K], [K])`` with K = capacity."""
     if mask.shape[0] >= (1 << 24):
         return _ref.compact(mask, values, capacity, fill_index)
     return _compact.compact_pallas(

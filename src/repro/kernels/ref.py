@@ -6,22 +6,26 @@ import jax.numpy as jnp
 
 
 def segment_sum(contrib: jax.Array, dst: jax.Array, num_segments: int) -> jax.Array:
-    """out[r] = sum of contrib[e] where dst[e] == r."""
+    """Sum contrib ``[E(, Q)]`` by dst ``[E]`` into ``[R(, Q)]``."""
     return jax.ops.segment_sum(contrib, dst, num_segments=num_segments)
 
 
 def segment_min(contrib: jax.Array, dst: jax.Array, num_segments: int) -> jax.Array:
-    """out[r] = min of contrib[e] where dst[e] == r (+inf when empty)."""
+    """Min of contrib ``[E(, Q)]`` by dst ``[E]`` into ``[R(, Q)]``
+    (+inf when empty)."""
     return jax.ops.segment_min(contrib, dst, num_segments=num_segments)
 
 
 def segment_max(contrib: jax.Array, dst: jax.Array, num_segments: int) -> jax.Array:
+    """Max of contrib ``[E(, Q)]`` by dst ``[E]`` into ``[R(, Q)]``
+    (-inf when empty)."""
     return jax.ops.segment_max(contrib, dst, num_segments=num_segments)
 
 
 def compact(mask: jax.Array, values: jax.Array, capacity: int,
             fill_index: int | None = None) -> tuple[jax.Array, jax.Array]:
-    """First-`capacity` indices where mask is set (ascending) + their values.
+    """First-`capacity` indices where mask ``[V]`` is set (ascending) and
+    their values ``[V]``, as ``([K], [K])`` with K = capacity.
 
     Unused slots hold (fill_index, 0).  fill_index defaults to len(mask).
     """

@@ -168,6 +168,8 @@ class FaultInjector:
         with open(path, "wb") as f:
             if spec is None:
                 f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
                 return
             f.write(data[: max(spec.keep_bytes, 0)])
             f.flush()

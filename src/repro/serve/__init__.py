@@ -1,1 +1,2 @@
-# Serving substrate: prefill/decode step builders + batched request engine.
+"""Serving substrate: prefill/decode step builders + batched request
+engine + the online graph-query service."""

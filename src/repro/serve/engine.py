@@ -28,6 +28,8 @@ from repro.models.model_zoo import build_model
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: prompt token ids plus decode limits."""
+
     rid: int
     prompt: np.ndarray           # [L] int32
     max_new_tokens: int = 32
@@ -37,6 +39,8 @@ class Request:
 
 @dataclasses.dataclass
 class Completion:
+    """Finished request: generated tokens + prefill/decode wall time."""
+
     rid: int
     tokens: list
     prefill_s: float = 0.0
@@ -58,6 +62,11 @@ def _insert_slot(batched, single, slot: int):
 
 
 class ServeEngine:
+    """Continuous-batching engine over a fixed pool of cache slots:
+    per-slot prefill fills empty slots, one decode step advances every
+    active slot, finished slots refill from the queue (module docstring).
+    Single-threaded — callers serialize access themselves."""
+
     def __init__(self, cfg: ModelConfig, run: RunConfig, params,
                  slots: int = 4, max_len: int = 512,
                  cache_dtype=jnp.float32):
@@ -117,6 +126,8 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def run_requests(self, requests: list[Request]) -> list[Completion]:
+        """Serve ``requests`` to completion with slot refill; completions
+        are returned in finish order, not submission order."""
         queue = list(requests)
         done: list[Completion] = []
         completions: dict[int, Completion] = {}

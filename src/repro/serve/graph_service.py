@@ -102,6 +102,18 @@ class GraphService:
     must not race it for the handlers) and fans out per-app checkpoint
     directories under ``cfg.checkpoint_dir`` when one is set."""
 
+    # ``_wake`` is a Condition wrapping ``_lock`` — either name guards.
+    # ``_sessions``/``completed`` are serve-thread-owned by design and
+    # deliberately undeclared.
+    _guarded_by = {
+        "_pending": ("_lock", "_wake"),
+        "_live": ("_lock", "_wake"),
+        "_next_rid": ("_lock", "_wake"),
+        "_draining": ("_lock", "_wake"),
+        "_stopped": ("_lock", "_wake"),
+        "stats": ("_lock", "_wake"),
+    }
+
     def __init__(self, store, cfg: EngineConfig, *,
                  q_slots: int = 8,
                  min_fill: int = 1,
@@ -195,6 +207,7 @@ class GraphService:
         return self._thread
 
     def join(self, timeout: Optional[float] = None) -> None:
+        """Wait for the ``start_background()`` serve thread to exit."""
         if self._thread is not None:
             self._thread.join(timeout)
 
@@ -248,7 +261,8 @@ class GraphService:
         for app in list(self._sessions):
             sess = self._sessions[app]
             st = sess.step()
-            self.stats["supersteps"] += 1
+            with self._lock:
+                self.stats["supersteps"] += 1
             self._finish(app, sess, st.retired_queries, "done")
             self._finish(app, sess, st.drained_queries, "timeout")
             if sess.finished:
@@ -330,18 +344,20 @@ class GraphService:
                 del self._sessions[app]
             # live tickets stay unresolved here by design: the resumed
             # service re-registers them from the manifest lineage
-            for live in self._live.values():
-                for t in live.values():
-                    t.status = "failed"
-                    self.stats["failed"] += 1
-                    t._event.set()
-                live.clear()
+            with self._lock:
+                for live in self._live.values():
+                    for t in live.values():
+                        t.status = "failed"
+                        self.stats["failed"] += 1
+                        t._event.set()
+                    live.clear()
         else:
             while self._sessions:
                 for app in list(self._sessions):
                     sess = self._sessions[app]
                     st = sess.step()
-                    self.stats["supersteps"] += 1
+                    with self._lock:
+                        self.stats["supersteps"] += 1
                     self._finish(app, sess, st.retired_queries, "done")
                     self._finish(app, sess, st.drained_queries, "timeout")
                     if sess.finished:
@@ -400,12 +416,14 @@ class GraphService:
         """p50/p99 total latency + component means over completed
         queries (the bench's and runbook's one-stop report)."""
         done = [t for t in self.completed if t.status == "done"]
+        with self._lock:
+            timeouts = self.stats["timeout"]
         if not done:
-            return dict(count=0, timeouts=self.stats["timeout"])
+            return dict(count=0, timeouts=timeouts)
         tot = np.asarray([t.total_s for t in done])
         return dict(
             count=len(done),
-            timeouts=self.stats["timeout"],
+            timeouts=timeouts,
             p50_ms=float(np.percentile(tot, 50) * 1e3),
             p99_ms=float(np.percentile(tot, 99) * 1e3),
             mean_queue_ms=float(np.mean([t.queue_wait_s for t in done])

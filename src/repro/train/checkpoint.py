@@ -95,8 +95,11 @@ class CheckpointManager:
         if self.fault is not None:
             self.fault.write(path, data, site, step)
         else:
+            # lint: allow(GH301): callers always pass paths inside the staged tmp dir
             with open(path, "wb") as f:
                 f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:08d}")

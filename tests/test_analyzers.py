@@ -1,0 +1,501 @@
+"""repro-lint fixture tests (tools/analyze.py + tools/analyzers/).
+
+Each checker gets three fixture snippets: one seeding a violation the
+checker must catch (true positive), one following the invariant (clean),
+and one carrying a justified ``# lint: allow(...)`` suppression.  On top
+of that: suppression hygiene (GH001/GH002), the self-run test asserting
+the real tree is clean, and a CLI smoke test of the exit-code contract.
+
+Fixtures are written under ``tmp_path`` and linted with
+``all_files=True`` (the per-checker ``TARGET_SUFFIXES`` filters would
+otherwise skip files outside ``src/repro``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from analyze import run               # noqa: E402
+from analyzers import CHECKERS        # noqa: E402
+from analyzers.shapes import parse_shape_tokens  # noqa: E402
+
+
+def _lint(tmp_path, code, checks, name="fixture.py"):
+    """Write one fixture module and run the named checkers over it."""
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(code))
+    return run([str(p)], checks, all_files=True)
+
+
+def _codes(findings):
+    return [f.code for f in findings]
+
+
+# ------------------------------ locks (GH1xx) ------------------------------
+
+LOCKED_CLASS = '''
+    """m."""
+    import threading
+
+    class C:
+        """c."""
+        _guarded_by = {"_x": "_lock"}
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._x = 0
+
+        def bump(self):
+            """b."""
+            @BODY@
+'''
+
+
+def test_locks_flags_unguarded_access(tmp_path):
+    findings, _ = _lint(tmp_path, LOCKED_CLASS.replace(
+        "@BODY@", "self._x += 1"), ["locks"])
+    assert _codes(findings) == ["GH101"]
+    assert "C.bump" in findings[0].message
+
+
+def test_locks_clean_when_held(tmp_path):
+    findings, _ = _lint(tmp_path, LOCKED_CLASS.replace(
+        "@BODY@", "with self._lock:\n                self._x += 1"), ["locks"])
+    assert findings == []
+
+
+def test_locks_suppressed_with_justification(tmp_path):
+    findings, suppressed = _lint(tmp_path, LOCKED_CLASS.replace(
+        "@BODY@", "self._x += 1  "
+        "# lint: allow(GH101): fixture is single-threaded"), ["locks"])
+    assert findings == []
+    assert suppressed == 1
+
+
+def test_locks_private_helper_inherits_callers_lock(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import threading
+
+        class C:
+            """c."""
+            _guarded_by = {"_x": "_lock"}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._x = 0
+
+            def bump(self):
+                """b."""
+                with self._lock:
+                    self._incr()
+
+            def _incr(self):
+                self._x += 1
+    ''', ["locks"])
+    assert findings == []
+
+
+def test_locks_nested_def_is_an_unlocked_entry(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import threading
+
+        class C:
+            """c."""
+            _guarded_by = {"_x": "_lock"}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._x = 0
+
+            def start(self):
+                """worker body runs later, on another thread, unlocked."""
+                def worker():
+                    self._x += 1
+                return worker
+    ''', ["locks"])
+    assert _codes(findings) == ["GH101"]
+
+
+def test_locks_unused_declaration_and_malformed(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        class C:
+            """c."""
+            _guarded_by = {"_ghost": "_lock"}
+    ''', ["locks"])
+    assert _codes(findings) == ["GH102"]
+
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        class C:
+            """c."""
+            _guarded_by = ["_x"]
+    ''', ["locks"], name="malformed.py")
+    assert _codes(findings) == ["GH103"]
+
+
+def test_locks_tuple_alias_accepts_either_lock(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import threading
+
+        class C:
+            """c."""
+            _guarded_by = {"_x": ("_lock", "_cond")}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cond = threading.Condition(self._lock)
+                self._x = 0
+
+            def bump(self):
+                """b."""
+                with self._cond:
+                    self._x += 1
+    ''', ["locks"])
+    assert findings == []
+
+
+# --------------------------- determinism (GH2xx) ---------------------------
+
+def test_determinism_set_iteration(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        def f():
+            """f."""
+            items = {3, 1, 2}
+            return [x for x in items]
+    ''', ["determinism"])
+    assert _codes(findings) == ["GH201"]
+
+
+def test_determinism_sorted_clears_set_iteration(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        def f():
+            """f."""
+            items = {3, 1, 2}
+            return [x for x in sorted(items)]
+    ''', ["determinism"])
+    assert findings == []
+
+
+def test_determinism_unsorted_listdir(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import os
+
+        def f(d):
+            """f."""
+            return [n for n in os.listdir(d)]
+    ''', ["determinism"])
+    assert _codes(findings) == ["GH202"]
+
+
+def test_determinism_wallclock_and_rng(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import random
+        import time
+
+        def f():
+            """f."""
+            return time.time() + random.random()
+    ''', ["determinism"])
+    assert sorted(_codes(findings)) == ["GH203", "GH203"]
+
+
+def test_determinism_sum_over_dict_values(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        def f(d):
+            """f."""
+            return sum(d.values())
+    ''', ["determinism"])
+    assert _codes(findings) == ["GH204"]
+
+
+def test_determinism_dict_view_iteration_and_suppression(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        def f(d):
+            """f."""
+            out = []
+            for k, v in d.items():
+                out.append((k, v))
+            return out
+    ''', ["determinism"])
+    assert _codes(findings) == ["GH205"]
+
+    findings, suppressed = _lint(tmp_path, '''
+        """m."""
+        def f(d):
+            """f."""
+            out = []
+            # lint: allow(GH205): d is built in rank order by the caller
+            for k, v in d.items():
+                out.append((k, v))
+            return out
+    ''', ["determinism"], name="suppressed.py")
+    assert findings == []
+    assert suppressed == 1
+
+
+# ---------------------------- atomicity (GH3xx) ----------------------------
+
+def test_atomicity_bare_durable_write(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        def save(path, data):
+            """s."""
+            with open(path, "w") as f:
+                f.write(data)
+    ''', ["atomicity"])
+    assert _codes(findings) == ["GH301"]
+
+
+def test_atomicity_staged_protocol_clean(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import os
+
+        def save(path, data):
+            """s."""
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+    ''', ["atomicity"])
+    assert findings == []
+
+
+def test_atomicity_replace_without_fsync(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import os
+
+        def save(path, data):
+            """s."""
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(data)
+            os.replace(tmp, path)
+    ''', ["atomicity"])
+    assert _codes(findings) == ["GH302"]
+
+
+def test_atomicity_np_saver_through_staged_handle_clean(tmp_path):
+    # np.savez("x.npz.tmp") would write x.npz.tmp.npz — staging must go
+    # through a file object, and the checker must not flag that idiom
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import os
+
+        import numpy as np
+
+        def save(path, arr):
+            """s."""
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                np.savez(f, arr=arr)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+    ''', ["atomicity"])
+    assert findings == []
+
+
+def test_atomicity_bytesio_is_not_a_durable_write(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import io
+
+        import numpy as np
+
+        def pack(arr):
+            """p."""
+            bio = io.BytesIO()
+            np.save(bio, arr)
+            return bio.getvalue()
+    ''', ["atomicity"])
+    assert findings == []
+
+
+def test_atomicity_suppressed(tmp_path):
+    findings, suppressed = _lint(tmp_path, '''
+        """m."""
+        def save(path, data):
+            """s."""
+            # lint: allow(GH301): caller stages path inside the tmp dir
+            with open(path, "w") as f:
+                f.write(data)
+    ''', ["atomicity"])
+    assert findings == []
+    assert suppressed == 1
+
+
+# ------------------------------ shapes (GH4xx) -----------------------------
+
+def test_shape_token_grammar():
+    assert parse_shape_tokens("values ``[V, Q]`` and splitter ``[K+1]``") \
+        == [("V", "Q"), ("K",)]
+    assert parse_shape_tokens("``[V(, Q)]`` optional axis") == [("V", "Q")]
+    # prose brackets are not shape tokens
+    assert parse_shape_tokens("range [lo, hi) and list[Tile]") == []
+
+
+def test_shapes_public_array_api_without_token(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import numpy as np
+
+        def scale(x: np.ndarray) -> np.ndarray:
+            """Doubles the values."""
+            return x * 2
+    ''', ["shapes"])
+    assert _codes(findings) == ["GH401"]
+
+
+def test_shapes_clean_with_token_and_unknown_axis(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import numpy as np
+
+        def scale(x: np.ndarray) -> np.ndarray:
+            """Doubles ``[V, Q]`` values."""
+            return x * 2
+    ''', ["shapes"])
+    assert findings == []
+
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        import numpy as np
+
+        def scale(x: np.ndarray) -> np.ndarray:
+            """Doubles ``[V, Z]`` values."""
+            return x * 2
+    ''', ["shapes"], name="badaxis.py")
+    assert _codes(findings) == ["GH403"]
+    assert "'Z'" in findings[0].message
+
+
+def test_shapes_axis_order_mismatch(tmp_path):
+    code = '''
+        """m."""
+        def callee(x):
+            """Reduces ``[Q, V]`` blocks."""
+            return x
+
+        def caller(x):
+            """Walks ``[V, Q]`` blocks."""
+            return callee(x){transpose}
+    '''
+    findings, _ = _lint(tmp_path, code.format(transpose=""), ["shapes"])
+    assert _codes(findings) == ["GH402"]
+    findings, _ = _lint(tmp_path, code.format(transpose=".T"), ["shapes"],
+                        name="transposed.py")
+    assert findings == []
+
+
+# ---------------------------- docstrings (GH5xx) ---------------------------
+
+def test_docstrings_missing_module_class_def(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        class Pub:
+            def meth(self):
+                return 1
+
+            def _private(self):
+                return 2
+
+        def _helper():
+            return 3
+    ''', ["docstrings"])
+    # module + class + public method; privates are skipped
+    assert _codes(findings) == ["GH501", "GH501", "GH501"]
+
+
+def test_docstrings_clean(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        class Pub:
+            """c."""
+            def meth(self):
+                """d."""
+                return 1
+    ''', ["docstrings"])
+    assert findings == []
+
+
+# --------------------------- suppression hygiene ---------------------------
+
+def test_allow_without_justification_is_gh001(tmp_path):
+    findings, _ = _lint(tmp_path, '''
+        """m."""
+        def f(d):
+            """f."""
+            # lint: allow(GH205)
+            for k in d.items():
+                pass
+    ''', ["determinism"])
+    assert "GH001" in _codes(findings)
+
+
+def test_unused_allow_is_gh002_only_on_full_runs(tmp_path):
+    code = '''
+        """m."""
+        # lint: allow(GH205): justified but matches nothing
+        X = 1
+    '''
+    findings, _ = _lint(tmp_path, code, sorted(CHECKERS))
+    assert _codes(findings) == ["GH002"]
+    # a subset run legitimately leaves other checkers' allows unmatched
+    findings, _ = _lint(tmp_path, code, ["docstrings"], name="subset.py")
+    assert findings == []
+
+
+def test_syntax_error_is_gh000(tmp_path):
+    findings, _ = _lint(tmp_path, "def broken(:\n", sorted(CHECKERS))
+    assert _codes(findings) == ["GH000"]
+
+
+# ------------------------------ self-run gate ------------------------------
+
+def test_repro_tree_is_lint_clean():
+    """The real tree must stay clean: every invariant violation is either
+    fixed or carries a justified suppression (src/repro/core and
+    src/repro/kernels must in particular be clean — CI enforces the whole
+    package)."""
+    findings, suppressed = run([os.path.join(REPO, "src", "repro")],
+                               sorted(CHECKERS))
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert suppressed > 0   # the recorded justifications stay matched
+
+
+def test_cli_exit_codes(tmp_path):
+    clean = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "analyze.py"),
+         "--check", "docstrings", os.path.join(REPO, "src", "repro",
+                                               "kernels")],
+        capture_output=True, text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    assert "repro-lint: 0 finding(s)" in clean.stdout
+
+    bad = tmp_path / "bad.py"
+    bad.write_text('"""m."""\n\n\ndef save(path, data):\n'
+                   '    """s."""\n'
+                   '    with open(path, "w") as f:\n'
+                   '        f.write(data)\n')
+    dirty = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "analyze.py"),
+         "--check", "atomicity", "--all-files", str(bad)],
+        capture_output=True, text=True)
+    assert dirty.returncode == 1
+    assert "GH301" in dirty.stdout

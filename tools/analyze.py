@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""repro-lint: the invariant-enforcing static-analysis suite.
+
+Usage:
+    python tools/analyze.py [--check NAME]... [--all-files] [paths...]
+
+Runs the ``tools/analyzers/`` checkers (stdlib ``ast`` only — the
+container has no third-party linters) over the given files/directories
+(default ``src/repro``) and prints machine-readable findings, one per
+line::
+
+    src/repro/core/cache.py:321 GH101 EdgeCache.maintain touches ...
+
+Checkers (``--check`` may repeat; default is all):
+  locks         GH1xx  _guarded_by lock-discipline race checker
+  determinism   GH2xx  cross-rank determinism lint
+  atomicity     GH3xx  staged-write (tmp -> fsync -> os.replace) checker
+  shapes        GH4xx  docstring shape-contract checker
+  docstrings    GH5xx  public-API docstring checker
+
+Findings are suppressed inline with a justified allow comment on the
+finding's line or the line directly above::
+
+    # lint: allow(GH205): inbox dict is filled in rank order at __init__
+
+An allow with no justification is itself a finding (GH001); when every
+checker runs, an allow that matches nothing is too (GH002) so stale
+suppressions cannot accumulate.  Exit code 1 on any finding.
+
+Each checker limits itself to the modules where its invariant is
+load-bearing (``TARGET_SUFFIXES``); ``--all-files`` disables that
+filter — used by the fixture tests to lint files outside ``src/repro``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from analyzers import CHECKERS                      # noqa: E402
+from analyzers.common import (Finding, Suppressions,  # noqa: E402
+                              iter_py_files, load_source, norm_relpath)
+
+
+def run(paths: list[str], checks: list[str],
+        all_files: bool = False) -> tuple[list[Finding], int]:
+    """Run the named checkers over ``paths``.
+
+    Returns ``(findings, suppressed_count)`` — findings sorted by
+    ``(path, line, code)`` and already filtered through the inline
+    suppressions, with GH001/GH002 suppression-hygiene findings
+    appended.  GH002 (unused allow) is only meaningful when every
+    checker ran: a subset run legitimately leaves other checkers'
+    allows unmatched.
+    """
+    report_unused = set(checks) == set(CHECKERS)
+    findings: list[Finding] = []
+    total_suppressed = 0
+    for path in iter_py_files(paths):
+        rel = norm_relpath(path)
+        try:
+            text, tree = load_source(path)
+        except SyntaxError as exc:
+            findings.append(Finding(path, exc.lineno or 1, "GH000",
+                                    f"syntax error: {exc.msg}"))
+            continue
+        supp = Suppressions(path, text)
+        raw: list[Finding] = []
+        for name in checks:
+            mod = CHECKERS[name]
+            if all_files or mod.applies(rel):
+                raw.extend(mod.check_file(path, text, tree))
+        kept, n_supp = supp.filter(raw)
+        total_suppressed += n_supp
+        findings.extend(kept)
+        findings.extend(supp.problems(report_unused=report_unused))
+    return sorted(findings), total_suppressed
+
+
+def main(argv: list[str]) -> int:
+    """CLI entry point; prints findings and a summary, exits 1 on any."""
+    parser = argparse.ArgumentParser(
+        prog="analyze.py",
+        description="repro-lint invariant checkers (see module docstring)")
+    parser.add_argument("paths", nargs="*", default=["src/repro"],
+                        help="files or directories (default: src/repro)")
+    parser.add_argument("--check", action="append", choices=sorted(CHECKERS),
+                        help="run only this checker (repeatable)")
+    parser.add_argument("--all-files", action="store_true",
+                        help="ignore per-checker TARGET_SUFFIXES filters")
+    args = parser.parse_args(argv)
+
+    checks = args.check or sorted(CHECKERS)
+    findings, suppressed = run(args.paths, checks, all_files=args.all_files)
+
+    for f in findings:
+        print(f.render())
+    summary = (f"repro-lint: {len(findings)} finding(s), "
+               f"{suppressed} justified suppression(s) "
+               f"[checks: {', '.join(checks)}]")
+    print(("\n" if findings else "") + summary,
+          file=sys.stderr if findings else sys.stdout)
+
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a", encoding="utf-8") as fh:
+            fh.write(f"### repro-lint\n\n{summary}\n\n")
+            for f in findings:
+                fh.write(f"- `{f.render()}`\n")
+
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

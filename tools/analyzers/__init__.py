@@ -1,0 +1,27 @@
+"""repro-lint: invariant-enforcing static analyzers (stdlib ``ast`` only).
+
+Five checkers, one per invariant family the repo's correctness story
+leans on (DESIGN.md §15):
+
+  locks        GH1xx  lock discipline for ``_guarded_by``-declared state
+  determinism  GH2xx  cross-rank bit-identity hazards in merge/plan code
+  atomicity    GH3xx  staged tmp-write -> fsync -> os.replace protocol
+  shapes       GH4xx  the ``[V,Q]`` docstring shape grammar
+  docstrings   GH5xx  public APIs must carry a docstring
+
+Run them through ``tools/analyze.py``; suppress individual findings with
+``# lint: allow(CODE): justification`` (the justification is mandatory).
+"""
+from __future__ import annotations
+
+from . import atomicity, determinism, docstrings, locks, shapes
+
+#: name -> checker module; each module exposes ``CODES`` (code -> one-line
+#: description), ``applies(relpath)`` and ``check_file(path, text, tree)``.
+CHECKERS = {
+    "locks": locks,
+    "determinism": determinism,
+    "atomicity": atomicity,
+    "shapes": shapes,
+    "docstrings": docstrings,
+}

@@ -1,0 +1,178 @@
+"""GH3xx — staged-write atomicity checker.
+
+Checkpoint and manifest writers must follow the staged protocol (PR 6,
+DESIGN.md §12): write into a ``*.tmp`` / pid-suffixed staging path,
+flush + ``os.fsync`` the staged bytes, then publish with the atomic
+``os.replace`` — a crash at any point leaves either the old file or the
+new one, never a torn mix.  This checker patrols the modules that own
+durable state (``TARGET_SUFFIXES``):
+
+  GH301  bare write to a non-staged path: ``open(p, "w"/"wb"/"a")``,
+         ``np.save``/``np.savez``, ``shutil.copy*`` or ``os.link`` whose
+         destination expression mentions no staging name (``tmp``).
+         Writes routed through a parameter path the caller stages carry
+         a ``# lint: allow(GH301): why`` justification instead.
+  GH302  ``os.replace`` publish in a function that staged bytes with
+         ``open(...)`` but never ``os.fsync``-ed them — after a crash
+         the *rename* may survive while the data didn't hit the platter,
+         which is exactly the torn state the protocol exists to prevent.
+
+The tmp-ness test is syntactic (the path expression's source contains a
+name with ``tmp`` in it), which matches the repo convention: staging
+paths are always built as ``path + ".tmp"`` / ``step_N.tmp.<pid>``.
+"""
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, suffix_match
+
+CODES = {
+    "GH301": "non-staged write on a durable path (no tmp staging)",
+    "GH302": "os.replace publish without fsync of the staged bytes",
+}
+
+#: modules that own durable state (checkpoints, manifests, spill files,
+#: tile stores)
+TARGET_SUFFIXES = (
+    "src/repro/core/checkpoint.py",
+    "src/repro/train/checkpoint.py",
+    "src/repro/core/vstate.py",
+    "src/repro/graphio/formats.py",
+)
+
+_WRITE_MODES = ("w", "wb", "a", "ab", "w+", "wb+", "x", "xb")
+_COPY_FUNCS = {("shutil", "copy"), ("shutil", "copy2"),
+               ("shutil", "copyfile"), ("os", "link"), ("os", "symlink")}
+_NP_SAVERS = {("np", "save"), ("np", "savez"), ("np", "savez_compressed"),
+              ("numpy", "save"), ("numpy", "savez"),
+              ("numpy", "savez_compressed")}
+
+
+def applies(relpath: str) -> bool:
+    return suffix_match(relpath, TARGET_SUFFIXES)
+
+
+def _dotted(func: ast.AST) -> tuple[str, ...]:
+    parts: list[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _mentions_tmp(node: ast.AST) -> bool:
+    """True when the path expression's source names a staging path —
+    a ``tmp`` identifier/attribute or a string containing ``tmp``/``.bak``."""
+    src = ast.unparse(node).lower()
+    return "tmp" in src or ".bak" in src
+
+
+def _open_write(node: ast.Call) -> ast.AST | None:
+    """The path argument of a write-mode ``open(...)`` call, else None."""
+    if _dotted(node.func) != ("open",) or not node.args:
+        return None
+    mode = None
+    if len(node.args) >= 2 and isinstance(node.args[1], ast.Constant):
+        mode = node.args[1].value
+    for kw in node.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            mode = kw.value.value
+    if isinstance(mode, str) and any(m in mode for m in ("w", "a", "x", "+")):
+        return node.args[0]
+    return None
+
+
+def check_file(path: str, text: str, tree: ast.AST) -> list[Finding]:
+    """Run the atomicity checker over one parsed module."""
+    findings: list[Finding] = []
+
+    functions = [n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in functions:
+        # own statements only — nested defs are scanned as their own fn
+        nested_lines: set[int] = set()
+        for sub in ast.walk(fn):
+            if sub is not fn and isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for inner in ast.walk(sub):
+                    if hasattr(inner, "lineno"):
+                        nested_lines.add(inner.lineno)
+
+        # handles bound by ``with open(<tmp path>, ...) as f`` — writing
+        # through them (np.savez(f, ...)) IS the staged idiom
+        staged_handles: set[str] = set()
+        for node in ast.walk(fn):
+            if getattr(node, "lineno", None) in nested_lines:
+                continue
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    ctx = item.context_expr
+                    if (isinstance(ctx, ast.Call)
+                            and _dotted(ctx.func) == ("open",)
+                            and ctx.args and _mentions_tmp(ctx.args[0])
+                            and isinstance(item.optional_vars, ast.Name)):
+                        staged_handles.add(item.optional_vars.id)
+            # in-memory buffers are not durable writes either
+            elif isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                vd = _dotted(node.value.func)
+                if vd and vd[-1] in ("BytesIO", "StringIO"):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            staged_handles.add(t.id)
+
+        opened_nontmp: list[tuple[int, str]] = []
+        staged_open = False
+        has_fsync = False
+        replaces: list[int] = []
+        for node in ast.walk(fn):
+            if getattr(node, "lineno", None) in nested_lines:
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            path_arg = _open_write(node)
+            if path_arg is not None:
+                if _mentions_tmp(path_arg):
+                    staged_open = True
+                else:
+                    opened_nontmp.append(
+                        (node.lineno,
+                         f"open({ast.unparse(path_arg)}, write mode)"))
+            elif d in _NP_SAVERS and node.args:
+                if isinstance(node.args[0], ast.Name) \
+                        and node.args[0].id in staged_handles:
+                    pass          # memory buffer / staged handle
+                elif not _mentions_tmp(node.args[0]):
+                    opened_nontmp.append(
+                        (node.lineno, f"{'.'.join(d)}(...)"))
+                else:
+                    staged_open = True
+            elif d in _COPY_FUNCS and len(node.args) >= 2:
+                if not _mentions_tmp(node.args[1]):
+                    opened_nontmp.append(
+                        (node.lineno,
+                         f"{'.'.join(d)}(dst={ast.unparse(node.args[1])})"))
+            elif d == ("os", "fsync"):
+                has_fsync = True
+            elif d == ("os", "replace") or d == ("os", "rename"):
+                replaces.append(node.lineno)
+
+        for line, what in opened_nontmp:
+            findings.append(Finding(
+                path, line, "GH301",
+                f"{what} writes a durable path without tmp staging — "
+                f"stage to *.tmp, fsync, then os.replace"))
+        if replaces and staged_open and not has_fsync:
+            for line in replaces:
+                findings.append(Finding(
+                    path, line, "GH302",
+                    "publish via os.replace but the staged bytes were "
+                    "never fsync-ed — a crash can persist the rename "
+                    "without the data"))
+    return findings

@@ -1,0 +1,154 @@
+"""Shared machinery for the repro-lint checkers: findings, suppression
+comments, and file walking.
+
+A finding is one ``path:line CODE message`` record.  Suppressions are
+inline comments of the form::
+
+    # lint: allow(GH205): inbox is filled in rank order at construction
+
+and may sit on the finding's own line (trailing comment) or on the line
+directly above it.  The justification after the colon is mandatory — an
+allow without one is itself a finding (GH001), so every suppressed site
+carries its reviewable reason in the source.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+#: suppression-mechanism findings (emitted here, not by a checker)
+CODES = {
+    "GH001": "lint: allow(...) without a written justification",
+    "GH002": "unused suppression — no finding matches this allow",
+}
+
+_ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\(\s*([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)\s*\)"
+    r"(?::\s*(\S.*))?")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One analyzer finding, renderable as ``path:line code message``."""
+
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} {self.code} {self.message}"
+
+
+@dataclasses.dataclass
+class Allow:
+    """One parsed ``# lint: allow(...)`` comment."""
+
+    line: int
+    codes: tuple[str, ...]
+    reason: str
+    used: bool = False
+
+
+class Suppressions:
+    """Per-file suppression table.
+
+    ``filter(findings)`` drops findings allowed at their line (or the
+    line above) and marks the allow as used; ``problems()`` yields GH001
+    findings for justification-less allows, and — when asked — GH002 for
+    allows that matched nothing (stale suppressions rot fast; CI keeps
+    them honest).
+    """
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.allows: list[Allow] = []
+        for lineno, raw in enumerate(text.splitlines(), start=1):
+            m = _ALLOW_RE.search(raw)
+            if m:
+                codes = tuple(c.strip() for c in m.group(1).split(","))
+                self.allows.append(
+                    Allow(line=lineno, codes=codes,
+                          reason=(m.group(2) or "").strip()))
+
+    def _match(self, finding: Finding) -> Allow | None:
+        for a in self.allows:
+            if finding.code in a.codes and a.line in (finding.line,
+                                                      finding.line - 1):
+                return a
+        return None
+
+    def filter(self, findings: list[Finding]) -> tuple[list[Finding], int]:
+        """(kept findings, count suppressed); marks matching allows used."""
+        kept: list[Finding] = []
+        suppressed = 0
+        for f in findings:
+            a = self._match(f)
+            if a is None:
+                kept.append(f)
+            else:
+                a.used = True
+                suppressed += 1
+        return kept, suppressed
+
+    def problems(self, report_unused: bool) -> list[Finding]:
+        out = []
+        for a in self.allows:
+            if not a.reason:
+                out.append(Finding(self.path, a.line, "GH001",
+                                   "suppression needs a justification: "
+                                   "# lint: allow(CODE): <why this is safe>"))
+            elif report_unused and not a.used:
+                out.append(Finding(self.path, a.line, "GH002",
+                                   f"unused suppression for "
+                                   f"{', '.join(a.codes)} — remove it"))
+        return out
+
+
+def load_source(path: str) -> tuple[str, ast.AST]:
+    """(text, parsed tree) for one file; SyntaxError propagates."""
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    return text, ast.parse(text, filename=path)
+
+
+def iter_py_files(paths: list[str]) -> list[str]:
+    """Expand files/directories into a sorted list of ``*.py`` files."""
+    out: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, _dirs, files in os.walk(p):
+                for fn in files:
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+        elif p.endswith(".py"):
+            out.append(p)
+    return sorted(set(out))
+
+
+def norm_relpath(path: str) -> str:
+    """Forward-slash path for target matching, relative to the repo root
+    when the file sits under one (otherwise as given)."""
+    rel = os.path.normpath(path).replace(os.sep, "/")
+    if "src/repro/" in rel:
+        rel = "src/repro/" + rel.split("src/repro/", 1)[1]
+    return rel
+
+
+def suffix_match(relpath: str, suffixes: tuple[str, ...]) -> bool:
+    """True when ``relpath`` ends with (or sits under) one of the target
+    suffixes — ``"src/repro/core/"`` matches the whole package,
+    ``"src/repro/core/comm.py"`` one module."""
+    for s in suffixes:
+        if s.endswith("/"):
+            if s in relpath + "/" or relpath.startswith(s):
+                return True
+        elif relpath.endswith(s):
+            return True
+    return False
+
+
+def is_public(name: str) -> bool:
+    return not name.startswith("_")

@@ -1,0 +1,232 @@
+"""GH2xx — cross-rank determinism lint.
+
+The cluster exchange merges every rank's update set in rank order and
+asserts bit-identity against the single-process engine, so any code that
+produces frames, plans, assignments or checkpoints must be a pure
+function of its inputs — no hash-order iteration, no directory-listing
+order, no wall-clock or RNG leaks.  This checker patrols the modules on
+that critical path (``TARGET_SUFFIXES``) for the syntactic hazards:
+
+  GH201  iteration over a ``set``/``frozenset`` (hash order)
+  GH202  ``os.listdir``/``os.scandir``/``glob`` result used unsorted
+  GH203  ``time.time``/``datetime.now``/``random``/``np.random`` call
+         (``time.monotonic``/``perf_counter`` are fine: measurements ride
+         the fixed-width exchange envelope, never the frame body)
+  GH204  ``sum()`` over an unordered collection (float accumulation
+         order changes the bits)
+  GH205  iteration over dict views (``.values()``/``.items()``/
+         ``.keys()``) — insertion order must be *proven* deterministic
+         across ranks (e.g. built in rank order), or sorted
+
+Wrapping the iterable in ``sorted(...)`` clears GH201/GH202/GH205.
+Sites whose order is provably rank-deterministic or folded commutatively
+carry a ``# lint: allow(GH20x): why`` justification instead.
+"""
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, suffix_match
+
+CODES = {
+    "GH201": "iteration over a set (hash order is not cross-rank stable)",
+    "GH202": "unsorted os.listdir/glob result",
+    "GH203": "wall-clock or RNG call in deterministic-path code",
+    "GH204": "sum() over an unordered collection",
+    "GH205": "dict-view iteration without sorted() or a determinism proof",
+}
+
+#: the bit-identity-critical modules (frames, plans, merges, manifests)
+TARGET_SUFFIXES = (
+    "src/repro/core/comm.py",
+    "src/repro/core/transport.py",
+    "src/repro/core/distributed.py",
+    "src/repro/runtime/scheduler.py",
+    "src/repro/runtime/elastic.py",
+    "src/repro/core/checkpoint.py",
+)
+
+_LISTING_CALLS = {("os", "listdir"), ("os", "scandir"), ("glob", "glob"),
+                  ("glob", "iglob")}
+_CLOCK_RNG = {("time", "time"), ("datetime", "now"), ("datetime", "utcnow")}
+_DICT_VIEWS = {"values", "items", "keys"}
+
+
+def applies(relpath: str) -> bool:
+    return suffix_match(relpath, TARGET_SUFFIXES)
+
+
+def _dotted(func: ast.AST) -> tuple[str, ...]:
+    """('os', 'listdir') for ``os.listdir``; () when not a plain dotted name."""
+    parts: list[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+class _SetTracker(ast.NodeVisitor):
+    """Per-function names bound to set-typed expressions (one level of
+    local inference: ``s = set()``, ``s: set[int] = ...``, set literals
+    and comprehensions)."""
+
+    def __init__(self):
+        self.set_names: set[str] = set()
+
+    @staticmethod
+    def _is_set_expr(node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            return d in (("set",), ("frozenset",))
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._is_set_expr(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.set_names.add(t.id)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        ann = ast.unparse(node.annotation) if node.annotation else ""
+        if (isinstance(node.target, ast.Name)
+                and (ann.startswith("set") or ann.startswith("frozenset")
+                     or (node.value is not None
+                         and self._is_set_expr(node.value)))):
+            self.set_names.add(node.target.id)
+        self.generic_visit(node)
+
+
+def _strip_neutralizers(node: ast.AST) -> ast.AST:
+    """Peel ``list(...)``/``tuple(...)``/``enumerate(...)``/``reversed(...)``
+    wrappers — they preserve the inner order.  ``sorted(...)`` is NOT
+    peeled: it fixes the order, so the subtree below it is safe."""
+    while (isinstance(node, ast.Call)
+           and _dotted(node.func) in (("list",), ("tuple",), ("enumerate",),
+                                      ("reversed",), ("iter",))
+           and node.args):
+        node = node.args[0]
+    return node
+
+
+def _under_sorted(node: ast.AST, parents: dict) -> bool:
+    cur = parents.get(id(node))
+    while cur is not None:
+        if isinstance(cur, ast.Call) and _dotted(cur.func) in (
+                ("sorted",), ("min",), ("max",), ("len",), ("any",), ("all",),
+                ("sum",), ("set",), ("frozenset",)):
+            return True
+        cur = parents.get(id(cur))
+    return False
+
+
+def check_file(path: str, text: str, tree: ast.AST) -> list[Finding]:
+    """Run the determinism lint over one parsed module."""
+    findings: list[Finding] = []
+    parents: dict[int, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[id(child)] = node
+
+    # set-name inference per enclosing function
+    set_names: set[str] = set()
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        tracker = _SetTracker()
+        tracker.visit(fn)
+        set_names |= tracker.set_names
+
+    def _flag_iter_expr(iter_node: ast.AST) -> None:
+        """Flag hazards in one iteration source expression."""
+        base = _strip_neutralizers(iter_node)
+        candidates = [base]
+        if isinstance(base, ast.Tuple):          # (*a.values(), *b.values())
+            candidates = [_strip_neutralizers(
+                e.value if isinstance(e, ast.Starred) else e)
+                for e in base.elts]
+        for cand in candidates:
+            if _under_sorted(cand, parents):
+                continue   # sorted()/len()/membership fixes or ignores order
+            if isinstance(cand, (ast.Set, ast.SetComp)):
+                findings.append(Finding(
+                    path, cand.lineno, "GH201",
+                    "iterating a set — hash order is not deterministic "
+                    "across ranks/runs; sort it"))
+            elif isinstance(cand, ast.Call):
+                d = _dotted(cand.func)
+                if d in (("set",), ("frozenset",)):
+                    findings.append(Finding(
+                        path, cand.lineno, "GH201",
+                        "iterating a set — sort it"))
+                elif len(d) >= 2 and (d[-2], d[-1]) in _LISTING_CALLS:
+                    findings.append(Finding(
+                        path, cand.lineno, "GH202",
+                        f"{'.'.join(d)}() order is filesystem-dependent — "
+                        f"wrap in sorted()"))
+                elif (isinstance(cand.func, ast.Attribute)
+                      and cand.func.attr in _DICT_VIEWS
+                      and not cand.args):
+                    findings.append(Finding(
+                        path, cand.lineno, "GH205",
+                        f".{cand.func.attr}() iteration follows insertion "
+                        f"order — prove it rank-deterministic or sort"))
+            elif isinstance(cand, ast.Name) and cand.id in set_names:
+                findings.append(Finding(
+                    path, cand.lineno, "GH201",
+                    f"iterating set {cand.id!r} — hash order is not "
+                    f"deterministic across ranks/runs; sort it"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            _flag_iter_expr(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                _flag_iter_expr(gen.iter)
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if len(d) >= 2 and (d[-2], d[-1]) in _CLOCK_RNG:
+                findings.append(Finding(
+                    path, node.lineno, "GH203",
+                    f"{'.'.join(d)}() in deterministic-path code — "
+                    f"measurements belong in the exchange envelope"))
+            elif d[:1] == ("random",) or d[:2] == ("np", "random") \
+                    or d[:2] == ("numpy", "random"):
+                findings.append(Finding(
+                    path, node.lineno, "GH203",
+                    f"{'.'.join(d)}() RNG call in deterministic-path code"))
+            elif d == ("sum",) and node.args:
+                arg = node.args[0]
+                unordered = isinstance(arg, (ast.Set, ast.SetComp))
+                if isinstance(arg, ast.Call):
+                    ad = _dotted(arg.func)
+                    unordered = (ad in (("set",), ("frozenset",))
+                                 or (isinstance(arg.func, ast.Attribute)
+                                     and arg.func.attr in _DICT_VIEWS
+                                     and not arg.args))
+                if isinstance(arg, ast.GeneratorExp):
+                    src = _strip_neutralizers(arg.generators[0].iter)
+                    unordered = (
+                        isinstance(src, (ast.Set, ast.SetComp))
+                        or (isinstance(src, ast.Call)
+                            and (_dotted(src.func) in (("set",),
+                                                       ("frozenset",))
+                                 or (isinstance(src.func, ast.Attribute)
+                                     and src.func.attr in _DICT_VIEWS
+                                     and not src.args)))
+                        or (isinstance(src, ast.Name)
+                            and src.id in set_names))
+                if isinstance(arg, ast.Name) and arg.id in set_names:
+                    unordered = True
+                if unordered:
+                    findings.append(Finding(
+                        path, node.lineno, "GH204",
+                        "sum() over an unordered collection — float "
+                        "accumulation order changes the bits; sort first"))
+    return findings

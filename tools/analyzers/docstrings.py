@@ -1,0 +1,62 @@
+"""GH5xx — public-API docstring checker (pydocstyle-lite).
+
+The fifth checker: every public module, class, function, and method in
+the enforced packages must carry a docstring — that is where the repo
+documents array shapes (``[V, Q]``), units (bytes vs elements), and
+thread-safety (docs/ARCHITECTURE.md).  Ported from the original
+``tools/check_docstrings.py`` (which now delegates here) and widened
+from ``core/`` + ``graphio/`` to ``kernels/`` and ``serve/`` as well.
+
+  GH501  public API without a docstring
+
+Private names, nested defs, and methods of private classes are
+implementation detail and are not checked.
+"""
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, is_public, suffix_match
+
+CODES = {
+    "GH501": "public API without a docstring",
+}
+
+TARGET_SUFFIXES = (
+    "src/repro/core/",
+    "src/repro/graphio/",
+    "src/repro/kernels/",
+    "src/repro/serve/",
+)
+
+
+def applies(relpath: str) -> bool:
+    return suffix_match(relpath, TARGET_SUFFIXES)
+
+
+def check_file(path: str, text: str, tree: ast.AST) -> list[Finding]:
+    """Run the docstring checker over one parsed module."""
+    findings: list[Finding] = []
+    if ast.get_docstring(tree) is None:
+        findings.append(Finding(path, 1, "GH501", "module docstring missing"))
+
+    def walk(node: ast.AST, scope: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                name = child.name
+                qual = f"{scope}{name}"
+                is_cls = isinstance(child, ast.ClassDef)
+                if is_public(name) and ast.get_docstring(child) is None:
+                    kind = "class" if is_cls else "def"
+                    findings.append(Finding(
+                        path, child.lineno, "GH501",
+                        f"{kind} {qual} has no docstring (document shapes/"
+                        f"units/thread-safety — docs/ARCHITECTURE.md)"))
+                # descend into PUBLIC classes for their methods — private
+                # classes and function bodies are implementation detail
+                if is_cls and is_public(name):
+                    walk(child, f"{qual}.")
+
+    walk(tree, "")
+    return findings

@@ -1,0 +1,293 @@
+"""GH1xx — lock-discipline race checker.
+
+Classes opt in by declaring which attributes their lock(s) guard::
+
+    class EdgeCache:
+        _guarded_by = {"_entries": "_lock", "stats": ("_lock",)}
+
+Values are a lock attribute name or a tuple of acceptable ones (for
+aliased locks, e.g. a ``threading.Condition(self._lock)`` that acquires
+the same underlying lock).  The checker then proves, per method, that
+every read/write of a guarded attribute happens while one of its locks
+is held:
+
+  * ``with self._lock:`` (and ``with self._locks[key]:``) blocks hold
+    the named lock for their body;
+  * **thread entry points** — public methods, dunders, methods passed as
+    callbacks (``Thread(target=self._m)``, ``pool.submit(self._m)``),
+    functions nested inside methods (prefetch workers, background-timer
+    bodies), and private methods never called inside the class — are
+    assumed to run with NO lock held;
+  * private helpers called only from locked contexts inherit the
+    intersection of the locks guaranteed at every call site (a fixpoint
+    over the intra-class call graph), so ``_insert_locked``-style
+    caller-holds-lock helpers need no annotation;
+  * ``__init__`` / ``__post_init__`` — and private helpers reachable
+    *only* from them — are exempt: the object is not yet shared.
+
+Codes:
+  GH101  guarded attribute accessed without holding its lock
+  GH102  ``_guarded_by`` names an attribute the class never uses
+  GH103  ``_guarded_by`` must be a literal dict of str -> str | tuple
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .common import Finding
+
+CODES = {
+    "GH101": "guarded attribute accessed without its lock",
+    "GH102": "_guarded_by entry never accessed in the class",
+    "GH103": "malformed _guarded_by declaration",
+}
+
+#: no target filter — any file may declare _guarded_by; files without a
+#: declaration produce no work and no findings.
+TARGET_SUFFIXES: tuple[str, ...] | None = None
+
+EXEMPT_METHODS = ("__init__", "__post_init__")
+
+
+def applies(relpath: str) -> bool:
+    return True
+
+
+@dataclasses.dataclass
+class _Access:
+    attr: str
+    line: int
+    held: frozenset
+
+
+@dataclasses.dataclass
+class _CallSite:
+    callee: str
+    held: frozenset
+
+
+@dataclasses.dataclass
+class _MethodScan:
+    name: str
+    public: bool
+    nested: bool                      # a def nested inside a method body
+    accesses: list = dataclasses.field(default_factory=list)
+    calls: list = dataclasses.field(default_factory=list)
+    #: method names referenced as ``self.m`` outside call position —
+    #: callbacks / thread targets; they may run unlocked at any time
+    callbacks: set = dataclasses.field(default_factory=set)
+
+
+def _parse_guarded_by(cls: ast.ClassDef) -> tuple[dict | None, list[Finding],
+                                                  int]:
+    """Extract the literal ``_guarded_by`` dict; (mapping, findings, line)."""
+    for stmt in cls.body:
+        target = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            target = stmt.targets[0]
+        elif isinstance(stmt, ast.AnnAssign):
+            target = stmt.target
+        if not (isinstance(target, ast.Name)
+                and target.id == "_guarded_by"):
+            continue
+        value = stmt.value
+        line = stmt.lineno
+        bad = [Finding("", line, "GH103",
+                       "_guarded_by must be a literal dict of "
+                       "str -> str | tuple of str")]
+        if not isinstance(value, ast.Dict):
+            return None, bad, line
+        mapping: dict[str, tuple[str, ...]] = {}
+        for k, v in zip(value.keys, value.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                return None, bad, line
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                mapping[k.value] = (v.value,)
+            elif isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    for e in v.elts):
+                mapping[k.value] = tuple(e.value for e in v.elts)
+            else:
+                return None, bad, line
+        return mapping, [], line
+    return None, [], 0
+
+
+def _with_locks(item: ast.withitem, lock_names: frozenset) -> str | None:
+    """Lock attribute acquired by one with-item: ``self._lock`` or
+    ``self._locks[key]`` (a dict of locks counts as one named lock)."""
+    expr = item.context_expr
+    if isinstance(expr, ast.Subscript):
+        expr = expr.value
+    if (isinstance(expr, ast.Attribute)
+            and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"
+            and expr.attr in lock_names):
+        return expr.attr
+    return None
+
+
+def _scan_function(fn, method_names: set, lock_names: frozenset,
+                   guarded: dict, nested_out: list,
+                   nested: bool = False) -> _MethodScan:
+    scan = _MethodScan(name=fn.name, public=not fn.name.startswith("_"),
+                       nested=nested)
+
+    def visit(node: ast.AST, held: frozenset) -> None:
+        if isinstance(node, ast.With):
+            for item in node.items:
+                lk = _with_locks(item, lock_names)
+                if lk is not None:
+                    held = held | {lk}
+                visit(item.context_expr, held)
+                if item.optional_vars is not None:
+                    visit(item.optional_vars, held)
+            for stmt in node.body:
+                visit(stmt, held)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a def nested in a method body: runs later, possibly on
+            # another thread, with no lock held — scan it as its own
+            # zero-guarantee entry point
+            nested_out.append(_scan_function(
+                node, method_names, lock_names, guarded, nested_out,
+                nested=True))
+            return
+        if isinstance(node, ast.Call):
+            func = node.func
+            if (isinstance(func, ast.Attribute)
+                    and isinstance(func.value, ast.Name)
+                    and func.value.id == "self"
+                    and func.attr in method_names):
+                scan.calls.append(_CallSite(callee=func.attr, held=held))
+                # do not record the self.<m> attribute itself as an access
+                for arg in node.args:
+                    visit(arg, held)
+                for kw in node.keywords:
+                    visit(kw.value, held)
+                return
+        if isinstance(node, ast.Attribute):
+            if (isinstance(node.value, ast.Name)
+                    and node.value.id == "self"):
+                if node.attr in guarded:
+                    scan.accesses.append(
+                        _Access(attr=node.attr, line=node.lineno, held=held))
+                elif node.attr in method_names:
+                    scan.callbacks.add(node.attr)
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in fn.body:
+        visit(stmt, frozenset())
+    return scan
+
+
+def _check_class(path: str, cls: ast.ClassDef) -> list[Finding]:
+    guarded, bad, decl_line = _parse_guarded_by(cls)
+    if bad:
+        return [dataclasses.replace(f, path=path) for f in bad]
+    if guarded is None:
+        return []
+    lock_names = frozenset(lk for locks in guarded.values() for lk in locks)
+    all_locks = lock_names
+
+    methods = {stmt.name: stmt for stmt in cls.body
+               if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    method_names = set(methods)
+    nested: list[_MethodScan] = []
+    scans = {name: _scan_function(fn, method_names, lock_names, guarded,
+                                  nested)
+             for name, fn in methods.items()}
+    for extra in nested:
+        # nested defs can shadow; key them uniquely but keep the name for
+        # callback detection (they are entries regardless)
+        scans[f"{extra.name}@{id(extra)}"] = extra
+
+    callbacks = set()
+    for scan in scans.values():
+        callbacks |= scan.callbacks
+
+    called_by: dict[str, list[tuple[str, frozenset]]] = {}
+    for mname, scan in scans.items():
+        for site in scan.calls:
+            called_by.setdefault(site.callee, []).append((mname, site.held))
+
+    # exemption fixpoint: __init__/__post_init__ plus private, non-callback
+    # helpers whose every call site sits in an exempt method
+    exempt = {m for m in scans if m.split("@")[0] in EXEMPT_METHODS}
+    changed = True
+    while changed:
+        changed = False
+        for mname, scan in scans.items():
+            if mname in exempt or scan.public or scan.nested:
+                continue
+            if scan.name in callbacks:
+                continue
+            sites = called_by.get(mname, [])
+            if sites and all(caller in exempt for caller, _ in sites):
+                if mname not in exempt:
+                    exempt.add(mname)
+                    changed = True
+
+    def is_entry(mname: str, scan: _MethodScan) -> bool:
+        if mname in exempt:
+            return False
+        if scan.public or scan.nested or scan.name in callbacks:
+            return True
+        if scan.name.startswith("__") and scan.name.endswith("__"):
+            return True                      # dunders: external callers
+        return not called_by.get(mname)      # private and never called
+
+    # guarantee fixpoint: locks surely held whenever a method runs
+    guaranteed: dict[str, frozenset] = {}
+    for mname, scan in scans.items():
+        if mname in exempt:
+            guaranteed[mname] = all_locks
+        elif is_entry(mname, scan):
+            guaranteed[mname] = frozenset()
+        else:
+            guaranteed[mname] = all_locks
+    changed = True
+    while changed:
+        changed = False
+        for mname, scan in scans.items():
+            if mname in exempt or is_entry(mname, scan):
+                continue
+            avail = all_locks
+            for caller, held in called_by.get(mname, []):
+                avail = avail & (held | guaranteed[caller])
+            if avail != guaranteed[mname]:
+                guaranteed[mname] = avail
+                changed = True
+
+    findings: list[Finding] = []
+    used_attrs = set()
+    for mname, scan in scans.items():
+        for acc in scan.accesses:
+            used_attrs.add(acc.attr)
+            if mname in exempt:
+                continue
+            ok = set(guarded[acc.attr]) & (acc.held | guaranteed[mname])
+            if not ok:
+                locks = " | ".join(guarded[acc.attr])
+                findings.append(Finding(
+                    path, acc.line, "GH101",
+                    f"{cls.name}.{scan.name} touches self.{acc.attr} "
+                    f"without holding {locks}"))
+    for attr in guarded:
+        if attr not in used_attrs:
+            findings.append(Finding(
+                path, decl_line, "GH102",
+                f"_guarded_by declares {attr!r} but {cls.name} never "
+                f"accesses self.{attr}"))
+    return findings
+
+
+def check_file(path: str, text: str, tree: ast.AST) -> list[Finding]:
+    """Run the lock checker over one parsed module."""
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            findings.extend(_check_class(path, node))
+    return findings

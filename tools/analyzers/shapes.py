@@ -1,0 +1,168 @@
+"""GH4xx — docstring shape-contract checker.
+
+docs/ARCHITECTURE.md mandates that public ``core/``/``kernels/`` APIs
+document their array shapes in the bracket grammar the repo uses
+everywhere: ``[V, Q]``, ``[Q, BE]``, ``[K+1]``, ``[V(, Q)]`` (optional
+trailing axis).  This checker parses that grammar out of docstrings and
+enforces:
+
+  GH401  a public function with array-annotated params/returns whose
+         docstring carries no shape token at all
+  GH402  axis-order mismatch between caller and callee: a function
+         documented ``[A, B]`` calls a same-module helper documented
+         ``[B, A]`` with no transpose in sight
+  GH403  an axis name outside the module vocabulary (typo'd grammar)
+
+Axis vocabulary (docs/ARCHITECTURE.md "Shape vocabulary" + kernels):
+V vertices · E edges (edge_cap) · R tile rows (row_cap) · Q query
+columns · Qa active-query columns · Qp padded query columns · U updated
+vertices · K intervals (or gather capacity) · P tiles · N ranks ·
+B generic block · BE/BR edge/row block sizes.  Integer items (``[2]``)
+and ``+/- <int>`` offsets (``[K+1]``) are part of the grammar; tokens
+with any non-grammar item (``[lo, hi)``, ``list[Tile]``) are prose, not
+shapes, and are ignored.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from .common import Finding, is_public, suffix_match
+
+CODES = {
+    "GH401": "public array API documents no shape",
+    "GH402": "caller/callee axis order mismatch without a transpose",
+    "GH403": "unknown axis name in a shape token",
+}
+
+TARGET_SUFFIXES = (
+    "src/repro/core/",
+    "src/repro/kernels/",
+)
+
+VOCAB = {"V", "E", "R", "Q", "U", "K", "P", "N", "B",
+         "BE", "BR", "Qa", "Qp"}
+
+_TOKEN_RE = re.compile(r"\[([^\[\]]{1,40})\]")
+_ITEM_RE = re.compile(r"^([A-Z][A-Za-z]?)(\s*[+-]\s*\d+)?$")
+_TRANSPOSE_RE = re.compile(r"\.T\b|transpose|swapaxes|moveaxis|\.mT\b")
+_ARRAYISH_RE = re.compile(r"ndarray|Array|jnp\.|jax\.")
+
+
+def applies(relpath: str) -> bool:
+    return suffix_match(relpath, TARGET_SUFFIXES)
+
+
+def parse_shape_tokens(doc: str) -> list[tuple[str, ...]]:
+    """Extract every shape token from a docstring as a tuple of axis
+    names; integer items are kept as their digits, offsets stripped
+    (``[K+1]`` -> ``("K",)``).  Non-grammar brackets are skipped."""
+    out: list[tuple[str, ...]] = []
+    for m in _TOKEN_RE.finditer(doc or ""):
+        body = m.group(1).replace("(", "").replace(")", "")
+        items = [it.strip() for it in body.split(",") if it.strip()]
+        if not items:
+            continue
+        axes: list[str] = []
+        for it in items:
+            if it.isdigit():
+                axes.append(it)
+                continue
+            im = _ITEM_RE.match(it)
+            if im is None:
+                axes = []
+                break
+            axes.append(im.group(1))
+        if axes:
+            out.append(tuple(axes))
+    return out
+
+
+def _annotation_is_array(node: ast.AST | None) -> bool:
+    if node is None:
+        return False
+    return bool(_ARRAYISH_RE.search(ast.unparse(node)))
+
+
+def _function_records(tree: ast.AST):
+    """Yield (fn node, qualname, is_public_api) for module functions and
+    methods of public classes (the same surface the docstring checker
+    enforces)."""
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.name, is_public(node.name)
+        elif isinstance(node, ast.ClassDef):
+            for sub in ast.iter_child_nodes(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield (sub, f"{node.name}.{sub.name}",
+                           is_public(node.name) and is_public(sub.name))
+
+
+def check_file(path: str, text: str, tree: ast.AST) -> list[Finding]:
+    """Run the shape-contract checker over one parsed module."""
+    findings: list[Finding] = []
+    #: bare function/method name -> ordered 2-axis pairs it documents
+    declared_pairs: dict[str, set[tuple[str, str]]] = {}
+    records = list(_function_records(tree))
+
+    for fn, qual, public in records:
+        doc = ast.get_docstring(fn)
+        tokens = parse_shape_tokens(doc or "")
+        named = [t for t in tokens
+                 if len(t) == 2 and t[0] in VOCAB and t[1] in VOCAB
+                 and t[0] != t[1]]
+        if named:
+            declared_pairs.setdefault(fn.name, set()).update(
+                (a, b) for a, b in named)
+        for t in tokens:
+            for ax in t:
+                if not ax.isdigit() and ax not in VOCAB:
+                    findings.append(Finding(
+                        path, fn.lineno, "GH403",
+                        f"{qual}: axis {ax!r} is not in the shape "
+                        f"vocabulary ({', '.join(sorted(VOCAB))}) — "
+                        f"typo, or extend the grammar in "
+                        f"tools/analyzers/shapes.py + ARCHITECTURE.md"))
+        if not public:
+            continue
+        args = list(fn.args.posonlyargs) + list(fn.args.args) \
+            + list(fn.args.kwonlyargs)
+        has_array = any(_annotation_is_array(a.annotation) for a in args) \
+            or _annotation_is_array(fn.returns)
+        if has_array and not tokens:
+            findings.append(Finding(
+                path, fn.lineno, "GH401",
+                f"{qual} takes/returns arrays but documents no shape — "
+                f"annotate like [V, Q] (docs/ARCHITECTURE.md)"))
+
+    # caller/callee axis-order cross-check
+    for fn, qual, public in records:
+        mine = declared_pairs.get(fn.name)
+        if not mine:
+            continue
+        src = ast.get_source_segment(text, fn) or ""
+        if _TRANSPOSE_RE.search(src):
+            continue     # transpose evidence present — assume intentional
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = None
+            if isinstance(node.func, ast.Name):
+                callee = node.func.id
+            elif (isinstance(node.func, ast.Attribute)
+                  and isinstance(node.func.value, ast.Name)
+                  and node.func.value.id == "self"):
+                callee = node.func.attr
+            if callee is None or callee == fn.name:
+                continue
+            theirs = declared_pairs.get(callee)
+            if not theirs:
+                continue
+            for a, b in mine:
+                if (b, a) in theirs and (a, b) not in theirs:
+                    findings.append(Finding(
+                        path, node.lineno, "GH402",
+                        f"{qual} documents [{a}, {b}] but calls "
+                        f"{callee} documented [{b}, {a}] with no "
+                        f"transpose — axis order disagrees"))
+    return findings

@@ -4,65 +4,30 @@
 Usage:
     python tools/check_docstrings.py src/repro/core src/repro/graphio
 
-Walks the given directories and reports every public module, class,
-function, and method (names not starting with "_", excluding nested
-defs) that has no docstring.  This enforces the repo convention that
-public ``core/`` and ``graphio/`` APIs document their array shapes
-(``[V,Q]``, ``[Q,BE]``), units (bytes vs elements), and thread-safety
-(docs/ARCHITECTURE.md).  Exit code 1 on any finding.
-
-Deliberately tiny (stdlib ``ast`` only) so it runs anywhere the repo
-runs — the container has no pydocstyle.
+Thin compatibility wrapper over the ``docstrings`` checker of the
+repro-lint suite (``tools/analyze.py --check docstrings``) — the
+checker itself lives in ``tools/analyzers/docstrings.py`` (GH501).
+Kept so existing invocations and muscle memory keep working; new
+tooling should call ``tools/analyze.py`` directly.
 """
 from __future__ import annotations
 
-import ast
 import os
 import sys
 
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-def _is_public(name: str) -> bool:
-    return not name.startswith("_")
-
-
-def _check_file(path: str) -> list[str]:
-    with open(path, encoding="utf-8") as f:
-        tree = ast.parse(f.read(), filename=path)
-    missing: list[str] = []
-    if ast.get_docstring(tree) is None:
-        missing.append(f"{path}:1 module docstring")
-
-    def walk(node: ast.AST, scope: str, top: bool) -> None:
-        for child in ast.iter_child_nodes(node):
-            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
-                                  ast.ClassDef)):
-                name = child.name
-                qual = f"{scope}{name}"
-                is_cls = isinstance(child, ast.ClassDef)
-                if _is_public(name) and ast.get_docstring(child) is None:
-                    kind = "class" if is_cls else "def"
-                    missing.append(f"{path}:{child.lineno} {kind} {qual}")
-                # descend into PUBLIC classes for their methods — private
-                # classes and function bodies are implementation detail
-                if is_cls and _is_public(name):
-                    walk(child, f"{qual}.", top=False)
-
-    walk(tree, "", top=True)
-    return missing
+from analyze import run  # noqa: E402
 
 
 def main(argv: list[str]) -> int:
-    """Scan every ``*.py`` under the given roots; print findings and
+    """Run the GH501 docstring checker over the given roots (defaults
+    to the historical core/ + graphio/ pair); print findings and
     return 1 if any public API is undocumented."""
     roots = argv or ["src/repro/core", "src/repro/graphio"]
-    findings: list[str] = []
-    for root in roots:
-        for dirpath, _dirs, files in os.walk(root):
-            for fn in sorted(files):
-                if fn.endswith(".py"):
-                    findings += _check_file(os.path.join(dirpath, fn))
-    for line in findings:
-        print(line)
+    findings, _suppressed = run(roots, ["docstrings"], all_files=True)
+    for f in findings:
+        print(f"{f.path}:{f.line} {f.code} {f.message}")
     if findings:
         print(f"\n{len(findings)} public APIs without docstrings "
               f"(shapes/units/thread-safety belong there — see "
