@@ -1,0 +1,202 @@
+# HTTP serving benchmark (DESIGN.md §16; beyond the GraphH paper,
+# which is batch-only).
+#
+#   PYTHONPATH=src python -m benchmarks.run --only serve_http [--smoke]
+#
+# Drives the stdlib HTTP frontend (serve/http.py) over a real TCP socket
+# with threaded urllib clients:
+#
+#   latency sweep — mixed PPR + MS-BFS offered at each QPS (0 = closed
+#       loop); reports CLIENT-observed p50/p99 submit-to-result latency
+#       (includes HTTP + polling overhead) next to the server's own
+#       queue/service split, plus result-cache hit counts;
+#   fairness drill — two tenants at 3:1 weights with a 10:1 offered-load
+#       skew against the high-weight tenant; reports the deficit-round-
+#       robin fairness ratio (observed high-weight admission share over
+#       the contended windows / weight-proportional ideal; 1.0 = exact).
+#
+# Results land in bench_serve_http.json (override with
+# BENCH_SERVE_HTTP_OUT) so CI uploads the sweep as an artifact.
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import urllib.request
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, make_store
+
+
+def _out_path() -> str:
+    return os.environ.get("BENCH_SERVE_HTTP_OUT", "bench_serve_http.json")
+
+
+def _save(key: str, payload) -> None:
+    path = _out_path()
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[key] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+
+
+def _post(base: str, body: dict) -> dict:
+    req = urllib.request.Request(
+        base + "/v1/query", data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=60) as r:
+        return json.loads(r.read())
+
+
+def _poll(base: str, rid: int, timeout: float = 600.0) -> dict:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        with urllib.request.urlopen(base + f"/v1/query/{rid}",
+                                    timeout=60) as r:
+            j = json.loads(r.read())
+        if j["status"] in ("done", "timeout", "failed"):
+            return j
+        time.sleep(0.01)
+    raise AssertionError(f"rid {rid} never finished")
+
+
+def _serve(store, **kw):
+    from repro.core.engine import EngineConfig
+    from repro.serve.graph_service import GraphService
+    from repro.serve.http import HttpFrontend
+
+    cfg = EngineConfig(num_servers=2, max_supersteps=200)
+    svc = GraphService(store, cfg, min_fill=1, max_wait_s=0.01,
+                       max_supersteps=200, **kw)
+    fe = HttpFrontend(svc).start()
+    return svc, fe
+
+
+def _drive_http(store, nv, *, qps, requests, seed=0):
+    svc, fe = _serve(store, q_slots=4, result_cache=64)
+    svc.start()
+    base = fe.address
+    rng = np.random.default_rng(seed)
+    apps = ("ppr", "msbfs")
+    lat = [None] * requests
+
+    def client(i, app, s):
+        t0 = time.perf_counter()
+        t = _post(base, dict(app=app, seed=s, tenant=f"t{i % 2}"))
+        _poll(base, t["rid"])
+        lat[i] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    threads = []
+    for i in range(requests):
+        if qps > 0 and i:
+            time.sleep(1.0 / qps)
+        th = threading.Thread(target=client,
+                              args=(i, apps[i % len(apps)],
+                                    int(rng.integers(nv))))
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(600)
+    wall = time.perf_counter() - t0
+    assert all(v is not None for v in lat)
+    snap = svc.stats_snapshot()
+    server = svc.latency_summary()
+    http = fe.counters()
+    svc.request_drain()
+    svc.join(600)
+    fe.close()
+    tot = np.asarray(lat)
+    return dict(
+        offered_qps=qps,
+        requests=requests,
+        wall_seconds=wall,
+        queries_per_sec=requests / wall,
+        client_p50_ms=float(np.percentile(tot, 50) * 1e3),
+        client_p99_ms=float(np.percentile(tot, 99) * 1e3),
+        server_p50_ms=server.get("p50_ms", 0.0),
+        server_p99_ms=server.get("p99_ms", 0.0),
+        mean_queue_ms=server.get("mean_queue_ms", 0.0),
+        mean_service_ms=server.get("mean_service_ms", 0.0),
+        cache_hits=snap["stats"]["cache_hits"],
+        http_requests=http["requests"],
+    )
+
+
+def _fairness_drill(store, nv, *, gold_n, free_n, q_slots=4):
+    """10:1 offered-load skew against the weight-3 tenant: queue the
+    whole skewed backlog over HTTP before the serve loop starts, then
+    audit the admission order against the weight-proportional ideal."""
+    svc, fe = _serve(store, q_slots=q_slots,
+                     tenants={"gold": 3.0, "free": 1.0})
+    base = fe.address
+    rng = np.random.default_rng(1)
+    rids = []
+    for tenant, n in (("gold", gold_n), ("free", free_n)):
+        for _ in range(n):
+            t = _post(base, dict(app="msbfs", seed=int(rng.integers(nv)),
+                                 tenant=tenant))
+            rids.append(t["rid"])
+    svc.start()
+    for rid in rids:
+        assert _poll(base, rid)["status"] == "done"
+    # contended windows: while gold stays backlogged it should land 3 of
+    # every q_slots admissions (weights 3:1)
+    tickets = sorted((svc.get(rid) for rid in rids),
+                     key=lambda t: t.admitted_s)
+    windows = gold_n // 3
+    head = tickets[: windows * q_slots]
+    gold_seen = sum(t.tenant == "gold" for t in head)
+    ratio = gold_seen / (3 * windows)
+    ts = svc.stats_snapshot()["tenants"]
+    svc.request_drain()
+    svc.join(600)
+    fe.close()
+    assert ts["gold"]["done"] == gold_n and ts["free"]["done"] == free_n
+    return dict(
+        gold_offered=gold_n,
+        free_offered=free_n,
+        q_slots=q_slots,
+        contended_windows=windows,
+        gold_admitted_in_windows=gold_seen,
+        fairness_ratio=ratio,
+        tenants=ts,
+    )
+
+
+def bench_serve_http():
+    smoke = common.SMOKE
+    nv, ne = (1_500, 9_000) if smoke else (8_000, 80_000)
+    requests = 6 if smoke else 24
+    qps_sweep = (0.0, 8.0) if smoke else (0.0, 2.0, 8.0)
+    store = make_store(nv, ne, tile_size=1024 if smoke else 4096)
+    rows = []
+    for qps in qps_sweep:
+        r = _drive_http(store, nv, qps=qps, requests=requests)
+        rows.append(r)
+        emit(f"serve_http_qps{qps:g}", r["client_p50_ms"] * 1e3,
+             f"p99={r['client_p99_ms']:.0f}ms "
+             f"qps={r['queries_per_sec']:.2f} "
+             f"server_p50={r['server_p50_ms']:.0f}ms "
+             f"hits={r['cache_hits']}")
+    _save("latency", rows)
+    fair = _fairness_drill(store, nv, gold_n=3 if smoke else 9,
+                           free_n=30 if smoke else 90)
+    # DRR acceptance: within one query per contended window of the
+    # weight-proportional share
+    slack = 1.0 / (3 * fair["contended_windows"])
+    assert abs(fair["fairness_ratio"] - 1.0) <= slack + 1e-9, fair
+    emit("serve_http_fairness", fair["fairness_ratio"] * 1e6,
+         f"gold {fair['gold_admitted_in_windows']}/"
+         f"{3 * fair['contended_windows']} of contended admissions "
+         f"under 10:1 skew")
+    _save("fairness", fair)
+
+
+ALL = [bench_serve_http]

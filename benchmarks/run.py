@@ -8,6 +8,9 @@
 #                    sweep + N-server scaling (JSON artifact)
 #   bench_serve_graph — online graph-query serving: p50/p99 latency +
 #                    queries/sec vs q_slots and offered QPS (JSON artifact)
+#   bench_serve_http — the stdlib HTTP frontend over a real socket:
+#                    client-observed p50/p99 vs offered QPS + the DRR
+#                    fairness ratio under 10:1 tenant skew (JSON artifact)
 #   bench_kernels  — Pallas kernel + GAB superstep throughput
 #   bench_train    — LM train-step throughput (CPU, reduced configs)
 import argparse
@@ -26,12 +29,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cluster, bench_graph, bench_kernels,
-                            bench_serve_graph, bench_train, common)
+                            bench_serve_graph, bench_serve_http,
+                            bench_train, common)
 
     common.SMOKE = args.smoke
 
     fns = (bench_graph.ALL + bench_cluster.ALL + bench_serve_graph.ALL
-           + bench_kernels.ALL + bench_train.ALL)
+           + bench_serve_http.ALL + bench_kernels.ALL + bench_train.ALL)
     if args.only:
         keys = args.only.split(",")
         fns = [f for f in fns if any(k in f.__name__ for k in keys)]

@@ -13,6 +13,7 @@ can hold compressed blobs at any of the paper's four modes.
 """
 from __future__ import annotations
 
+import hashlib
 import io
 import json
 import os
@@ -186,6 +187,27 @@ class TileStore:
     def load_plan(self) -> PartitionPlan:
         """The stage-1 PartitionPlan recorded at preprocessing time."""
         return PartitionPlan.from_dict(self.load_meta()["plan"])
+
+    def fingerprint(self) -> str:
+        """Stable identity of the preprocessed graph, used as a result-cache
+        key component (serve.graph_service).  Hashes meta.json, the degree
+        archive bytes, and the sorted (name, size) tile listing — cheap (tile
+        payloads are not read) and **conservative**: two different graphs
+        never collide (their degree bytes differ), while a byte-level rebuild
+        of the same graph may re-key the cache (npz zip timestamps) — a
+        spurious miss, never a wrong hit."""
+        h = hashlib.sha256()
+        with open(os.path.join(self.root, "meta.json"), "rb") as f:
+            h.update(f.read())
+        deg = os.path.join(self.root, "degrees.npz")
+        if os.path.exists(deg):
+            with open(deg, "rb") as f:
+                h.update(f.read())
+        if os.path.isdir(self.tile_dir):
+            for name in sorted(os.listdir(self.tile_dir)):
+                size = os.stat(os.path.join(self.tile_dir, name)).st_size
+                h.update(f"{name}:{size};".encode())
+        return h.hexdigest()[:16]
 
     def load_interval_plan(self) -> Optional[IntervalPlan]:
         """Interval plan recorded at preprocessing time (DESIGN.md §10), or

@@ -45,15 +45,20 @@ def build_store(args) -> TileStore:
 
 
 def _serve_main(args):
-    """``--serve``: long-lived graph-query service over the tile store
-    (DESIGN.md §13).  A scripted workload of ``--serve-requests`` mixed
-    queries (seeded from ``--seed``) is offered at ``--serve-qps`` (0 =
-    all upfront) from a feeder thread; the serve loop runs in the main
-    thread so SIGTERM drains gracefully (exit 0).  With
-    ``--serve-requests 0`` the service idles until SIGTERM."""
+    """``--serve`` / ``--serve-http``: long-lived graph-query service
+    over the tile store (DESIGN.md §13/§16).  A scripted workload of
+    ``--serve-requests`` mixed queries (seeded from ``--seed``) is
+    offered at ``--serve-qps`` (0 = all upfront) from a feeder thread;
+    the serve loop runs in the main thread so SIGTERM drains gracefully
+    (exit 0).  With ``--serve-requests 0`` — always in HTTP mode — the
+    service idles until SIGTERM.  ``--serve-http`` additionally binds the
+    JSON-over-HTTP frontend (serve/http.py) on ``--host``/``--port`` and
+    keeps it answering ``GET /v1/query/<rid>`` for ``--drain-linger-ms``
+    after the drain so clients can collect in-flight results."""
     import threading
 
-    from repro.serve.graph_service import SERVABLE, GraphService
+    from repro.serve.graph_service import (SERVABLE, GraphService,
+                                           parse_tenants)
 
     apps = [a.strip() for a in args.serve_apps.split(",") if a.strip()]
     bad = [a for a in apps if a not in SERVABLE]
@@ -84,7 +89,23 @@ def _serve_main(args):
         default_deadline_s=(None if args.deadline_ms is None
                             else args.deadline_ms / 1e3),
         max_supersteps=args.supersteps,
-        drain_mode=args.drain_mode, resume=args.resume)
+        drain_mode=args.drain_mode, resume=args.resume,
+        tenants=parse_tenants(args.tenants) if args.tenants else None,
+        result_cache=args.result_cache)
+
+    frontend = None
+    if args.serve_http:
+        from repro.serve.http import HttpFrontend
+
+        fault = None
+        if args.inject:
+            from repro.runtime import faults
+
+            fault = faults.parse_plan(args.inject).injector()
+        frontend = HttpFrontend(svc, host=args.host, port=args.port,
+                                fault=fault).start()
+        print(f"serving http on {frontend.host}:{frontend.port}",
+              flush=True)
 
     def feeder():
         rng = np.random.default_rng(args.seed)
@@ -101,7 +122,7 @@ def _serve_main(args):
             t.wait()
         svc.request_drain()
 
-    if args.serve_requests:
+    if args.serve_requests and not args.serve_http:
         threading.Thread(target=feeder, daemon=True).start()
     print(f"serving {','.join(apps)} on {store.root} "
           f"(q_slots={args.q_slots}, min_fill={args.min_fill}, "
@@ -110,9 +131,14 @@ def _serve_main(args):
     t0 = time.time()
     svc.serve()
     dt = time.time() - t0
+    if frontend is not None:
+        # linger: finished tickets stay pollable while clients collect
+        time.sleep(max(0.0, args.drain_linger_ms) / 1e3)
+        frontend.close()
     s = svc.latency_summary()
     print(f"drained: {svc.stats['done']} done, {svc.stats['timeout']} "
-          f"timeout, {svc.stats['failed']} failed in {dt:.1f}s "
+          f"timeout, {svc.stats['failed']} failed, "
+          f"{svc.stats['refused']} refused in {dt:.1f}s "
           f"({svc.stats['done'] / max(dt, 1e-9):.2f} queries/s, "
           f"{svc.stats['supersteps']} supersteps, "
           f"{svc.stats['sessions_opened']} sessions)")
@@ -121,6 +147,15 @@ def _serve_main(args):
               f"ms (queue {s['mean_queue_ms']:.0f} ms + service "
               f"{s['mean_service_ms']:.0f} ms mean); "
               f"{s['mean_supersteps']:.1f} supersteps/query mean")
+    if svc.cache is not None:
+        c = svc.cache.snapshot()
+        print(f"  result cache: {c['hits']} hits / {c['misses']} misses "
+              f"({c['entries']}/{c['capacity']} entries)")
+    if svc.tenant_stats:
+        parts = ", ".join(
+            f"{t}: {d['admitted']} admitted/{d['submitted']} submitted"
+            for t, d in sorted(svc.tenant_stats.items()))
+        print(f"  tenants: {parts}")
     return svc
 
 
@@ -263,9 +298,33 @@ def main(argv=None):
                     help="serve mode: on SIGTERM, run in-flight queries "
                          "to convergence or checkpoint them for a "
                          "--resume'd service restart")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="serve mode with the JSON-over-HTTP frontend "
+                         "(serve/http.py, DESIGN.md §16): POST /v1/query, "
+                         "GET /v1/query/<rid>, /v1/stats, /healthz; "
+                         "implies --serve and idles until SIGTERM")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="HTTP frontend bind address")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="HTTP frontend port (0 = ephemeral; the bound "
+                         "port is printed as 'serving http on ...')")
+    ap.add_argument("--tenants", default=None, metavar="NAME:W,...",
+                    help="serve mode: tenant weights for deficit-round-"
+                         "robin fair admission, e.g. 'alice:3,bob:1' "
+                         "(unknown tenants serve at weight 1)")
+    ap.add_argument("--result-cache", type=int, default=0,
+                    metavar="ENTRIES",
+                    help="serve mode: exact result-cache capacity keyed "
+                         "by (app, seed, graph fingerprint); repeated "
+                         "seeds return without consuming a [V,Q] slot "
+                         "(0 = off)")
+    ap.add_argument("--drain-linger-ms", type=float, default=500.0,
+                    help="HTTP serve mode: keep GET /v1/query/<rid> "
+                         "answering this long after the drain so "
+                         "clients can collect in-flight results")
     args = ap.parse_args(argv)
 
-    if args.serve:
+    if args.serve or args.serve_http:
         return _serve_main(args)
 
     if args.cluster:

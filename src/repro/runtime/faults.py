@@ -4,9 +4,11 @@ Crash-consistent checkpointing is untestable without a way to crash on
 purpose, at a *named* point, repeatably.  This module provides that:
 
   * a :class:`FaultSpec` names a point — ``site`` (e.g. ``"superstep"``,
-    ``"barrier"``, ``"ckpt.pre_rename"``, ``"transport.send"``), an
-    optional superstep/sequence number, an optional rank — plus what to
-    do there (``kind``);
+    ``"barrier"``, ``"ckpt.pre_rename"``, ``"transport.send"``,
+    ``"http_response"`` — the HTTP frontend's response path, where
+    ``kind=delay`` simulates a slow reply and ``kind=drop`` a reply lost
+    on the wire), an optional superstep/sequence number, an optional
+    rank — plus what to do there (``kind``);
   * a :class:`FaultPlan` is a picklable bundle of specs that rides
     through ``EngineConfig``/``ClusterConfig`` into multiprocessing
     ``spawn`` children, so one plan arms every rank of a cluster;
@@ -28,6 +30,8 @@ Fault kinds:
   ``torn_write`` only via ``write()``: persist the first ``keep_bytes``
                  bytes of the payload, then die per ``then``
   ``drop_frame`` only via ``drop()``: swallow one transport frame
+  ``drop``       alias of ``drop_frame`` for non-frame sites (e.g. an
+                 HTTP response at ``site=http_response``)
 
 Determinism across restarts: a spec with ``once=True`` (the default)
 fires exactly once per *plan*, not per process.  When the plan carries a
@@ -52,7 +56,11 @@ class InjectedFault(RuntimeError):
 
 
 KINDS = ("raise", "kill", "sigkill", "preempt", "delay", "torn_write",
-         "drop_frame")
+         "drop_frame", "drop")
+
+#: the kinds :meth:`FaultInjector.drop` responds to ("drop" is the
+#: spelling for non-frame sites like http_response; same semantics)
+DROP_KINDS = ("drop_frame", "drop")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,7 +163,8 @@ class FaultInjector:
         """Fire any matching non-I/O fault at this point (no-op otherwise).
         ``torn_write``/``drop_frame`` specs never match here — they fire
         through :meth:`write` / :meth:`drop`."""
-        spec = self._match(site, step, exclude=("torn_write", "drop_frame"))
+        spec = self._match(site, step,
+                           exclude=("torn_write",) + DROP_KINDS)
         if spec is not None:
             self._act(spec)
 
@@ -181,9 +190,10 @@ class FaultInjector:
             f"{max(spec.keep_bytes, 0)}/{len(data)} bytes of {path}")
 
     def drop(self, site: str, step: int = -1) -> bool:
-        """True if a ``drop_frame`` spec matches this point — the caller
-        must then swallow the frame instead of sending it."""
-        return self._match(site, step, only=("drop_frame",)) is not None
+        """True if a ``drop_frame``/``drop`` spec matches this point —
+        the caller must then swallow the frame (or response) instead of
+        sending it."""
+        return self._match(site, step, only=DROP_KINDS) is not None
 
     # -- matching ------------------------------------------------------------
     def _match(self, site: str, step: int,
